@@ -1,0 +1,45 @@
+"""Fig. 4 reproduction: sparsity/accuracy trade-off.
+
+Paper claim: an appropriate sparsity gives the best accuracy (~18% better
+than non-sparse); too much or too little hurts. We sweep the Lasso strength
+lambda and report (sparsity, accuracy) pairs.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+import numpy as np
+
+from benchmarks.common import Scale, final_accuracy, run_algorithm1
+
+LAMBDAS = (0.0, 1e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, 30.0)
+
+
+def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
+        eps: float = math.inf) -> dict:
+    scale = scale or Scale()
+    rows = []
+    for lam in LAMBDAS:
+        outs, xs, ys, secs = run_algorithm1(scale, eps=eps, lam=lam)
+        rows.append({
+            "lambda": lam,
+            "sparsity": float(np.asarray(outs.sparsity)[-50:].mean()),
+            "accuracy": final_accuracy(outs),
+            "seconds": secs,
+        })
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig4_sparsity.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    best = max(rows, key=lambda r: r["accuracy"])
+    return {"rows": rows, "best": best,
+            "interior_best": 0.0 < best["sparsity"] < 0.99}
+
+
+if __name__ == "__main__":
+    res = run()
+    for r in res["rows"]:
+        print(f"lam={r['lambda']:7.3f} sparsity={r['sparsity']:.3f} acc={r['accuracy']:.3f}")
+    print("best:", res["best"], "| interior optimum (paper Fig.4):",
+          res["interior_best"])

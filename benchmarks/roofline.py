@@ -1,0 +1,87 @@
+"""Roofline table builder: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (single-pod) and §Dry-run summary."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "16x16", strategy: str = "gossip") -> list[dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(DIR, f"*__{mesh}__{strategy}.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | status | t_compute | t_memory | t_collective | "
+           "dominant | 6ND/HLO | per-dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP ({r['reason'][:40]}…) "
+                         f"| | | | | | |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_per_device") or {}
+        gb = (mem.get("temp", 0) + mem.get("arguments", 0)) / 1e9
+        ratio = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} "
+            f"| **{t['dominant']}** | {ratio:.2f} | {gb:.1f} |"
+            if ratio else
+            f"| {r['arch']} | {r['shape']} | ok | {fmt_s(t['t_compute_s'])} "
+            f"| {fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} "
+            f"| **{t['dominant']}** | n/a | {gb:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def summary(rows: list[dict]) -> dict:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    dom = {}
+    for r in ok:
+        dom[r["roofline"]["dominant"]] = dom.get(r["roofline"]["dominant"], 0) + 1
+    return {
+        "total": len(rows),
+        "ok": len(ok),
+        "skipped": sum(1 for r in rows if r.get("status") == "skipped"),
+        "failed": sum(1 for r in rows if r.get("status") not in ("ok", "skipped")),
+        "dominant_counts": dom,
+    }
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            print(f"[{mesh}] no dry-run records yet")
+            continue
+        print(f"\n===== mesh {mesh} =====")
+        print(table(rows))
+        print(json.dumps(summary(rows)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark entrypoint: one function per paper figure + kernel micro-bench +
+roofline aggregation. Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run            # CI scale (minutes)
+    PYTHONPATH=src python -m benchmarks.run --full     # paper scale (§V)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale (n=10k, m=64, 100k samples)")
+    ap.add_argument("--skip-figs", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import fig2_privacy, fig3_topology, fig4_sparsity, fig5_nodes
+    from benchmarks import kernels_bench, roofline
+    from benchmarks.common import Scale
+
+    scale = Scale.paper() if args.full else None
+    rows: list[tuple[str, float, str]] = []
+
+    if not args.skip_figs:
+        t0 = time.time()
+        r2 = fig2_privacy.run(scale)
+        rows.append(("fig2_privacy_regret", (time.time() - t0) * 1e6,
+                     f"ordering_holds={r2['ordering_holds']};"
+                     + ";".join(f"eps{eps}={v['regret_final']:.0f}"
+                                for eps, v in r2["rows"].items())))
+
+        t0 = time.time()
+        r3 = fig3_topology.run(scale)
+        rows.append(("fig3_topology_invariance", (time.time() - t0) * 1e6,
+                     f"acc_spread={r3['spread']:.3f}"))
+
+        t0 = time.time()
+        r4 = fig4_sparsity.run(scale)
+        rows.append(("fig4_sparsity_sweep", (time.time() - t0) * 1e6,
+                     f"best_lambda={r4['best']['lambda']};best_acc={r4['best']['accuracy']:.3f};"
+                     f"interior={r4['interior_best']}"))
+
+        t0 = time.time()
+        r5 = fig5_nodes.run(scale)
+        rows.append(("fig5_node_count", (time.time() - t0) * 1e6,
+                     f"declines={r5['declines']};"
+                     + ";".join(f"m{r['nodes']}={r['accuracy']:.3f}" for r in r5["rows"])))
+
+    if not args.skip_figs:
+        from benchmarks import ablation_delay, ablation_sparse_methods
+        t0 = time.time()
+        ra = ablation_sparse_methods.run(scale)
+        rows.append(("ablation_sparse_methods", (time.time() - t0) * 1e6,
+                     ";".join(f"{k.split()[0]}={v['accuracy']:.3f}/{v['sparsity']:.2f}"
+                              for k, v in ra.items())))
+        t0 = time.time()
+        rd = ablation_delay.run(scale)
+        rows.append(("ablation_delay", (time.time() - t0) * 1e6,
+                     f"graceful={rd['graceful']};"
+                     + ";".join(f"d{r['delay']}={r['accuracy']:.3f}" for r in rd["rows"])))
+
+    rows += kernels_bench.run_all()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    # roofline table from whatever dry-run records exist
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

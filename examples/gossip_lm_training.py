@@ -1,0 +1,47 @@
+"""Beyond-paper: train a ~100M-parameter transformer with the paper's
+private gossip strategy — the technique as a first-class distribution
+strategy for modern architectures.
+
+    PYTHONPATH=src python examples/gossip_lm_training.py --steps 200
+
+Uses a 4-node gossip ring over a qwen2-style dense LM (~100M params at this
+width) on the synthetic Markov token stream; compares private vs non-private
+vs all-reduce-baseline loss trajectories for the same token budget.
+"""
+import argparse
+import math
+
+import numpy as np
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="minicpm-2b")
+    ap.add_argument("--nodes", type=int, default=4)
+    args = ap.parse_args()
+
+    runs = {
+        "gossip eps=inf": dict(strategy="gossip", eps=math.inf),
+        "gossip eps=1.0": dict(strategy="gossip", eps=1.0),
+        "allreduce adamw": dict(strategy="allreduce"),
+    }
+    results = {}
+    for name, kw in runs.items():
+        print(f"\n=== {name} ===")
+        res = train(args.arch, nodes=args.nodes, steps_n=args.steps,
+                    batch_per_node=2, seq_len=128, lam=1e-5, smoke=True, **kw)
+        ce = [h["ce"] for h in res["history"]]
+        results[name] = ce
+        print(f"  ce: start={np.mean(ce[:5]):.3f} end={np.mean(ce[-5:]):.3f}")
+
+    print("\nsummary (lower is better):")
+    for name, ce in results.items():
+        print(f"  {name:18s} final ce {np.mean(ce[-5:]):.3f}  "
+              f"improvement {np.mean(ce[:5]) - np.mean(ce[-5:]):+.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: the paper's Algorithm 1 in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs private distributed online learning (8 simulated data centers, ring
+gossip, Laplace DP, Lasso sparsity) on a synthetic social-data stream and
+prints the regret/accuracy trajectory — then shows the same algorithm as a
+framework component (GossipDP) doing one distributed round.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.core.regret import cumulative_regret
+from repro.data.social import SocialStream
+
+# --- 1. the paper's simulation -------------------------------------------
+m, n, T = 8, 256, 800
+stream = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.05, seed=0)
+xs, ys = stream.chunk(0, T)
+
+alg = Algorithm1(
+    graph=GossipGraph.make("ring", m),                  # data-center network
+    omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-2),   # OMD + Lasso
+    privacy=PrivacyConfig(eps=1.0, L=1.0, clip_style="coordinate"),  # eps-DP
+    n=n,
+)
+outs = alg.run(jax.random.PRNGKey(0), xs, ys)
+reg = cumulative_regret(outs.w_bar_loss, xs, ys, m)
+
+print("Private distributed online learning (paper Algorithm 1)")
+print(f"  nodes={m} dim={n} rounds={T} eps=1.0 topology=ring")
+for t in (100, 400, T - 1):
+    acc = float(outs.correct[max(0, t - 100): t].mean())
+    print(f"  t={t:4d}: cumulative regret={reg[t]:10.1f}  acc(last100)={acc:.3f}  "
+          f"sparsity={float(outs.sparsity[t]):.3f}")
+
+nonpriv = Algorithm1(graph=alg.graph, omd=alg.omd,
+                     privacy=PrivacyConfig(eps=math.inf, L=1.0), n=n)
+outs_np = nonpriv.run(jax.random.PRNGKey(0), xs, ys)
+print(f"  non-private final acc: {float(outs_np.correct[-100:].mean()):.3f} "
+      f"(privacy cost = {float(outs_np.correct[-100:].mean() - outs.correct[-100:].mean()):.3f})")
+
+# --- 2. the same algorithm as a framework strategy ------------------------
+from repro.core import GossipConfig, GossipDP
+
+gdp = GossipDP(
+    gossip=GossipConfig(topology="ring", nodes=m),
+    omd=OMDConfig(alpha0=0.5, lam=1e-3),
+    privacy=PrivacyConfig(eps=1.0, L=1.0),
+)
+params = {"w": jnp.zeros((m, n))}          # any pytree works — here a linear model
+state = gdp.init(params, jax.random.PRNGKey(1))
+grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, n))}
+state, metrics = gdp.update(state, grads)  # clip -> noise -> gossip -> OMD -> prox
+print("\nGossipDP framework round:", {k: round(float(v), 4) for k, v in metrics.items()})
+print("On a TPU mesh the same update lowers to collective-permute on the ICI "
+      "ring — see repro/launch/dryrun.py")

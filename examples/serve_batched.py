@@ -1,0 +1,24 @@
+"""Batched serving example: prefill + greedy decode across architectures,
+including SSM (O(1) state) and sliding-window archs.
+
+    PYTHONPATH=src python examples/serve_batched.py --archs qwen2-7b rwkv6-3b
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="+",
+                    default=["qwen2-7b", "rwkv6-3b", "mixtral-8x7b"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+    for arch in args.archs:
+        serve(arch, batch=args.batch, prompt_len=16, gen=args.gen,
+              cache_len=64, smoke=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Checkpointing: pytree -> npz shards + msgpack manifest.
+
+Sharding-aware in the sense that arrays are pulled to host with
+jax.device_get (works for fully-addressable shardings; multi-host
+checkpointing on a real cluster would gather per-process shards — noted in
+DESIGN.md as a deployment delta). Keys are flattened tree paths so the
+manifest is stable across jax versions.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[^\w]", "", str(p)) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    # bf16 isn't npz-native: store raw bytes + dtype tag
+    arrays, meta = {}, {}
+    for k, v in flat.items():
+        if v.dtype == np.dtype("bfloat16"):
+            arrays[k] = v.view(np.uint16)
+            meta[k] = "bfloat16"
+        else:
+            arrays[k] = v
+            meta[k] = str(v.dtype)
+    np.savez(path, **arrays)
+    with open(path + ".meta", "wb") as f:
+        f.write(msgpack.packb({"step": step, "dtypes": meta}))
+    return path
+
+
+def restore_checkpoint(directory: str, tree_like: Any, step: int | None = None) -> Any:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with open(path + ".meta", "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(path)
+    flat_keys = list(_flatten(tree_like).keys())
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    out = []
+    import ml_dtypes
+    for key, like in zip(flat_keys, leaves):
+        arr = data[key]
+        if meta["dtypes"][key] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        out.append(arr.reshape(like.shape))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,27 @@
+"""Core library: the paper's contribution (private distributed online learning).
+
+Modules:
+  graph      — communication topologies + doubly-stochastic mixing matrices
+  privacy    — Laplace mechanism, Lemma-1 sensitivity, accountant
+  prox       — L1 / group / elastic-net proximal operators (Lasso step)
+  omd        — online mirror descent local optimizer
+  algorithm1 — faithful m-node simulator of the paper's Algorithm 1
+  gossip     — distributed GossipDP strategy (shardable node-parallel update)
+  regret     — Definition-3 regret measurement + Theorem-2 bound
+"""
+from repro.core.graph import GossipGraph
+from repro.core.omd import OMDConfig, OnlineMirrorDescent
+from repro.core.privacy import PrivacyConfig, PrivacyAccountant
+from repro.core.gossip import GossipConfig, GossipDP
+from repro.core.algorithm1 import Algorithm1
+
+__all__ = [
+    "GossipGraph",
+    "OMDConfig",
+    "OnlineMirrorDescent",
+    "PrivacyConfig",
+    "PrivacyAccountant",
+    "GossipConfig",
+    "GossipDP",
+    "Algorithm1",
+]

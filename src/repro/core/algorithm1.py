@@ -1,0 +1,213 @@
+"""Algorithm 1, faithful simulator (paper §II-D).
+
+Runs m virtual data-center nodes inside one device via vectorized ops:
+theta is an (m, n) matrix, mixing is the dense product A @ theta_tilde,
+so ANY doubly-stochastic A (fixed or time-varying) is supported — this is
+the reference implementation that the distributed shard_map strategy
+(core/gossip.py) is tested against for ring topologies.
+
+The default workload is the paper's: hinge loss f(w,x,y) = [1 - y<w,x>]_+,
+high-dimension sparse data. Everything runs under one lax.scan over rounds,
+so a 100k-round x 64-node x 10k-dim simulation JITs into a single program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prox
+from repro.core.graph import GossipGraph
+from repro.core.omd import OMDConfig
+from repro.core.privacy import PrivacyConfig, sample_laplace
+
+__all__ = ["Algorithm1", "SimState", "RoundOutput", "hinge_loss_and_grad"]
+
+
+def hinge_loss_and_grad(w: jax.Array, x: jax.Array, y: jax.Array):
+    """Paper's loss: f = [1 - y <w,x>]_+ ; subgradient -y x when margin<1.
+
+    Shapes: w (m,n), x (m,n), y (m,) -> loss (m,), grad (m,n).
+    """
+    margin = y * jnp.einsum("mn,mn->m", w, x)
+    loss = jnp.maximum(1.0 - margin, 0.0)
+    active = (margin < 1.0).astype(w.dtype)
+    grad = -(active * y)[:, None] * x
+    return loss, grad
+
+
+class SimState(NamedTuple):
+    theta: jax.Array   # (m, n) dual parameters, one row per node
+    t: jax.Array       # round counter
+    key: jax.Array     # PRNG
+    history: jax.Array | None = None  # (delay+1, m, n) ring of past theta~
+
+
+class RoundOutput(NamedTuple):
+    loss: jax.Array        # (m,) per-node losses this round
+    w_bar_loss: jax.Array  # scalar: loss of the averaged parameter (Def. 3 regret uses it)
+    sparsity: jax.Array    # scalar: zero-fraction of w across nodes
+    correct: jax.Array     # (m,) prediction correctness (sign match)
+
+
+@dataclasses.dataclass
+class Algorithm1:
+    """Private Distributed Online Learning (paper Algorithm 1).
+
+    graph:   mixing topology (Assumption 1).
+    omd:     local online-mirror-descent config (alpha/lambda schedules).
+    privacy: Laplace mechanism config (eps, L, Lemma-1 scaling).
+    loss_and_grad: (w, x, y) -> (loss (m,), grad (m,n)); default hinge.
+    method:  local sparse-online-learning rule. 'omd' is the paper's
+             (mirror descent + Lasso prox). The paper's §I cites two prior
+             families, implemented as comparable baselines:
+             'tg'  — truncated gradient (Langford, Li & Zhang '09, ref [11]):
+                     gossip mixes w itself; w <- shrink(w_mixed - a g, a*lam)
+             'rda' — l1 regularized dual averaging (Xiao '10, ref [12]):
+                     gossip mixes the cumulative gradient G;
+                     w = -(sqrt(t)/gamma) * shrink(G/t, lam)
+    """
+
+    graph: GossipGraph
+    omd: OMDConfig
+    privacy: PrivacyConfig
+    n: int
+    loss_and_grad: Callable = staticmethod(hinge_loss_and_grad)
+    method: str = "omd"
+    rda_gamma: float = 1.0
+    # Communication DELAY in rounds (the paper's stated future work §VI):
+    # neighbors' theta~ arrive `delay` rounds late (own state is current).
+    delay: int = 0
+
+    def __post_init__(self):
+        if self.method not in ("omd", "tg", "rda"):
+            raise ValueError(self.method)
+        if self.delay < 0:
+            raise ValueError("delay must be >= 0")
+
+    def init(self, key: jax.Array) -> SimState:
+        m = self.graph.m
+        hist = (jnp.zeros((self.delay + 1, m, self.n), jnp.float32)
+                if self.delay else None)
+        return SimState(
+            theta=jnp.zeros((m, self.n), jnp.float32),
+            t=jnp.zeros((), jnp.int32),
+            key=key,
+            history=hist,
+        )
+
+    def _primal(self, theta: jax.Array, alpha_t, lam_t, t) -> jax.Array:
+        """State -> prediction weights, per method."""
+        if self.method == "omd":
+            return prox.soft_threshold(theta, lam_t)
+        if self.method == "tg":
+            return theta  # state IS w
+        # rda: theta is the cumulative gradient sum G; w from the RDA rule
+        tf = jnp.maximum(t.astype(jnp.float32), 1.0)
+        gbar = theta / tf
+        return -(jnp.sqrt(tf) / self.rda_gamma) * prox.soft_threshold(gbar, self.omd.lam)
+
+    def _dual_step(self, mixed: jax.Array, grad: jax.Array, alpha_t, lam_t) -> jax.Array:
+        if self.method == "omd":
+            return mixed - alpha_t * grad
+        if self.method == "tg":
+            return prox.soft_threshold(mixed - alpha_t * grad, lam_t)
+        return mixed + grad  # rda accumulates
+
+    # -- one round -----------------------------------------------------------
+    def round(self, state: SimState, batch) -> tuple[SimState, RoundOutput]:
+        """One synchronous round across all m nodes.
+
+        batch: (x, y) with x (m, n), y (m,) — node i sees only row i
+        (disjoint streams => parallel composition, Thm 1).
+        """
+        x, y = batch
+        m = self.graph.m
+        alpha_t = self.omd.alpha()(state.t + 1)
+        lam_t = self.omd.lam_t(alpha_t)
+
+        # Steps 6-7: primal recovery (per method; 'omd' = the paper's Lasso prox).
+        w = self._primal(state.theta, alpha_t, lam_t, state.t + 1)
+
+        # Steps 8-9: predict, receive label, suffer loss.
+        loss, grad = self.loss_and_grad(w, x, y)
+        margin_sign = jnp.sign(jnp.einsum("mn,mn->m", w, x))
+        correct = (margin_sign == y).astype(jnp.float32)
+
+        # Clip to enforce Assumption 2.3 (||g|| <= L) — required for Lemma 1.
+        gnorm = jnp.linalg.norm(grad, axis=1, keepdims=True)
+        grad = grad * jnp.minimum(1.0, self.privacy.L / jnp.maximum(gnorm, 1e-12))
+
+        # Step 11 (previous round's broadcast): add Laplace noise to egress.
+        key, sub = jax.random.split(state.key)
+        scale = self.privacy.scale_for(alpha_t, self.n)
+        delta = sample_laplace(sub, (m, self.n), scale)
+        theta_tilde = state.theta + delta
+
+        # Optional WAN delay: neighbors see theta~ from `delay` rounds ago
+        # (own state stays current). History is a ring buffer.
+        new_history = state.history
+        if self.delay:
+            slot = state.t % (self.delay + 1)
+            new_history = state.history.at[slot].set(theta_tilde)
+            recv_slot = (state.t + 1) % (self.delay + 1)  # oldest = t - delay
+            theta_recv = jnp.where(state.t >= self.delay,
+                                   state.history[recv_slot], theta_tilde)
+        else:
+            theta_recv = theta_tilde
+
+        # Step 10: gossip mixing with doubly-stochastic A(t), minus grad step.
+        mats = jnp.stack([jnp.asarray(A) for A in self.graph.matrices])
+        A = mats[state.t % len(self.graph.matrices)]
+        diag = jnp.diag(A)[:, None]
+        if self.delay:
+            # off-diagonal terms use delayed copies; self term is current
+            mixed = (A @ theta_recv) - diag * theta_recv + diag * (
+                theta_tilde if self.privacy.noise_self else state.theta)
+        elif self.privacy.noise_self:
+            mixed = A @ theta_tilde
+        else:
+            mixed = (A @ theta_tilde) - diag * delta  # remove own-noise contribution
+        theta_next = self._dual_step(mixed, grad, alpha_t, lam_t)
+
+        # Definition 3 regret is w.r.t. the average parameter w_bar.
+        w_bar = jnp.mean(w, axis=0, keepdims=True)
+        wb_loss = jnp.mean(
+            jnp.maximum(1.0 - y * jnp.einsum("n,mn->m", w_bar[0], x), 0.0)
+        )
+
+        out = RoundOutput(
+            loss=loss,
+            w_bar_loss=wb_loss,
+            sparsity=prox.sparsity(w),
+            correct=correct,
+        )
+        return SimState(theta=theta_next, t=state.t + 1, key=key,
+                        history=new_history), out
+
+    # -- full horizon via scan ------------------------------------------------
+    def run(self, key: jax.Array, xs: jax.Array, ys: jax.Array) -> RoundOutput:
+        """Run T rounds. xs (T, m, n), ys (T, m). Returns stacked outputs."""
+        state = self.init(key)
+
+        def body(st, batch):
+            st, out = self.round(st, batch)
+            return st, out
+
+        _, outs = jax.lax.scan(body, state, (xs, ys))
+        return outs
+
+    def final_params(self, key: jax.Array, xs: jax.Array, ys: jax.Array):
+        """Like run() but also returns the final primal parameters (m, n)."""
+        state = self.init(key)
+
+        def body(st, batch):
+            st, out = self.round(st, batch)
+            return st, out
+
+        state, outs = jax.lax.scan(body, state, (xs, ys))
+        alpha_T = self.omd.alpha()(state.t)
+        w = self._primal(state.theta, alpha_T, self.omd.lam_t(alpha_T), state.t)
+        return w, outs

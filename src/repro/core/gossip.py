@@ -1,0 +1,185 @@
+"""GossipDP — the paper's Algorithm 1 as a production distribution strategy.
+
+Node-parallel formulation
+-------------------------
+Every parameter leaf carries a leading **node axis** of size ``m`` (the number
+of gossip "data centers"), sharded over a mesh axis ("data" on the single-pod
+mesh; "pod" on the multi-pod mesh, where each pod is one data center and
+within-pod data parallelism is ordinary all-reduce handled by GSPMD).
+
+Gossip mixing is expressed as ``jnp.roll`` along the node axis: under GSPMD,
+a roll of a sharded axis lowers to ``collective-permute`` — the neighbor
+exchange of the paper's communication graph mapped onto the physical ICI
+ring. No all-reduce is issued for theta; this is verifiable in the dry-run
+HLO (see EXPERIMENTS.md §Dry-run) and is exactly the paper's "communicate
+with adjacent data centers only" constraint.
+
+Memory note: node-parallel params cost the same per chip as replicated data
+parallelism (replication redundancy is repurposed as per-node state), but the
+technique precludes ZeRO-style optimizer-state sharding — each node owns its
+theta. Recorded as a finding in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prox
+from repro.core.omd import OMDConfig
+from repro.core.privacy import PrivacyConfig, sample_laplace
+
+__all__ = ["GossipConfig", "GossipState", "GossipDP", "gossip_mix_tree", "per_node_clip"]
+
+DISTRIBUTED_TOPOLOGIES = ("ring", "complete", "disconnected", "ring_alternating")
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    """Distributed gossip knobs.
+
+    topology:    one of DISTRIBUTED_TOPOLOGIES. 'ring' is the TPU-native
+                 default (ICI neighbors). 'complete' degenerates to the
+                 all-reduce average (useful as the "classic DP" baseline with
+                 noise). 'ring_alternating' is the time-varying graph.
+    self_weight: a_ii for the ring ((1-a_ii)/2 per neighbor).
+    nodes:       m — must equal the mesh axis size the node dim is sharded on.
+    """
+
+    topology: str = "ring"
+    self_weight: float = 0.5
+    nodes: int = 16
+
+    def __post_init__(self):
+        if self.topology not in DISTRIBUTED_TOPOLOGIES:
+            raise ValueError(f"topology {self.topology!r} not in {DISTRIBUTED_TOPOLOGIES}")
+
+
+class GossipState(NamedTuple):
+    theta: Any          # pytree; every leaf (m, ...) float32
+    t: jax.Array        # round counter
+    key: jax.Array      # PRNG key for the Laplace mechanism
+
+
+def _leaf_mix(leaf: jax.Array, tilde: jax.Array, cfg: GossipConfig,
+              noise_self: bool, t: jax.Array) -> jax.Array:
+    """Mix one (m, ...) leaf according to the topology.
+
+    ``leaf`` is the clean theta, ``tilde`` the noised broadcast copy. With
+    the faithful ``noise_self=True`` the self-term also uses ``tilde``
+    (Algorithm 1 line 10 sums a_ij * theta~ over ALL j).
+    """
+    self_term = tilde if noise_self else leaf
+    if cfg.topology == "disconnected":
+        return leaf
+    if cfg.topology == "complete":
+        m = cfg.nodes
+        mean_tilde = jnp.mean(tilde, axis=0, keepdims=True)
+        mixed = jnp.broadcast_to(mean_tilde, tilde.shape)
+        if not noise_self:
+            mixed = mixed + (leaf - tilde) / m
+        return mixed
+    if cfg.topology == "ring":
+        sw = cfg.self_weight
+        nw = (1.0 - sw) / 2.0
+        return (
+            sw * self_term
+            + nw * jnp.roll(tilde, 1, axis=0)
+            + nw * jnp.roll(tilde, -1, axis=0)
+        )
+    if cfg.topology == "ring_alternating":
+        # time-varying: even rounds exchange with +1 neighbor, odd with -1;
+        # each round's matrix is a circulant with (1/2, 1/2) — doubly stochastic.
+        fwd = 0.5 * self_term + 0.5 * jnp.roll(tilde, 1, axis=0)
+        bwd = 0.5 * self_term + 0.5 * jnp.roll(tilde, -1, axis=0)
+        return jnp.where((t % 2) == 0, fwd, bwd)
+    raise AssertionError(cfg.topology)
+
+
+def gossip_mix_tree(theta: Any, key: jax.Array, noise_scale: jax.Array,
+                    cfg: GossipConfig, noise_self: bool, t: jax.Array) -> Any:
+    """Noise + mix every leaf. Returns the post-mixing theta pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(theta)
+    keys = jax.random.split(key, len(leaves))
+    mixed = []
+    for k, leaf in zip(keys, leaves):
+        delta = sample_laplace(k, leaf.shape, noise_scale, leaf.dtype)
+        mixed.append(_leaf_mix(leaf, leaf + delta, cfg, noise_self, t))
+    return jax.tree_util.tree_unflatten(treedef, mixed)
+
+
+def per_node_clip(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    """Clip each node's gradient slice (axis 0) to L2 norm <= max_norm.
+
+    Enforces Assumption 2.3 per node. Returns (clipped, (m,) pre-clip norms).
+    """
+    leaves = jax.tree_util.tree_leaves(grads)
+    sq = sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+        for l in leaves
+    )
+    norms = jnp.sqrt(sq)  # (m,)
+    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+
+    def scale(l):
+        f = factor.reshape((-1,) + (1,) * (l.ndim - 1))
+        return (l * f).astype(l.dtype)
+
+    return jax.tree_util.tree_map(scale, grads), norms
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipDP:
+    """The full per-round update: clip -> noise -> gossip-mix -> OMD -> prox.
+
+    Works on node-stacked pytrees; pure function of state so it jits/lowers
+    under any mesh. The training driver computes per-node grads (vmapped
+    model) and calls :meth:`update`.
+    """
+
+    gossip: GossipConfig
+    omd: OMDConfig
+    privacy: PrivacyConfig
+
+    def init(self, node_params: Any, key: jax.Array) -> GossipState:
+        theta = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), node_params)
+        return GossipState(theta=theta, t=jnp.zeros((), jnp.int32), key=key)
+
+    def param_count_per_node(self, theta: Any) -> int:
+        return sum(
+            int(l.size // l.shape[0]) for l in jax.tree_util.tree_leaves(theta)
+        )
+
+    def primal(self, state: GossipState) -> Any:
+        """w_t from theta_t (steps 6-7): identity mirror map + L1 prox."""
+        alpha_t = self.omd.alpha()(state.t + 1)
+        lam_t = self.omd.lam_t(alpha_t)
+        if self.omd.prox_kind == "none":
+            return state.theta
+        return prox.soft_threshold_tree(state.theta, lam_t)
+
+    def update(self, state: GossipState, grads: Any) -> tuple[GossipState, dict]:
+        """Steps 10-11 for every node at once."""
+        alpha_t = self.omd.alpha()(state.t + 1)
+        grads, gnorms = per_node_clip(grads, self.privacy.L)
+
+        n = self.param_count_per_node(state.theta)
+        scale = self.privacy.scale_for(alpha_t, n)
+
+        key, sub = jax.random.split(state.key)
+        mixed = gossip_mix_tree(
+            state.theta, sub, scale, self.gossip, self.privacy.noise_self, state.t
+        )
+        theta_next = jax.tree_util.tree_map(
+            lambda th, g: th - alpha_t * g.astype(th.dtype), mixed, grads
+        )
+        new_state = GossipState(theta=theta_next, t=state.t + 1, key=key)
+        metrics = {
+            "alpha_t": alpha_t,
+            "noise_scale": scale,
+            "grad_norm_mean": jnp.mean(gnorms),
+            "theta_sparsity": prox.sparsity_tree(self.primal(new_state)),
+        }
+        return new_state, metrics

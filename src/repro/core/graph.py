@@ -1,0 +1,251 @@
+"""Communication graphs for gossip learning (paper §II-A).
+
+The paper requires a doubly-stochastic mixing matrix A (Assumption 1):
+  (1) a_ij > 0 on edges, (2) rows and columns sum to 1, (3) positive entries >= eta.
+
+We provide the standard topologies used in the paper's Fig. 3 (topology-invariance
+experiment) plus the TPU-native ring/torus that the distributed ppermute strategy
+uses. Every constructor returns a dense (m, m) float32 matrix satisfying
+Assumption 1; `assert_doubly_stochastic` verifies it.
+
+Time-varying graphs (paper allows A(t)) are modelled as a finite cycle of
+matrices indexed by ``t % len(schedule)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import numpy as np
+
+__all__ = [
+    "ring_matrix",
+    "torus_matrix",
+    "complete_matrix",
+    "hypercube_matrix",
+    "random_regular_matrix",
+    "disconnected_matrix",
+    "metropolis_hastings",
+    "time_varying_schedule",
+    "assert_doubly_stochastic",
+    "spectral_gap",
+    "GossipGraph",
+    "ring_neighbor_weights",
+    "torus_neighbor_weights",
+]
+
+
+def assert_doubly_stochastic(A: np.ndarray, eta: float = 1e-6, atol: float = 1e-6) -> None:
+    """Check the paper's Assumption 1 on a mixing matrix."""
+    A = np.asarray(A)
+    if A.ndim != 2 or A.shape[0] != A.shape[1]:
+        raise ValueError(f"A must be square, got {A.shape}")
+    if np.any(A < -atol):
+        raise ValueError("A has negative entries")
+    rows = A.sum(axis=1)
+    cols = A.sum(axis=0)
+    if not np.allclose(rows, 1.0, atol=atol):
+        raise ValueError(f"rows do not sum to 1: {rows}")
+    if not np.allclose(cols, 1.0, atol=atol):
+        raise ValueError(f"cols do not sum to 1: {cols}")
+    pos = A[A > atol]
+    if pos.size and pos.min() < eta - atol:
+        raise ValueError(f"positive entries below eta={eta}: min={pos.min()}")
+
+
+def ring_matrix(m: int, self_weight: float = 0.5) -> np.ndarray:
+    """Bidirectional ring: each node mixes with its two ring neighbors.
+
+    Doubly stochastic by symmetry. ``self_weight`` in (0, 1); the remainder is
+    split equally between the two neighbors. m == 1 and m == 2 degenerate
+    gracefully.
+    """
+    if m == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    A = np.zeros((m, m), dtype=np.float64)
+    nbr = (1.0 - self_weight) / 2.0
+    for i in range(m):
+        A[i, i] += self_weight
+        A[i, (i - 1) % m] += nbr
+        A[i, (i + 1) % m] += nbr
+    return A.astype(np.float32)
+
+
+def torus_matrix(rows: int, cols: int, self_weight: float = 1.0 / 3.0) -> np.ndarray:
+    """2D torus (the physical TPU ICI topology): 4 neighbors per node."""
+    m = rows * cols
+    if m == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    A = np.zeros((m, m), dtype=np.float64)
+    nbr = (1.0 - self_weight) / 4.0
+
+    def idx(r: int, c: int) -> int:
+        return (r % rows) * cols + (c % cols)
+
+    for r in range(rows):
+        for c in range(cols):
+            i = idx(r, c)
+            A[i, i] += self_weight
+            for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+                A[i, idx(r + dr, c + dc)] += nbr
+    return A.astype(np.float32)
+
+
+def complete_matrix(m: int) -> np.ndarray:
+    """Fully connected: exact consensus every round (upper bound on mixing)."""
+    return np.full((m, m), 1.0 / m, dtype=np.float32)
+
+
+def hypercube_matrix(m: int, self_weight: float = 0.5) -> np.ndarray:
+    """Hypercube graph; m must be a power of two. log2(m) neighbors per node."""
+    d = int(np.log2(m))
+    if 2**d != m:
+        raise ValueError(f"hypercube needs power-of-two m, got {m}")
+    if m == 1:
+        return np.ones((1, 1), dtype=np.float32)
+    A = np.zeros((m, m), dtype=np.float64)
+    nbr = (1.0 - self_weight) / d
+    for i in range(m):
+        A[i, i] = self_weight
+        for b in range(d):
+            A[i, i ^ (1 << b)] = nbr
+    return A.astype(np.float32)
+
+
+def random_regular_matrix(m: int, degree: int = 4, seed: int = 0) -> np.ndarray:
+    """Random regular graph via repeated perfect matchings; Metropolis weights.
+
+    Used for the paper's Fig. 3 'random topology' curve.
+    """
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((m, m), dtype=bool)
+    attempts = 0
+    while adj.sum(axis=1).min() < degree and attempts < 200:
+        perm = rng.permutation(m)
+        for a, b in zip(perm[::2], perm[1::2]):
+            if a != b and not adj[a, b] and adj[a].sum() < degree and adj[b].sum() < degree:
+                adj[a, b] = adj[b, a] = True
+        attempts += 1
+    # Guarantee connectivity by overlaying a ring.
+    for i in range(m):
+        adj[i, (i + 1) % m] = adj[(i + 1) % m, i] = True
+    np.fill_diagonal(adj, False)
+    return metropolis_hastings(adj)
+
+
+def disconnected_matrix(m: int) -> np.ndarray:
+    """Identity = no communication. Baseline for 'local only' ablation."""
+    return np.eye(m, dtype=np.float32)
+
+
+def metropolis_hastings(adj: np.ndarray) -> np.ndarray:
+    """Doubly-stochastic weights from an undirected adjacency matrix.
+
+    a_ij = 1 / (1 + max(deg_i, deg_j)) on edges; diagonal takes the slack.
+    Symmetric + rows sum to 1 => doubly stochastic.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    m = adj.shape[0]
+    deg = adj.sum(axis=1)
+    A = np.zeros((m, m), dtype=np.float64)
+    for i in range(m):
+        for j in range(m):
+            if adj[i, j]:
+                A[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        A[i, i] = 1.0 - A[i].sum()
+    return A.astype(np.float32)
+
+
+def time_varying_schedule(m: int, kind: str = "ring_alternating", seed: int = 0) -> list[np.ndarray]:
+    """A finite cycle of doubly-stochastic matrices, used as A(t % k).
+
+    The paper proves topology (fixed or time-variant) does not change the
+    regret order; Fig. 3 compares them empirically.
+    """
+    if kind == "ring_alternating":
+        # Alternate between even-edge and odd-edge pairwise averaging on a ring.
+        mats = []
+        for parity in (0, 1):
+            A = np.eye(m, dtype=np.float64)
+            for i in range(parity, m - (m % 2 == 1), 2):
+                j = (i + 1) % m
+                if i == j:
+                    continue
+                A[i, i] = A[j, j] = 0.5
+                A[i, j] = A[j, i] = 0.5
+            mats.append(A.astype(np.float32))
+        return mats
+    if kind == "random_matching":
+        rng = np.random.default_rng(seed)
+        mats = []
+        for _ in range(4):
+            A = np.eye(m, dtype=np.float64)
+            perm = rng.permutation(m)
+            for a, b in zip(perm[::2], perm[1::2]):
+                A[a, a] = A[b, b] = 0.5
+                A[a, b] = A[b, a] = 0.5
+            mats.append(A.astype(np.float32))
+        return mats
+    raise ValueError(f"unknown time-varying kind: {kind}")
+
+
+def spectral_gap(A: np.ndarray) -> float:
+    """1 - |lambda_2(A)|: governs gossip mixing speed (consensus rate)."""
+    ev = np.sort(np.abs(np.linalg.eigvals(np.asarray(A, dtype=np.float64))))
+    return float(1.0 - (ev[-2] if len(ev) > 1 else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Neighbor-weight views for the distributed (ppermute) strategy.
+# A ring/torus row of A is fully described by (shift -> weight); the shard_map
+# gossip implementation consumes these instead of the dense matrix.
+# ---------------------------------------------------------------------------
+
+def ring_neighbor_weights(self_weight: float = 0.5) -> dict[int, float]:
+    """Shift->weight map matching :func:`ring_matrix` (shift along the axis)."""
+    nbr = (1.0 - self_weight) / 2.0
+    return {0: self_weight, 1: nbr, -1: nbr}
+
+
+def torus_neighbor_weights(self_weight: float = 1.0 / 3.0) -> dict[tuple[int, int], float]:
+    """(dr, dc)->weight map matching :func:`torus_matrix` on a 2D mesh."""
+    nbr = (1.0 - self_weight) / 4.0
+    return {(0, 0): self_weight, (1, 0): nbr, (-1, 0): nbr, (0, 1): nbr, (0, -1): nbr}
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipGraph:
+    """A (possibly time-varying) communication graph for m gossip nodes."""
+
+    matrices: tuple  # tuple[np.ndarray, ...]; len 1 => fixed topology
+    name: str = "ring"
+
+    def __post_init__(self):
+        for A in self.matrices:
+            assert_doubly_stochastic(A)
+
+    @property
+    def m(self) -> int:
+        return self.matrices[0].shape[0]
+
+    def at(self, t: int) -> np.ndarray:
+        return self.matrices[t % len(self.matrices)]
+
+    @classmethod
+    def make(cls, topology: str, m: int, seed: int = 0, **kw) -> "GossipGraph":
+        builders: dict[str, Callable[..., Sequence[np.ndarray]]] = {
+            "ring": lambda: [ring_matrix(m, **kw)],
+            "complete": lambda: [complete_matrix(m)],
+            "hypercube": lambda: [hypercube_matrix(m, **kw)],
+            "random": lambda: [random_regular_matrix(m, seed=seed, **kw)],
+            "disconnected": lambda: [disconnected_matrix(m)],
+            "time_varying": lambda: time_varying_schedule(m, seed=seed, **kw),
+        }
+        if topology == "torus":
+            rows = kw.pop("rows", int(np.sqrt(m)))
+            if rows * (m // rows) != m:
+                raise ValueError(f"torus needs factorable m, got {m}")
+            return cls(matrices=(torus_matrix(rows, m // rows, **kw),), name="torus")
+        if topology not in builders:
+            raise ValueError(f"unknown topology {topology!r}; options: {sorted(builders)} + torus")
+        return cls(matrices=tuple(builders[topology]()), name=topology)

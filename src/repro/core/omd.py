@@ -1,0 +1,117 @@
+"""Online Mirror Descent with composite L1 term — the paper's local update.
+
+Structured like optax (init/update pair) so it composes with the rest of the
+framework's optimizers: the GossipDP strategy wraps ANY LocalOptimizer whose
+state carries the dual parameter theta, but the paper's instance is this OMD.
+
+Per Algorithm 1 (node-local part, steps 6-10):
+    p_t   = grad phi*(theta_t)            # identity for phi = 1/2||.||^2
+    w_t   = soft_threshold(p_t, lambda_t) # Lasso prox
+    g_t   = grad f_t(w_t)
+    theta_{t+1} = mix(theta~_t) - alpha_t * g_t
+
+The *mixing* lives in core/gossip.py (distributed) / core/algorithm1.py
+(simulator); this module provides the pure local math plus the step-size
+schedules alpha_t, lambda_t = alpha_t * lambda from Theorem 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prox
+
+__all__ = ["OMDConfig", "OMDState", "omd_primal", "omd_dual_step", "alpha_schedule", "OnlineMirrorDescent"]
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def alpha_schedule(kind: str, alpha0: float, T: int | None = None) -> Schedule:
+    """Step-size schedules.
+
+    'theorem2'  : constant alpha = alpha0 / sqrt(T)  — the paper's Theorem 2
+                  choice  alpha_t = ||w||_2 / (2 sqrt((L+lambda) m T L))
+                  folded into alpha0 (caller computes the constant).
+    'sqrt_t'    : alpha_t = alpha0 / sqrt(t)         — anytime variant.
+    'constant'  : alpha_t = alpha0.
+    """
+    if kind == "theorem2":
+        if T is None:
+            raise ValueError("theorem2 schedule needs horizon T")
+        a = alpha0 / math.sqrt(T)
+        return lambda t: jnp.full((), a, jnp.float32)
+    if kind == "sqrt_t":
+        return lambda t: alpha0 / jnp.sqrt(jnp.maximum(t.astype(jnp.float32), 1.0))
+    if kind == "constant":
+        return lambda t: jnp.full((), alpha0, jnp.float32)
+    raise ValueError(f"unknown schedule {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class OMDConfig:
+    """Local-optimizer knobs (paper Theorem 2 defaults)."""
+
+    alpha0: float = 0.1
+    schedule: str = "sqrt_t"
+    lam: float = 0.01          # lambda; lambda_t = alpha_t * lambda (Thm 2)
+    T: int | None = None       # horizon, needed by 'theorem2'
+    prox_kind: str = "l1"      # 'l1' | 'none' | 'group'
+
+    def alpha(self) -> Schedule:
+        return alpha_schedule(self.schedule, self.alpha0, self.T)
+
+    def lam_t(self, alpha_t: jax.Array) -> jax.Array:
+        return alpha_t * self.lam
+
+
+class OMDState(NamedTuple):
+    theta: Any        # dual parameter pytree (same structure as params)
+    t: jax.Array      # round counter (int32 scalar)
+
+
+def omd_primal(theta: Any, lam_t, prox_kind: str = "l1") -> Any:
+    """Steps 6-7: primal recovery w = prox_{lam ||.||_1}(grad phi*(theta))."""
+    p = jax.tree_util.tree_map(prox.l2_mirror_map, theta)
+    if prox_kind == "none":
+        return p
+    if prox_kind == "l1":
+        return prox.soft_threshold_tree(p, lam_t)
+    if prox_kind == "group":
+        return jax.tree_util.tree_map(lambda x: prox.group_soft_threshold(x, lam_t), p)
+    raise ValueError(prox_kind)
+
+
+def omd_dual_step(theta_mixed: Any, grads: Any, alpha_t) -> Any:
+    """Step 10 minus the mixing: theta' = theta_mixed - alpha_t * g."""
+    return jax.tree_util.tree_map(
+        lambda th, g: (th - alpha_t * g.astype(th.dtype)).astype(th.dtype), theta_mixed, grads
+    )
+
+
+class OnlineMirrorDescent:
+    """optax-style wrapper: init(params) -> state; the gossip strategy calls
+    primal()/dual_step() around its own mixing+noise stage."""
+
+    def __init__(self, config: OMDConfig):
+        self.config = config
+        self._alpha = config.alpha()
+
+    def init(self, params: Any) -> OMDState:
+        theta = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), params)
+        return OMDState(theta=theta, t=jnp.zeros((), jnp.int32))
+
+    def alpha_t(self, state: OMDState) -> jax.Array:
+        return self._alpha(state.t + 1)
+
+    def primal(self, state: OMDState) -> Any:
+        a = self.alpha_t(state)
+        return omd_primal(state.theta, self.config.lam_t(a), self.config.prox_kind)
+
+    def dual_step(self, state: OMDState, theta_mixed: Any, grads: Any) -> OMDState:
+        a = self.alpha_t(state)
+        theta = omd_dual_step(theta_mixed, grads, a)
+        return OMDState(theta=theta, t=state.t + 1)

@@ -1,0 +1,5 @@
+"""Data pipeline: synthetic social-data streams + LM token streams."""
+from repro.data.social import SocialStream, make_social_stream
+from repro.data.lm import TokenStream, lm_batches
+
+__all__ = ["SocialStream", "make_social_stream", "TokenStream", "lm_batches"]

@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: causal flash attention (forward), GQA-aware.
+
+The §Roofline analysis shows every attention-bearing (arch x shape) pair is
+memory-bound, dominated by the f32 score/probability tensors round-tripping
+HBM between the two dots of XLA's blockwise attention (fusion cannot keep a
+(qc, kc) block resident across the online-softmax chain). This kernel keeps
+the entire (q_block x k_block) tile in VMEM: HBM traffic collapses to the
+q/k/v reads + o write — the flash-attention bound.
+
+Tiling:
+  grid = (B * H, nq, nk)  — ("parallel", "parallel", "arbitrary")
+  q block   (1, block_q, hd)      VMEM
+  k/v block (1, block_k, hd)      VMEM (kv head = h // group via index_map)
+  scratch: acc (block_q, hd) f32, m/l (block_q,) f32 — persist across the
+  k-loop (the innermost grid dim revisits the same output block).
+
+Causality is enforced per-tile (position mask) and whole tiles in the
+strict upper triangle are skipped with pl.when (no MXU issue).
+Numerics match the pure-JAX oracle: f32 online softmax, bf16 I/O.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, seq_len: int, block_q: int, block_k: int,
+            window: int | None, causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_k
+
+    # tile-level skip: strictly-future k tiles contribute nothing
+    run = True
+    if causal:
+        run = k_start <= q_start + block_q - 1
+
+    @pl.when(run if causal else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0]                               # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        pos_q = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        pos_k = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = pos_k < seq_len
+        if causal:
+            mask &= pos_k <= pos_q
+        if window is not None:
+            mask &= pos_k > pos_q - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_prev * corr + jnp.sum(p, axis=-1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,   # (B, T, H, hd)
+    k: jax.Array,   # (B, S, Kv, hd)
+    v: jax.Array,   # (B, S, Kv, hd)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns o (B, T, H, hd). GQA: kv head = h // (H // Kv)."""
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, max(T, 8))
+    block_k = min(block_k, max(S, 8))
+    pad_t = (-T) % block_q
+    pad_s = (-S) % block_k
+    if pad_t:
+        q = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Tp, Sp = T + pad_t, S + pad_s
+
+    # (B, T, H, hd) -> (B*H, T, hd) head-major blocks
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Tp, hd)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * Kv, Sp, hd)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * Kv, Sp, hd)
+
+    nq = Tp // block_q
+    nk = Sp // block_k
+    grid = (B * H, nq, nk)
+
+    def q_idx(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kv_idx(bh, qi, kj):
+        b = bh // H
+        h = bh % H
+        return (b * Kv + h // g, kj, 0)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, seq_len=S, block_q=block_q, block_k=block_k,
+        window=window, causal=causal)
+
+    o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_idx),
+            pl.BlockSpec((1, block_k, hd), kv_idx),
+            pl.BlockSpec((1, block_k, hd), kv_idx),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_idx),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu_smem((block_q,), jnp.float32),
+            pltpu_smem((block_q,), jnp.float32),
+            pltpu_smem((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=None,
+    )(qh, kh, vh)
+    o = o.reshape(B, H, Tp, hd)[:, :, :T]
+    return jnp.moveaxis(o, 1, 2)
+
+
+def pltpu_smem(shape, dtype):
+    """VMEM scratch allocation (pltpu.VMEM when available, else pl.ANY)."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:
+        return pl.MemorySpace.ANY(shape, dtype)  # pragma: no cover

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: fused hinge loss + subgradient for the paper's workload.
+
+The paper's per-round compute at each data center is a sparse linear model
+over n = 10,000-dim social features:
+
+    margin_b = y_b * <w, x_b>
+    loss_b   = max(1 - margin_b, 0)
+    g        = -(1/B) * sum_b 1[margin_b < 1] * y_b * x_b
+
+Fusing predict + mask + gradient means x is streamed through VMEM exactly
+once (one read feeds both the MXU matvec and the masked rank-1 accumulation)
+instead of twice for separate forward/backward passes — a 2x cut on the
+dominant HBM term (x is (B, n), far larger than w or g).
+
+Tiling: grid over batch blocks; each step holds an (Bb, n) slice of x plus
+w, g (both (n_rows=n/128, 128) views) in VMEM. The margin matvec uses the
+MXU via jnp.dot on the (Bb, n) x (n,) contraction; the gradient update is a
+VPU masked outer-product accumulated across grid steps into the g output
+block (same block every step — sequential TPU grid makes this legal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+DEFAULT_BLOCK_B = 128
+
+
+def _kernel(x_ref, y_ref, w_ref, loss_ref, g_ref, margin_ref):
+    b_idx = pl.program_id(0)
+
+    x = x_ref[...]                      # (Bb, n)
+    y = y_ref[...]                      # (Bb, 1)
+    w = w_ref[...]                      # (1, n)
+    margin = y[:, 0] * jnp.dot(x, w[0, :], preferred_element_type=jnp.float32)  # (Bb,)
+    loss = jnp.maximum(1.0 - margin, 0.0)
+    loss_ref[...] = loss[:, None]
+    margin_ref[...] = margin[:, None]
+
+    coeff = jnp.where(margin < 1.0, -y[:, 0], 0.0)   # (Bb,)
+    # rank-1-ish accumulation: g += coeff^T X   -> (1, n)
+    contrib = jnp.dot(coeff[None, :], x, preferred_element_type=jnp.float32)
+
+    @pl.when(b_idx == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    g_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def hinge_grad(
+    x: jax.Array,  # (B, n) f32 features
+    y: jax.Array,  # (B,) f32 labels in {-1, +1}
+    w: jax.Array,  # (n,) f32 current primal parameter
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    interpret: bool = False,
+):
+    """Returns (loss (B,), grad (n,), margin (B,)); grad is mean over batch."""
+    B, n = x.shape
+    if n % LANE:
+        raise ValueError(f"n must be a multiple of {LANE}, got {n}")
+    block_b = min(block_b, B)
+    while B % block_b:
+        block_b //= 2
+    block_b = max(block_b, 1)
+    grid = (B // block_b,)
+
+    loss, g, margin = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x.astype(jnp.float32), y.astype(jnp.float32)[:, None], w.astype(jnp.float32)[None, :])
+    return loss[:, 0], g[0] / B, margin[:, 0]

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fused PDOMD round update (paper Algorithm 1 steps 6-10).
+
+Fuses, in ONE pass over VMEM-resident parameter blocks:
+
+    theta_mixed = sw * theta_self~ + nw * theta_prev~ + nw * theta_next~
+    theta_new   = theta_mixed - alpha * g
+    w           = sign(theta_new) * max(|theta_new| - lam, 0)     (Lasso prox)
+
+The neighbor copies (theta_prev~/theta_next~, already Laplace-noised at the
+sender per step 11) arrive via collective-permute OUTSIDE the kernel — the
+kernel is the node-local hot loop that the paper executes every round over
+an n = 1e4..1e8 dimensional parameter.
+
+Unfused, this chain is 5 elementwise HLO ops reading/writing HBM 7x
+(3 reads + mix write + sub write + abs/sign/max temporaries); fused it is
+4 reads + 2 writes, a ~2x HBM traffic cut on a purely memory-bound op —
+exactly the kind of win the roofline analysis targets for the memory term.
+
+Tiling: parameters are flattened to (rows, 128) with rows padded to a
+multiple of 8 (f32 VPU tile (8, 128)). Block = (block_rows, 128), grid over
+row blocks; no MXU use — VPU-only elementwise kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+DEFAULT_BLOCK_ROWS = 512  # 512*128*4B = 256 KiB per operand; 6 operands ~ 1.5 MiB VMEM
+
+
+def _kernel(theta_ref, prev_ref, nxt_ref, g_ref, scal_ref, w_ref, theta_out_ref):
+    """scal_ref: (1, 4) f32 in SMEM-like layout: [alpha, lam, self_w, nbr_w]."""
+    alpha = scal_ref[0, 0]
+    lam = scal_ref[0, 1]
+    sw = scal_ref[0, 2]
+    nw = scal_ref[0, 3]
+    mixed = sw * theta_ref[...] + nw * prev_ref[...] + nw * nxt_ref[...]
+    theta_new = mixed - alpha * g_ref[...]
+    theta_out_ref[...] = theta_new
+    w_ref[...] = jnp.sign(theta_new) * jnp.maximum(jnp.abs(theta_new) - lam, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def pdomd_update(
+    theta_self: jax.Array,   # (rows, 128) f32 — own theta~ (noised if noise_self)
+    theta_prev: jax.Array,   # (rows, 128) f32 — left neighbor's theta~
+    theta_next: jax.Array,   # (rows, 128) f32 — right neighbor's theta~
+    grad: jax.Array,         # (rows, 128) f32 — clipped local subgradient
+    alpha: jax.Array,        # scalar f32 — step size alpha_t
+    lam: jax.Array,          # scalar f32 — lambda_t = alpha_t * lambda
+    self_weight: jax.Array,  # scalar f32 — a_ii
+    nbr_weight: jax.Array,   # scalar f32 — a_i,i±1
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+):
+    """Returns (w, theta_new), both (rows, 128) f32."""
+    rows, lanes = theta_self.shape
+    if lanes != LANE:
+        raise ValueError(f"last dim must be {LANE}, got {lanes}")
+    if rows % SUBLANE:
+        raise ValueError(f"rows must be a multiple of {SUBLANE}, got {rows}")
+    block_rows = min(block_rows, rows)
+    if rows % block_rows:
+        # fall back to a divisor block
+        while rows % block_rows:
+            block_rows //= 2
+        block_rows = max(block_rows, SUBLANE)
+
+    scal = jnp.stack([alpha, lam, self_weight, nbr_weight]).astype(jnp.float32).reshape(1, 4)
+    grid = (rows // block_rows,)
+    blk = pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))
+    scal_spec = pl.BlockSpec((1, 4), lambda i: (0, 0))
+
+    w, theta_new = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[blk, blk, blk, blk, scal_spec],
+        out_specs=[blk, blk],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(theta_self.astype(jnp.float32), theta_prev.astype(jnp.float32),
+      theta_next.astype(jnp.float32), grad.astype(jnp.float32), scal)
+    return w, theta_new

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: RWKV6 (Finch) WKV recurrence with data-dependent decay.
+
+The rwkv6-3b train/prefill hot spot: the per-head linear recurrence
+    y_t = r_t^T (S + u ⊙ k_t v_t^T);   S ← diag(w_t) S + k_t v_t^T
+is inherently sequential in t, but CHUNKED: within a chunk of C timesteps
+the contribution of the running state S separates from intra-chunk terms:
+
+    y_t = r_t^T diag(prod w)… S_chunk_start  +  intra-chunk attention-like term
+
+This kernel processes (batch*head) blocks over a grid, keeping S (K x V)
+and a C-step chunk of r/k/v/w in VMEM; HBM traffic = r,k,v,w read once +
+y write once + S carried in VMEM across the sequential chunk axis — vs the
+pure-JAX lax.scan which round-trips S every step at small-op granularity.
+
+Grid: (B*H, T/C) with the chunk axis sequential ("arbitrary"); state scratch
+persists across chunk steps. Validated against kernels/ref.wkv6_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_CHUNK = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr, *,
+            chunk: int, head_k: int, head_v: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0].astype(jnp.float32)   # (C, K)
+    k = k_ref[0].astype(jnp.float32)   # (C, K)
+    v = v_ref[0].astype(jnp.float32)   # (C, V)
+    w = w_ref[0].astype(jnp.float32)   # (C, K) decay logits
+    u = u_ref[0].astype(jnp.float32)   # (1, K) bonus (row vector)
+    decay = jnp.exp(-jnp.exp(w))       # (C, K)
+
+    def step(t, carry):
+        S, y = carry
+        r_t = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)      # (1, K)
+        k_t = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)
+        v_t = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)      # (1, V)
+        d_t = jax.lax.dynamic_slice_in_dim(decay, t, 1, 0)  # (1, K)
+        kv = k_t.T @ v_t                                     # (K, V)
+        y_t = r_t @ (S + u.T * kv)                           # (1, V)
+        S = d_t.T * S + kv
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t, t, 0)
+        return S, y
+
+    S0 = state_scr[...]
+    y0 = jnp.zeros((chunk, head_v), jnp.float32)
+    S, y = jax.lax.fori_loop(0, chunk, step, (S0, y0))
+    state_scr[...] = S
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = False) -> jax.Array:
+    """r,k,w (B, T, H, K); v (B, T, H, V); u (H, K) -> y (B, T, H, V).
+
+    State starts at zero (training/prefill from scratch); the decode path
+    carries state outside the kernel (single-step recurrence).
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        r, k, w = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (r, k, w))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded steps: decay exp(-exp(0)) < 1 fine, k=0 => kv=0, y ignored
+    Tp = T + pad
+
+    # (B,T,H,X) -> (B*H, T, X)
+    def bh(a):
+        return jnp.moveaxis(a, 2, 1).reshape(B * H, Tp, a.shape[-1])
+
+    rb, kb, vb, wb = bh(r), bh(k), bh(v), bh(w)
+    ub = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, 1, K)
+
+    grid = (B * H, Tp // chunk)
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, head_k=K, head_v=V),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda bh_, c: (bh_, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh_, c: (bh_, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda bh_, c: (bh_, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda bh_, c: (bh_, c, 0)),
+            pl.BlockSpec((1, 1, K), lambda bh_, c: (bh_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda bh_, c: (bh_, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, V), r.dtype),
+        scratch_shapes=[_vmem((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, ub)
+    y = y.reshape(B, H, Tp, V)[:, :, :T]
+    return jnp.moveaxis(y, 1, 2)
+
+
+def _vmem(shape, dtype):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, dtype)

@@ -1,0 +1,167 @@
+"""Parse compiled HLO text: collective-op operand bytes + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes but NOT collective traffic; we
+recover it by walking the HLO: build a name->shape table from instruction
+definitions, then sum operand sizes for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Roofline constants (TPU v5e target):
+  peak 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.+)$")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all `dtype[shape]` occurrences in a type string."""
+    total = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in an HLO module text.
+
+    Strategy: each instruction line defines `%name = <type> <op>(...)`;
+    we record each defined name's type-bytes, then for collective lines sum
+    the recorded sizes of their `%operand` references. Fallback to the
+    *result* size when an operand is undefined in our table (e.g. fusion
+    parameters) — result size equals operand size for permute/all-reduce
+    and over-counts all-gather only by the gather factor of that op.
+    """
+    shapes: dict[str, int] = {}
+    bytes_by_kind: dict[str, int] = {}
+    count_by_kind: dict[str, int] = {}
+
+    def _result_type_bytes(rhs: str) -> int:
+        """Bytes of the result type — the leading `dtype[...]` or
+        `(tuple, of, types)` before the opcode."""
+        rhs = rhs.strip()
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        return _shape_bytes(rhs[: i + 1])
+            return _shape_bytes(rhs)
+        return _shape_bytes(rhs.split(" ", 1)[0])
+
+    lines = hlo_text.splitlines()
+    # pass 1: record defined shapes
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        shapes[name.lstrip("%")] = _result_type_bytes(rhs)
+
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        kind = next((c for c in _COLLECTIVES if re.search(rf"\b{c}", rhs)), None)
+        if kind is None:
+            continue
+        # skip the -done halves of async pairs (count once at -start)
+        if re.search(rf"\b{kind}-done", rhs):
+            continue
+        # operand list: text inside the parens right after the opcode
+        op_pos = rhs.find(kind)
+        paren = rhs.find("(", op_pos)
+        operands: list[str] = []
+        if paren != -1:
+            depth = 0
+            for i, ch in enumerate(rhs[paren:], start=paren):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        inner = rhs[paren + 1: i]
+                        for part in inner.split(","):
+                            mm = re.match(r"\s*%?([\w\.\-]+)", part)
+                            if mm:
+                                operands.append(mm.group(1))
+                        break
+        size = sum(shapes.get(o, 0) for o in operands)
+        if size == 0:
+            # fallback: result type size (== operand size for permute/AR)
+            size = _result_type_bytes(rhs)
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + size
+        count_by_kind[kind] = count_by_kind.get(kind, 0) + 1
+    return CollectiveStats(bytes_by_kind, count_by_kind)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   chips: int = 1) -> dict:
+    """The three §Roofline terms, in seconds.
+
+    Inputs are PER-DEVICE quantities (the compiled HLO is the SPMD
+    per-device program), so each term divides by a single chip's rate;
+    ``chips`` is kept for callers that pass global totals."""
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = hbm_bytes / (chips * HBM_BW)
+    t_collective = collective_bytes / (chips * ICI_BW)
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """6 * N * D rule (N = active params, D = tokens this step)."""
+    return 6.0 * n_params_active * tokens

@@ -1,0 +1,445 @@
+"""HLO roll-up cost model: FLOPs / HBM bytes / collective bytes from the
+compiled per-device program, with **loop trip-count multipliers**.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` on the CPU backend counts
+each ``while`` body ONCE, so anything under ``lax.scan`` (layer stacks,
+blockwise attention, WKV/LRU time scans) is undercounted by its trip count.
+The dry-run's roofline would be garbage without correcting this. We parse the
+optimized HLO text, build the computation call graph, and roll up:
+
+  flops        traverse fusions + while bodies (x known_trip_count) + calls;
+               dots: 2 * result_elems * contracted_elems; elementwise: 1/elem;
+               reduce: input elems.
+  hbm bytes    top-level op operand+result bytes per computation (fusion
+               internals excluded — they never touch HBM), rolled through
+               while/call with multipliers.
+  collectives  per-kind operand bytes, rolled through while/call with
+               multipliers (a collective inside a scanned layer really does
+               run L times).
+
+Everything is per-device (the HLO is the SPMD per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops counted at 1 flop per output element (transcendentals weighted higher)
+_ELEMWISE_1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "negate",
+    "abs", "sign", "and", "or", "xor", "not", "select", "clamp", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_ELEMWISE_TRANS = {"exponential": 4, "log": 4, "log-plus-one": 4, "tanh": 6,
+                   "rsqrt": 2, "sqrt": 2, "power": 8, "logistic": 6,
+                   "exponential-minus-one": 4, "sine": 6, "cosine": 6, "atan2": 8,
+                   "erf": 6, "cbrt": 4}
+
+_TYPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[\\"\s:{]*n[\\"\s:]*[\\"]*(\d+)')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(elements, bytes) of all dtype[shape] occurrences in a type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _TYPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _result_type(rhs: str) -> str:
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1]
+        return rhs
+    return rhs.split(" ", 1)[0]
+
+
+def _opcode(rhs: str) -> str:
+    """Opcode = first bare word after the result type."""
+    rest = rhs[len(_result_type(rhs)):].strip()
+    m = re.match(r"([\w\-]+)", rest)
+    return m.group(1) if m else ""
+
+
+def _operands(rhs: str, opcode: str) -> list[str]:
+    pos = rhs.find(opcode)
+    paren = rhs.find("(", pos)
+    if paren == -1:
+        return []
+    depth = 0
+    for i, ch in enumerate(rhs[paren:], start=paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner = rhs[paren + 1: i]
+                out = []
+                for part in inner.split(","):
+                    mm = re.match(r"\s*%?([\w\.\-]+)", part)
+                    if mm:
+                        out.append(mm.group(1))
+                return out
+    return []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    rhs: str
+    opcode: str
+    result_type: str
+    operands: list
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    is_entry: bool
+    param_types: dict      # name -> type str
+    instrs: list           # list[_Instr]
+    fusion_called: bool = False
+
+
+def _parse_computations(hlo: str) -> dict:
+    comps: dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for ln in hlo.splitlines():
+        h = _HEADER_RE.match(ln.strip())
+        if h and (ln.rstrip().endswith("{")):
+            is_entry = bool(h.group(1))
+            name = h.group(2)
+            params = {}
+            for pm in re.finditer(r"([\w\.\-]+)\s*:\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))", h.group(3)):
+                params[pm.group(1)] = pm.group(2)
+            cur = _Computation(name=name, is_entry=is_entry, param_types=params, instrs=[])
+            comps[name] = cur
+            continue
+        if ln.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        opc = _opcode(rhs)
+        cur.instrs.append(_Instr(name=name, rhs=rhs, opcode=opc,
+                                 result_type=_result_type(rhs),
+                                 operands=_operands(rhs, opc),
+                                 is_root=ln.lstrip().startswith("ROOT")))
+    return comps
+
+
+def _dot_flops(instr: _Instr, shape_of) -> float:
+    res_elems, _ = _shape_elems_bytes(instr.result_type)
+    lhs_type = shape_of(instr.operands[0]) if instr.operands else ""
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+    if not lhs_type or not mdims:
+        return 2.0 * res_elems  # degenerate fallback
+    dims_m = _TYPE_RE.search(lhs_type)
+    if not dims_m:
+        return 2.0 * res_elems
+    lhs_shape = [int(d) for d in dims_m.group(2).split(",") if d]
+    contracted = 1
+    for idx in mdims.group(1).split(","):
+        if idx != "" and int(idx) < len(lhs_shape):
+            contracted *= lhs_shape[int(idx)]
+    return 2.0 * res_elems * contracted
+
+
+# opcodes assumed to fuse for free on the TPU target (VPU elementwise chains
+# never round-trip HBM); the CPU backend wraps each in its own mini-fusion,
+# which would wildly overstate HBM traffic if counted at face value.
+_TRIVIAL_FUSABLE = (
+    _ELEMWISE_1 | set(_ELEMWISE_TRANS) |
+    {"broadcast", "convert", "compare", "select", "reshape", "bitcast",
+     "iota", "constant", "parameter", "tuple", "get-tuple-element", "pad",
+     "slice", "concatenate", "reverse", "rng-bit-generator", "exponential",
+     "reduce-precision", "copy-done", "copy-start",
+     # reductions fuse with their producer chain on TPU (softmax max/sum
+     # never round-trip HBM); boundary traffic is carried by the dots
+     "reduce", "reduce-window",
+     # loop-carry copies / layout transposes: aliased or folded into MXU
+     # loads on the TPU target (CPU layout-assignment artifacts otherwise)
+     "copy", "transpose"}
+)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float          # fused-estimate (TPU-target): trivial chains free
+    hbm_bytes_unfused: float  # CPU-fusion-granularity upper bound
+    collective_bytes: float
+    bytes_by_kind: dict
+    count_by_kind: dict
+    while_trip_counts: list
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_unfused": self.hbm_bytes_unfused,
+            "collective_bytes": self.collective_bytes,
+            "collective_bytes_by_kind": dict(self.bytes_by_kind),
+            "collective_count_by_kind": dict(self.count_by_kind),
+            "while_trip_counts": list(self.while_trip_counts),
+        }
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+
+    # mark fusion-called computations (their ops never touch HBM directly)
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.rhs)
+                if m and m.group(1) in comps:
+                    comps[m.group(1)].fusion_called = True
+
+    trip_counts: list[int] = []
+    memo: dict[str, tuple] = {}
+    all_trivial_memo: dict[str, bool] = {}
+
+    def _all_trivial(comp_name: str) -> bool:
+        """True if a fused computation contains only free-fusable ops."""
+        if comp_name in all_trivial_memo:
+            return all_trivial_memo[comp_name]
+        comp = comps.get(comp_name)
+        ok = comp is not None and all(
+            i.opcode in _TRIVIAL_FUSABLE for i in comp.instrs)
+        all_trivial_memo[comp_name] = ok
+        return ok
+
+    def shape_of_factory(comp: _Computation):
+        local = dict(comp.param_types)
+        for ins in comp.instrs:
+            local[ins.name] = ins.result_type
+        def shape_of(name: str) -> str:
+            return local.get(name, "")
+        return shape_of
+
+    def visit(name: str, inside_fusion: bool) -> tuple:
+        """returns (flops, hbm_fused, hbm_unfused, coll_bytes, bytes_by_kind, count_by_kind)"""
+        key = (name, inside_fusion)
+        if key in memo:
+            return memo[key]
+        comp = comps[name]
+        shape_of = shape_of_factory(comp)
+        flops = 0.0
+        hbm = 0.0
+        hbm_unfused = 0.0
+        coll = 0.0
+        bk: dict[str, float] = {}
+        ck: dict[str, int] = {}
+
+        def _op_hbm(ins: _Instr) -> float:
+            """HBM traffic of one top-level op; aliasing-aware special cases
+            so scan-carry dynamic-update-slices don't charge the full stacked
+            buffer every iteration."""
+            opc = ins.opcode
+            _, res_bytes = _shape_elems_bytes(ins.result_type)
+            if opc in ("parameter", "constant", "tuple", "get-tuple-element",
+                       "bitcast", "while", "call", "conditional", "iota",
+                       "after-all", "partition-id", "replica-id"):
+                return 0.0
+            if opc == "dynamic-slice":
+                return 2.0 * res_bytes
+            if opc == "dynamic-update-slice":
+                upd = _shape_elems_bytes(shape_of(ins.operands[1]))[1] if len(ins.operands) > 1 else res_bytes
+                return 2.0 * upd
+            if opc == "gather":
+                idx = _shape_elems_bytes(shape_of(ins.operands[1]))[1] if len(ins.operands) > 1 else 0
+                return 2.0 * res_bytes + idx
+            if opc == "scatter":
+                upd = _shape_elems_bytes(shape_of(ins.operands[2]))[1] if len(ins.operands) > 2 else res_bytes
+                idx = _shape_elems_bytes(shape_of(ins.operands[1]))[1] if len(ins.operands) > 1 else 0
+                return 2.0 * upd + idx
+            if opc == "fusion":
+                m = _CALLS_RE.search(ins.rhs)
+                called = comps.get(m.group(1)) if m else None
+                if called is None:
+                    op_bytes = sum(_shape_elems_bytes(shape_of(o))[1] for o in ins.operands)
+                    return res_bytes + op_bytes
+                # Look INSIDE the fused computation and charge only real
+                # traffic: sliced reads at slice size, stack writes at update
+                # size, matmul/convolution operand+result; layout copies /
+                # transposes and elementwise are VMEM-resident on the TPU
+                # target. Whole stacked scan buffers passed as operands are
+                # NOT charged (only their touched slices are).
+                c_shape = shape_of_factory(called)
+                total = 0.0
+                root = next((i for i in called.instrs if i.is_root), None)
+                for ci in called.instrs:
+                    cb = _shape_elems_bytes(ci.result_type)[1]
+                    if ci.opcode == "dynamic-slice":
+                        total += 2.0 * cb
+                    elif ci.opcode == "dynamic-update-slice":
+                        upd = _shape_elems_bytes(c_shape(ci.operands[1]))[1] \
+                            if len(ci.operands) > 1 else cb
+                        total += 2.0 * upd
+                    elif ci.opcode == "gather":
+                        total += 2.0 * cb
+                    elif ci.opcode == "scatter":
+                        upd = _shape_elems_bytes(c_shape(ci.operands[2]))[1] \
+                            if len(ci.operands) > 2 else cb
+                        total += 2.0 * upd
+                    elif ci.opcode in ("dot", "dot-general", "convolution"):
+                        ob = sum(_shape_elems_bytes(c_shape(o))[1] for o in ci.operands)
+                        total += cb + ob
+                if root is not None and root.opcode not in (
+                        "dynamic-update-slice", "dynamic-slice", "tuple"):
+                    total += res_bytes  # the fusion's own output write
+                return total
+            op_bytes = sum(_shape_elems_bytes(shape_of(o))[1] for o in ins.operands)
+            return res_bytes + op_bytes
+
+        def _op_is_trivial(ins: _Instr) -> bool:
+            if ins.opcode in _TRIVIAL_FUSABLE:
+                return True
+            if ins.opcode == "fusion":
+                m = _CALLS_RE.search(ins.rhs)
+                return bool(m) and _all_trivial(m.group(1))
+            return False
+
+        for ins in comp.instrs:
+            opc = ins.opcode
+            res_elems, res_bytes = _shape_elems_bytes(ins.result_type)
+
+            # ---- HBM bytes: only at non-fusion level ----
+            if not inside_fusion and not comp.fusion_called:
+                b = _op_hbm(ins)
+                hbm_unfused += b
+                if not _op_is_trivial(ins):
+                    hbm += b
+
+            # ---- collectives ----
+            kind = next((c for c in _COLLECTIVES if opc.startswith(c)), None)
+            if kind is not None and not opc.endswith("-done"):
+                size = sum(_shape_elems_bytes(shape_of(o))[1] for o in ins.operands)
+                if size == 0:
+                    size = res_bytes
+                coll += size
+                bk[kind] = bk.get(kind, 0.0) + size
+                ck[kind] = ck.get(kind, 0) + 1
+
+            # ---- flops ----
+            if opc in ("dot", "dot-general"):
+                flops += _dot_flops(ins, shape_of)
+            elif opc == "convolution":
+                flops += 2.0 * res_elems * 64  # crude (we emit no convs)
+            elif opc in _ELEMWISE_1:
+                flops += res_elems
+            elif opc in _ELEMWISE_TRANS:
+                flops += res_elems * _ELEMWISE_TRANS[opc]
+            elif opc in ("reduce", "reduce-window"):
+                in_elems = sum(_shape_elems_bytes(shape_of(o))[0]
+                               for o in ins.operands[: max(1, len(ins.operands) // 2)])
+                flops += in_elems
+
+            # ---- recurse ----
+            if opc == "fusion":
+                m = _CALLS_RE.search(ins.rhs)
+                if m and m.group(1) in comps:
+                    sub = visit(m.group(1), True)
+                    flops += sub[0]
+                    coll += sub[3]
+                    for k, v in sub[4].items():
+                        bk[k] = bk.get(k, 0.0) + v
+                    for k, v in sub[5].items():
+                        ck[k] = ck.get(k, 0) + v
+            elif opc == "while":
+                m = _WHILE_RE.search(ins.rhs)
+                trips = 1
+                tm = _TRIP_RE.search(ins.rhs)
+                if tm:
+                    trips = int(tm.group(1))
+                    trip_counts.append(trips)
+                if m:
+                    body = m.group(2)
+                    if body in comps:
+                        sub = visit(body, inside_fusion)
+                        flops += trips * sub[0]
+                        hbm += trips * sub[1]
+                        hbm_unfused += trips * sub[2]
+                        coll += trips * sub[3]
+                        for k, v in sub[4].items():
+                            bk[k] = bk.get(k, 0.0) + trips * v
+                        for k, v in sub[5].items():
+                            ck[k] = ck.get(k, 0) + trips * v
+            elif opc in ("call", "async-start", "custom-call"):
+                m = _TOAPPLY_RE.search(ins.rhs) or _CALLS_RE.search(ins.rhs)
+                if m and m.group(1) in comps:
+                    sub = visit(m.group(1), inside_fusion)
+                    flops += sub[0]
+                    hbm += sub[1]
+                    hbm_unfused += sub[2]
+                    coll += sub[3]
+                    for k, v in sub[4].items():
+                        bk[k] = bk.get(k, 0.0) + v
+                    for k, v in sub[5].items():
+                        ck[k] = ck.get(k, 0) + v
+            elif opc == "conditional":
+                m = _BRANCH_RE.search(ins.rhs)
+                if m:
+                    subs = [visit(b.strip().lstrip("%"), inside_fusion)
+                            for b in m.group(1).split(",") if b.strip().lstrip("%") in comps]
+                    if subs:
+                        # cost of the most expensive branch
+                        best = max(subs, key=lambda s: s[0] + s[1])
+                        flops += best[0]; hbm += best[1]
+                        hbm_unfused += best[2]; coll += best[3]
+                        for k, v in best[4].items():
+                            bk[k] = bk.get(k, 0.0) + v
+                        for k, v in best[5].items():
+                            ck[k] = ck.get(k, 0) + v
+
+        out = (flops, hbm, hbm_unfused, coll, bk, ck)
+        memo[key] = out
+        return out
+
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return HloCost(0.0, 0.0, 0.0, 0.0, {}, {}, [])
+    flops, hbm, hbm_unfused, coll, bk, ck = visit(entry, False)
+    return HloCost(flops=flops, hbm_bytes=hbm, hbm_bytes_unfused=hbm_unfused,
+                   collective_bytes=coll, bytes_by_kind=bk, count_by_kind=ck,
+                   while_trip_counts=trip_counts)

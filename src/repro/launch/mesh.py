@@ -1,0 +1,36 @@
+"""Production meshes. Functions, not module constants — importing this file
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) = ("data", "model").
+    Multi-pod: 512 chips (2, 16, 16) = ("pod", "data", "model");
+    each pod is one gossip data center (see DESIGN.md §4)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(data: int = 4, model: int = 2):
+    """Small mesh for subprocess tests with --xla_force_host_platform_device_count."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def gossip_axes(mesh) -> tuple[str, ...]:
+    """Which mesh axes carry the gossip node dimension."""
+    return ("pod",) if "pod" in mesh.axis_names else ("data",)
+
+
+def gossip_nodes(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in gossip_axes(mesh)]))
+
+
+def data_axes_for_batch(mesh) -> tuple[str, ...]:
+    """Axes the *within-node* batch dim shards over."""
+    return ("data",) if "pod" in mesh.axis_names else ()

@@ -1,0 +1,308 @@
+"""Step functions + input/shard-spec builders for training and serving.
+
+Everything here is mesh-agnostic pure-function plumbing shared by
+launch/train.py (real execution), launch/serve.py and launch/dryrun.py
+(lower/compile only). The GossipDP strategy is the paper's technique as a
+first-class citizen; 'allreduce' is the classic data-parallel baseline the
+paper compares against (its "centralized" comparator).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import build_model, Model
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw, apply_updates, warmup_cosine
+from repro.sharding import rules as shard_rules
+
+
+# ---------------------------------------------------------------------------
+# strategy configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainRecipe:
+    strategy: str = "gossip"        # 'gossip' (the paper) | 'allreduce' (baseline)
+    eps: float = 1.0                # DP budget per round (gossip only)
+    L: float = 1.0                  # clip norm
+    lam: float = 1e-4               # Lasso strength
+    alpha0: float = 0.01
+    topology: str = "ring"
+    lr: float = 3e-4                # allreduce baseline LR
+    noise_self: bool = True
+    microbatches: int = 1           # grad-accumulation chunks per round
+    # Laplace calibration: 'coordinate' (2*alpha*L/eps per coordinate) is the
+    # deployable default at transformer scale; the paper's exact Lemma-1
+    # 'global' scale carries a sqrt(n) factor that destroys learning for
+    # n ~ 10^9 parameters (DESIGN.md deviation #3) — selectable for the
+    # paper-faithful linear workload.
+    clip_style: str = "coordinate"
+
+
+def effective_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """Shape-dependent tweaks: the long_500k sliding-window variant."""
+    if shape.name == "long_500k" and cfg.window_500k and cfg.sliding_window is None:
+        return dataclasses.replace(cfg, sliding_window=cfg.window_500k)
+    return cfg
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("full-attention arch without a windowed variant; 500k decode "
+                "needs a sub-quadratic mechanism (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if cfg.sliding_window is not None:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# train step builders
+# ---------------------------------------------------------------------------
+
+class GossipTrainState(NamedTuple):
+    gossip: Any   # core.gossip.GossipState (theta = node-stacked params)
+
+
+def make_gossip_dp(cfg_nodes: int, recipe: TrainRecipe) -> GossipDP:
+    return GossipDP(
+        gossip=GossipConfig(topology=recipe.topology, nodes=cfg_nodes),
+        omd=OMDConfig(alpha0=recipe.alpha0, schedule="sqrt_t", lam=recipe.lam),
+        privacy=PrivacyConfig(eps=recipe.eps, L=recipe.L, noise_self=recipe.noise_self,
+                              clip_style=recipe.clip_style),
+    )
+
+
+def make_gossip_train_step(model: Model, gdp: GossipDP, microbatches: int = 1,
+                           node_axis: str | None = None,
+                           batchpar_attn: bool = False,
+                           head_pad: int | None = None,
+                           flash: bool = False):
+    """Batch leaves carry a leading node axis; params/theta are node-stacked.
+
+    ``microbatches`` > 1 grad-accumulates over chunks of the per-node batch
+    (peak activation memory / microbatches; identical update in expectation).
+    ``node_axis`` names the mesh axis of the node dim (enables
+    spmd_axis_name so sharding constraints inside the vmapped loss work).
+    ``batchpar_attn`` is §Perf H2: shard attention over the per-node batch.
+    """
+    from repro.models import attention as attn_mod
+
+    def train_step(state: GossipTrainState, batch):
+        w = gdp.primal(state.gossip)  # node-stacked primal params (steps 6-7)
+        w_model = jax.tree_util.tree_map(
+            lambda a: a.astype(model.cfg.jdtype) if a.dtype == jnp.float32 else a, w)
+
+        def node_loss(params, node_batch):
+            with attn_mod.batch_parallel("model" if batchpar_attn else None), \
+                 attn_mod.head_padding(head_pad, "model" if head_pad else None), \
+                 attn_mod.flash_vjp("flash" if flash else False):
+                loss, metrics = model.loss_fn(params, node_batch)
+            return loss, metrics
+
+        grad_fn = jax.vmap(jax.value_and_grad(node_loss, has_aux=True),
+                           spmd_axis_name=node_axis)
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(w_model, batch)
+        else:
+            def to_mb(leaf):
+                n, b = leaf.shape[:2]
+                mb = b // microbatches
+                return jnp.moveaxis(
+                    leaf.reshape((n, microbatches, mb) + leaf.shape[2:]), 1, 0)
+
+            mb_batch = jax.tree_util.tree_map(to_mb, batch)
+
+            def mb_body(acc, mb):
+                (l, met), g = grad_fn(w_model, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, (l, met)
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), w_model)
+            grads, (losses, mets) = jax.lax.scan(mb_body, acc0, mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = jnp.mean(losses, axis=0)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m, axis=0), mets)
+        new_gossip, gossip_metrics = gdp.update(state.gossip, grads)
+        out = {
+            "loss": jnp.mean(loss),
+            "ce": jnp.mean(metrics["ce"]),
+            "aux": jnp.mean(metrics["aux"]),
+            **gossip_metrics,
+        }
+        return GossipTrainState(gossip=new_gossip), out
+
+    return train_step
+
+
+def make_gossip_init(model: Model, gdp: GossipDP, nodes: int):
+    def init(seed: int = 0):
+        k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+        params = model.init(k0)
+        node_params = shard_rules.with_node_axis(params, nodes)
+        return GossipTrainState(gossip=gdp.init(node_params, k1))
+    return init
+
+
+class AllreduceTrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def make_allreduce_train_step(model: Model, recipe: TrainRecipe, total_steps: int = 10_000):
+    optimizer = adamw(warmup_cosine(recipe.lr, 200, total_steps))
+    M = recipe.microbatches
+
+    def train_step(state: AllreduceTrainState, batch):
+        vg = jax.value_and_grad(model.loss_fn, has_aux=True)
+        if M == 1:
+            (loss, metrics), grads = vg(state.params, batch)
+        else:
+            def to_mb(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape((M, b // M) + leaf.shape[1:])
+
+            mb_batch = jax.tree_util.tree_map(to_mb, batch)
+
+            def mb_body(acc, mb):
+                (l, met), g = vg(state.params, mb)
+                return jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g), (l, met)
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, (losses, mets) = jax.lax.scan(mb_body, acc0, mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree_util.tree_map(jnp.mean, mets)
+        updates, opt = optimizer.update(grads, state.opt, state.params)
+        params = apply_updates(state.params, updates)
+        return AllreduceTrainState(params, opt), {"loss": loss, **metrics}
+
+    def init(seed: int = 0):
+        params = model.init(jax.random.PRNGKey(seed))
+        return AllreduceTrainState(params, optimizer.init(params))
+
+    return train_step, init
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, last_only: bool = False,
+                      seqpar_axis: str | None = None,
+                      moe_groups: int = 1, moe_group_axis: str | None = None,
+                      head_pad: int | None = None, sp_axis: str | None = None):
+    """§Perf hillclimb variants:
+      last_only    — skip the (B, T, V) logits (prefill only needs the last
+                     position). Refuted as a win: XLA already pushes the
+                     slice through the unembed matmul (see EXPERIMENTS §Perf).
+      seqpar_axis  — sequence-parallel blockwise attention (shard time over
+                     the model axis instead of the contracting head_dim).
+      moe_groups   — grouped (shard-local) MoE dispatch: argsort/scatter per
+                     data shard instead of replicated global scatters."""
+    from repro.models import attention as attn_mod
+    from repro.models import moe as moe_mod
+    from repro.models import transformer as tfm_mod
+
+    def prefill_step(params, batch):
+        with attn_mod.sequence_parallel(seqpar_axis), \
+             moe_mod.grouped_dispatch(moe_groups, moe_group_axis), \
+             attn_mod.head_padding(head_pad, "model" if head_pad else None), \
+             tfm_mod.sp_residual(sp_axis):
+            logits, _ = model.apply(params, batch["tokens"], batch.get("frontend"),
+                                    last_only=last_only)
+        return jnp.argmax(logits[:, -1], axis=-1)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins — no allocation) + shardings
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      strategy: str) -> tuple[Any, Any]:
+    """Returns (batch_structs, batch_pspecs)."""
+    B, T = shape.global_batch, shape.seq_len
+    if strategy == "gossip":
+        nodes = mesh_lib.gossip_nodes(mesh)
+        pnb = B // nodes
+        lead_axes = mesh_lib.gossip_axes(mesh)
+        inner = mesh_lib.data_axes_for_batch(mesh)
+        lead = lead_axes[0] if len(lead_axes) == 1 else lead_axes
+        bspec = P(lead, inner[0] if inner else None, None)
+        shape3 = (nodes, pnb, T)
+        fe_spec = P(lead, inner[0] if inner else None, None, None)
+        fe_dims = (nodes, pnb)
+    else:
+        axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        lead = axes if len(axes) > 1 else axes[0]
+        bspec = P(lead, None)
+        shape3 = (B, T)
+        fe_spec = P(lead, None, None)
+        fe_dims = (B,)
+
+    batch = {
+        "tokens": _sds(shape3, jnp.int32),
+        "labels": _sds(shape3, jnp.int32),
+    }
+    specs = {"tokens": bspec, "labels": bspec}
+    if cfg.frontend == "vision":
+        batch["frontend"] = _sds(fe_dims + (cfg.frontend_tokens, cfg.d_model), cfg.jdtype)
+        specs["frontend"] = fe_spec
+    elif cfg.family == "encdec":
+        batch["frontend"] = _sds(fe_dims + (max(T // 4, 8), cfg.d_model), cfg.jdtype)
+        specs["frontend"] = fe_spec
+    return batch, specs
+
+
+def serve_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Decode inputs: tokens (B, 1), pos (B,). Batch over all data axes;
+    batch==1 (long_500k) replicates."""
+    B = shape.global_batch
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    lead = (tuple(axes) if len(axes) > 1 else axes[0]) if B >= total else None
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((B,), jnp.int32)
+    return (tokens, pos), (P(lead, None), P(lead))
+
+
+def batch_axes_for_serve(mesh, B: int):
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    if B >= total:
+        return tuple(axes)
+    return ()
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

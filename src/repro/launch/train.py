@@ -1,0 +1,112 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --steps 50 \
+        --strategy gossip --eps 1.0 --nodes 4 [--smoke]
+
+On this CPU container use --smoke (reduced config, tiny batch); on a real
+TPU pod the same driver runs the full config with the production mesh.
+The paper's GossipDP strategy is the default; --strategy allreduce gives the
+classic data-parallel baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.lm import lm_batches
+from repro.launch import steps
+from repro.metrics import CSVLogger, MetricTracker
+from repro.models import build_model
+
+
+def train(arch: str, *, strategy: str = "gossip", nodes: int = 4, steps_n: int = 50,
+          batch_per_node: int = 2, seq_len: int = 128, eps: float = 1.0,
+          lam: float = 1e-4, smoke: bool = True, log_path: str | None = None,
+          seed: int = 0, microbatches: int = 1, topology: str = "ring") -> dict:
+    cfg = get_config(arch)
+    if smoke:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    recipe = steps.TrainRecipe(strategy=strategy, eps=eps, lam=lam,
+                               microbatches=microbatches, topology=topology)
+
+    if strategy == "gossip":
+        gdp = steps.make_gossip_dp(nodes, recipe)
+        step_fn = jax.jit(steps.make_gossip_train_step(model, gdp, microbatches),
+                          donate_argnums=(0,))
+        state = steps.make_gossip_init(model, gdp, nodes)(seed)
+        batch_nodes = nodes
+    else:
+        train_step, init = steps.make_allreduce_train_step(model, recipe)
+        step_fn = jax.jit(train_step, donate_argnums=(0,))
+        state = init(seed)
+        batch_nodes = 1
+
+    def add_frontend(batch):
+        B_l = batch["tokens"].shape[:-1]
+        if cfg.frontend is not None:
+            batch["frontend"] = jnp.zeros(B_l + (max(cfg.frontend_tokens, 1), cfg.d_model),
+                                          cfg.jdtype)
+            batch["labels"] = batch["labels"].at[..., :cfg.frontend_tokens].set(-1)
+        elif cfg.family == "encdec":
+            batch["frontend"] = jnp.zeros(B_l + (max(seq_len // 4, 8), cfg.d_model),
+                                          cfg.jdtype)
+        return batch
+
+    data = lm_batches(cfg.vocab_size, batch_per_node, seq_len,
+                      nodes=batch_nodes, seed=seed)
+    logger = CSVLogger(log_path) if log_path else None
+    tracker = MetricTracker()
+    t0 = time.time()
+    history = []
+    for i in range(steps_n):
+        batch = add_frontend(next(data))
+        if strategy == "gossip" and batch_nodes == 1:
+            batch = jax.tree_util.tree_map(lambda x: x[None], batch)
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        tracker.update(metrics)
+        history.append(metrics)
+        if logger:
+            logger.log(i, metrics)
+        if i % 10 == 0 or i == steps_n - 1:
+            m = tracker.means()
+            print(f"step {i:4d} loss={m.get('loss', 0):.4f} "
+                  f"ce={m.get('ce', 0):.4f} "
+                  f"sparsity={m.get('theta_sparsity', 0):.3f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if logger:
+        logger.close()
+    return {"history": history, "final": tracker.means(), "state": state}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--strategy", default="gossip", choices=["gossip", "allreduce"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-per-node", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--eps", type=float, default=1.0)
+    ap.add_argument("--lam", type=float, default=1e-4)
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log", default=None)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    train(args.arch, strategy=args.strategy, nodes=args.nodes, steps_n=args.steps,
+          batch_per_node=args.batch_per_node, seq_len=args.seq_len, eps=args.eps,
+          lam=args.lam, smoke=args.smoke, log_path=args.log, seed=args.seed,
+          microbatches=args.microbatches, topology=args.topology)
+
+
+if __name__ == "__main__":
+    main()

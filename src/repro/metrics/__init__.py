@@ -1,0 +1,3 @@
+from repro.metrics.logging import CSVLogger, MetricTracker
+
+__all__ = ["CSVLogger", "MetricTracker"]

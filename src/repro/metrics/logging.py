@@ -1,0 +1,44 @@
+"""Scalar metric logging: CSV files + in-memory moving windows."""
+from __future__ import annotations
+
+import collections
+import os
+from typing import Mapping
+
+import numpy as np
+
+
+class CSVLogger:
+    def __init__(self, path: str, fieldnames: list[str] | None = None):
+        self.path = path
+        self.fieldnames = fieldnames
+        self._fh = None
+
+    def log(self, step: int, metrics: Mapping[str, float]) -> None:
+        if self._fh is None:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            self.fieldnames = self.fieldnames or ["step", *sorted(metrics)]
+            self._fh = open(self.path, "w")
+            self._fh.write(",".join(self.fieldnames) + "\n")
+        row = {"step": step, **{k: float(v) for k, v in metrics.items()}}
+        self._fh.write(",".join(str(row.get(f, "")) for f in self.fieldnames) + "\n")
+        self._fh.flush()
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+
+
+class MetricTracker:
+    """Windowed means for console reporting."""
+
+    def __init__(self, window: int = 50):
+        self.window = window
+        self.data: dict[str, collections.deque] = {}
+
+    def update(self, metrics: Mapping[str, float]) -> None:
+        for k, v in metrics.items():
+            self.data.setdefault(k, collections.deque(maxlen=self.window)).append(float(v))
+
+    def means(self) -> dict[str, float]:
+        return {k: float(np.mean(v)) for k, v in self.data.items() if v}

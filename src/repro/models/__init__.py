@@ -1,0 +1,14 @@
+"""Model substrate: transformer / MoE / RWKV6 / RG-LRU / enc-dec families."""
+from repro.models.config import ModelConfig, ShapeConfig, INPUT_SHAPES
+from repro.models.transformer import Model, build_model as _build_decoder_only
+from repro.models.encdec import build_encdec
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    """Single entry point: dispatch on family."""
+    if cfg.family == "encdec":
+        return build_encdec(cfg)
+    return _build_decoder_only(cfg)
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "INPUT_SHAPES", "Model", "build_model"]

@@ -1,0 +1,615 @@
+"""Attention: GQA/MHA, RoPE + M-RoPE, qk-norm, QKV bias, sliding window,
+blockwise (memory-efficient) prefill, and ring-buffer KV-cache decode.
+
+Design notes
+------------
+* GQA is computed grouped — queries reshaped to (B, kv_heads, group, T, hd)
+  and contracted against un-repeated K/V, so no (B, H, S, hd) repeat is ever
+  materialized.
+* Sequences longer than ``BLOCKWISE_THRESHOLD`` use a two-level blockwise
+  softmax (lax.scan over query chunks, inner scan over key chunks, online
+  max/denominator) — O(qc*kc) temporaries instead of O(T^2). This is the
+  pure-JAX reference; the Pallas flash kernel of the perf phase swaps in
+  underneath `attention_full`.
+* The decode cache is a ring buffer of ``cache_len`` slots with an explicit
+  per-slot absolute-position array: full causal, sliding-window and the
+  window_500k long-context variant all fall out of one mask rule
+  (slot_pos >= 0) & (slot_pos <= pos) & (slot_pos > pos - window).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+BLOCKWISE_THRESHOLD = 2048
+Q_CHUNK = 512
+K_CHUNK = 1024
+NEG_INF = -1e30
+
+# §Perf hillclimb: sequence-parallel attention. When set (an axis name, e.g.
+# "model"), blockwise attention constrains q/k/v to shard their TIME dim over
+# that axis instead of letting GSPMD shard the contracting head_dim — which
+# (for head counts not divisible by the axis, e.g. llama4's 40 heads on 16
+# chips) otherwise emits one partial-product all-reduce of the SCORE tensor
+# per (layer x q-chunk x k-chunk): 98k all-reduces / 4.5 TB per device on
+# llama4 prefill_32k. Enabled per-step via `sequence_parallel(axis)`.
+import contextlib
+
+_SEQ_PARALLEL_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def sequence_parallel(axis: str | None):
+    _SEQ_PARALLEL_AXIS.append(axis)
+    try:
+        yield
+    finally:
+        _SEQ_PARALLEL_AXIS.pop()
+
+
+# §Perf H2 iter 2: head padding. When a GQA head count doesn't divide the
+# model axis (qwen2-7b: 28 heads on 16 chips), GSPMD factorizes the head dim
+# with the CONTRACTING head_dim (e.g. 4x4) and emits a partial-product
+# all-reduce of the score tensor per chunk. Padding each kv group with zero
+# query heads up to g' = ceil-to-divisible is mathematically exact (padded
+# outputs are sliced away before wo) and makes the head dim divide cleanly —
+# no score collectives, +g'/g attention flops.
+_HEAD_PAD_MULTIPLE: list = [None]
+_HEAD_PAD_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def head_padding(multiple: int | None, axis: str | None = None):
+    """axis: additionally constrain q head-sharded on `axis` and k/v
+    REPLICATED over it — kv tensors are small and replicating them is what
+    prevents GSPMD from sharding the contracting head_dim (iter 3)."""
+    _HEAD_PAD_MULTIPLE.append(multiple)
+    _HEAD_PAD_AXIS.append(axis)
+    try:
+        yield
+    finally:
+        _HEAD_PAD_MULTIPLE.pop()
+        _HEAD_PAD_AXIS.pop()
+
+
+def _padded_group(cfg, H: int, Kv: int) -> int:
+    mult = _HEAD_PAD_MULTIPLE[-1]
+    if mult is None or H % mult == 0:
+        return H // Kv
+    g = H // Kv
+    # smallest g' >= g with Kv*g' % mult == 0
+    g2 = g
+    while (Kv * g2) % mult:
+        g2 += 1
+    return g2
+
+
+def _maybe_pad_heads(q, k, v, cfg):
+    """Pad heads so the sharded head dim divides the mesh axis.
+
+    GQA (g > 1): pad each kv group with zero QUERY heads (k/v untouched).
+    MHA/per-head (g == 1): pad BOTH q and k/v with dummy heads — each real
+    head still attends only its own kv, dummy outputs are sliced away.
+    Returns (q, k, v, H_orig, kv_padded: bool).
+    """
+    B, T, H, hd = q.shape
+    Kv = cfg.kv_heads
+    g = H // Kv
+    mult = _HEAD_PAD_MULTIPLE[-1]
+    if mult is None or H % mult == 0:
+        return q, k, v, H, False
+    if g > 1:
+        g2 = _padded_group(cfg, H, Kv)
+        qg = q.reshape(B, T, Kv, g, hd)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, g2 - g), (0, 0)))
+        return qg.reshape(B, T, Kv * g2, hd), k, v, H, False
+    # MHA: pad q AND kv heads to the next multiple
+    H2 = -(-H // mult) * mult
+    pad = ((0, 0), (0, 0), (0, H2 - H), (0, 0))
+    return jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad), H, True
+
+
+def _maybe_unpad_heads(o, cfg, H_orig, kv_padded):
+    B, T, H2, hd = o.shape
+    if H2 == H_orig:
+        return o
+    if kv_padded:  # MHA padding: plain head slice
+        return o[:, :, :H_orig]
+    Kv = cfg.kv_heads
+    g = H_orig // Kv
+    og = o.reshape(B, T, Kv, H2 // Kv, hd)[:, :, :, :g]
+    return og.reshape(B, T, H_orig, hd)
+
+
+# §Perf H2 iter 1: batch-parallel attention for training. Per-node batch (16) ==
+# model-axis size, so sharding the BATCH dim of q/k/v over "model" gives
+# each chip whole sequences — zero attention collectives (vs partial-product
+# all-reduces of score tensors when GSPMD shards the contracting head_dim
+# for kv_heads < axis size). Train-only (prefill per-chip batch is too small).
+_BATCH_PARALLEL_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def batch_parallel(axis: str | None):
+    _BATCH_PARALLEL_AXIS.append(axis)
+    try:
+        yield
+    finally:
+        _BATCH_PARALLEL_AXIS.pop()
+
+
+def _maybe_batchpar(q, k, v):
+    axis = _BATCH_PARALLEL_AXIS[-1]
+    if axis is None:
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    wsc = jax.lax.with_sharding_constraint
+    spec = P(axis, None, None, None)
+    return wsc(q, spec), wsc(k, spec), wsc(v, spec)
+
+
+def _maybe_seqpar(q, k, v):
+    axis = _SEQ_PARALLEL_AXIS[-1]
+    if axis is None:
+        return q, k, v
+    from jax.sharding import PartitionSpec as P
+    wsc = jax.lax.with_sharding_constraint
+    spec = P(None, axis, None, None)
+    return wsc(q, spec), wsc(k, spec), wsc(v, spec)
+
+
+def _maybe_seqpar_out(o):
+    """Keep the attention output time-sharded too (same region, no thrash)."""
+    axis = _SEQ_PARALLEL_AXIS[-1]
+    if axis is None:
+        return o
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(o, P(None, axis, None, None))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_inv_freq(cfg: ModelConfig) -> jax.Array:
+    hd = cfg.dims_per_head
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def default_positions(batch: int, seq: int, cfg: ModelConfig, offset=0) -> jax.Array:
+    """Text positions. For M-RoPE, the 3 channels (t, h, w) coincide for text."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_style == "mrope":
+        return jnp.broadcast_to(pos[..., None], (batch, seq, 3))
+    return pos
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x (B, T, H, hd); positions (B, T) or (B, T, 3) for mrope."""
+    if cfg.rope_style == "none":
+        return x
+    inv_freq = rope_inv_freq(cfg)  # (hd/2,)
+    if cfg.rope_style == "mrope":
+        # Each frequency belongs to a section; section s reads positions[..., s].
+        sections = cfg.mrope_sections
+        assert sum(sections) == inv_freq.shape[0], (sections, inv_freq.shape)
+        sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                            total_repeat_length=inv_freq.shape[0])  # (hd/2,)
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),
+            jnp.broadcast_to(sec_id[None, None, :], positions.shape[:2] + sec_id.shape),
+            axis=-1,
+        )  # (B, T, hd/2): per-frequency position
+        angles = pos * inv_freq[None, None, :]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv_freq[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, T, 1, hd/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    hd = cfg.dims_per_head
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.linear_init(kq, cfg.d_model, cfg.num_heads * hd, cfg.jdtype, cfg.use_qkv_bias),
+        "wk": layers.linear_init(kk, cfg.d_model, cfg.kv_heads * hd, cfg.jdtype, cfg.use_qkv_bias),
+        "wv": layers.linear_init(kv, cfg.d_model, cfg.kv_heads * hd, cfg.jdtype, cfg.use_qkv_bias),
+        "wo": layers.linear_init(ko, cfg.num_heads * hd, cfg.d_model, cfg.jdtype, False),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array):
+    B, T, _ = x.shape
+    hd = cfg.dims_per_head
+    q = layers.linear(p["wq"], x).reshape(B, T, cfg.num_heads, hd)
+    k = layers.linear(p["wk"], x).reshape(B, T, cfg.kv_heads, hd)
+    v = layers.linear(p["wv"], x).reshape(B, T, cfg.kv_heads, hd)
+    if cfg.use_qk_norm:
+        q = layers.rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = layers.rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def _softcap(s: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+# ---------------------------------------------------------------------------
+# full (quadratic) attention — short sequences
+# ---------------------------------------------------------------------------
+
+def _full_attention(q, k, v, pos_q, pos_k, window, softcap, causal=True):
+    """q (B,T,H,hd), k/v (B,S,Kv,hd). Grouped GQA. Returns (B,T,H,hd)."""
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, T, Kv, g, hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", qg.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    s = _softcap(s, softcap)
+    mask = jnp.ones((T, S), bool) if not causal else (pos_k[None, :] <= pos_q[:, None])
+    if window is not None:
+        mask &= pos_k[None, :] > (pos_q[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, T, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention — long sequences (online softmax over KV chunks)
+# ---------------------------------------------------------------------------
+
+def _blockwise_attention(q, k, v, window, softcap, q_chunk=Q_CHUNK, k_chunk=K_CHUNK):
+    """Causal blockwise attention; positions are arange (self-attention)."""
+    q, k, v = _maybe_seqpar(q, k, v)
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+
+    pad_q = (-T) % q_chunk
+    pad_k = (-S) % k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Tq, Sk = T + pad_q, S + pad_k
+    nq, nk = Tq // q_chunk, Sk // k_chunk
+
+    # keep q/k/v in their input dtype (bf16 for full configs) — the score dot
+    # accumulates in f32 via preferred_element_type, probabilities are cast
+    # back for the p@v dot (flash numerics). Halves score-path HBM traffic
+    # for bf16 models; exact no-op for f32 models (§Perf H2 iter 4).
+    io_dtype = q.dtype
+    qp = qp.reshape(B, nq, q_chunk, Kv, g, hd)
+    kp = kp.reshape(B, nk, k_chunk, Kv, hd)
+    vp = vp.reshape(B, nk, k_chunk, Kv, hd)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk  # q_blk (B, qc, Kv, g, hd)
+        pos_q = qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kj_blk
+            pos_k = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = (pos_k[None, :] <= pos_q[:, None]) & (pos_k[None, :] < S)
+            if window is not None:
+                mask &= pos_k[None, :] > (pos_q[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(io_dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kv, g, q_chunk, hd), jnp.float32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), ks)
+        o = acc / jnp.maximum(l[..., None], 1e-30)  # (B, Kv, g, qc, hd)
+        return None, jnp.moveaxis(o, 3, 1)          # (B, qc, Kv, g, hd)
+
+    qs = (jnp.arange(nq), jnp.moveaxis(qp, 1, 0))
+    _, outs = jax.lax.scan(q_step, None, qs)        # (nq, B, qc, Kv, g, hd)
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, Tq, Kv * g, hd)[:, :T]
+    # NOTE: constraining o here was tried and REFUTED (30x flop blowup via
+    # involuntary remat — see EXPERIMENTS §Perf H1 iter 3); output layout is
+    # left to GSPMD.
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash-style custom VJP: forward saves only (o, m, l); the backward
+# RECOMPUTES score tiles chunk-by-chunk (flash attention backward). Without
+# this, jax.lax.scan's autodiff stacks every (qc, kc) probability tile for
+# the backward — measured at ~45% of the whole train-step HBM traffic on
+# minicpm-2b train_4k (§Perf H3 iter 2). The Pallas kernel
+# (kernels/flash_attention.py) is the TPU fast path for the forward; this
+# pure-JAX twin keeps the same memory behaviour in the lowered HLO and runs
+# everywhere.
+# ---------------------------------------------------------------------------
+
+def _blockwise_fwd_stats(q, k, v, window, softcap, q_chunk, k_chunk):
+    """Like _blockwise_attention but also returns per-row (m, l) stats."""
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    pad_q = (-T) % q_chunk
+    pad_k = (-S) % k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Tq, Sk = T + pad_q, S + pad_k
+    nq, nk = Tq // q_chunk, Sk // k_chunk
+    io_dtype = q.dtype
+    qp = qp.reshape(B, nq, q_chunk, Kv, g, hd)
+    kp = kp.reshape(B, nk, k_chunk, Kv, hd)
+    vp = vp.reshape(B, nk, k_chunk, Kv, hd)
+
+    def q_step(_, qi_blk):
+        qi, q_blk = qi_blk
+        pos_q = qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kj_blk
+            pos_k = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = (pos_k[None, :] <= pos_q[:, None]) & (pos_k[None, :] < S)
+            if window is not None:
+                mask &= pos_k[None, :] > (pos_q[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(io_dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Kv, g, q_chunk, hd), jnp.float32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0))
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0), ks)
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, (jnp.moveaxis(o, 3, 1), m, l)  # o (B,qc,Kv,g,hd)
+
+    qs = (jnp.arange(nq), jnp.moveaxis(qp, 1, 0))
+    _, (outs, ms, ls) = jax.lax.scan(q_step, None, qs)
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, Tq, Kv * g, hd)[:, :T]
+    return o.astype(q.dtype), ms, ls  # ms/ls (nq, B, Kv, g, qc)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention_jax(q, k, v, window, softcap, q_chunk, k_chunk):
+    o, _, _ = _blockwise_fwd_stats(q, k, v, window, softcap, q_chunk, k_chunk)
+    return o
+
+
+def _flash_fwd(q, k, v, window, softcap, q_chunk, k_chunk):
+    o, m, l = _blockwise_fwd_stats(q, k, v, window, softcap, q_chunk, k_chunk)
+    return o, (q, k, v, o, m, l)
+
+
+def _flash_bwd(window, softcap, q_chunk, k_chunk, res, do):
+    q, k, v, o, ms, ls = res
+    B, T, H, hd = q.shape
+    S, Kv = k.shape[1], k.shape[2]
+    g = H // Kv
+    scale = 1.0 / math.sqrt(hd)
+    io_dtype = q.dtype
+    pad_q = (-T) % q_chunk
+    pad_k = (-S) % k_chunk
+    Tq, Sk = T + pad_q, S + pad_k
+    nq, nk = Tq // q_chunk, Sk // k_chunk
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))).reshape(
+        B, nq, q_chunk, Kv, g, hd)
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))).reshape(
+        B, nk, k_chunk, Kv, hd)
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))).reshape(
+        B, nk, k_chunk, Kv, hd)
+    dop = jnp.pad(do, ((0, 0), (0, pad_q), (0, 0), (0, 0))).reshape(
+        B, nq, q_chunk, Kv, g, hd).astype(jnp.float32)
+    op = jnp.pad(o, ((0, 0), (0, pad_q), (0, 0), (0, 0))).reshape(
+        B, nq, q_chunk, Kv, g, hd).astype(jnp.float32)
+
+    # D_i = rowsum(do * o) per query row — (nq, B, Kv, g, qc)
+    D = jnp.einsum("bnqkgh,bnqkgh->nbkgq", dop, op)
+
+    def q_step(carry_none, inp):
+        qi, q_blk, do_blk, m_blk, l_blk, D_blk = inp
+        pos_q = qi * q_chunk + jnp.arange(q_chunk)
+
+        def k_step(dq_acc, kj_blk):
+            kj, k_blk, v_blk = kj_blk
+            pos_k = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = _softcap(s, softcap)
+            mask = (pos_k[None, :] <= pos_q[:, None]) & (pos_k[None, :] < S)
+            if window is not None:
+                mask &= pos_k[None, :] > (pos_q[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - m_blk[..., None]) / jnp.maximum(
+                l_blk[..., None], 1e-30)                      # (B,Kv,g,qc,kc)
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", do_blk, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - D_blk[..., None])                   # (B,Kv,g,qc,kc)
+            dv_j = jnp.einsum("bkgqs,bqkgh->bskh", p.astype(io_dtype),
+                              do_blk.astype(io_dtype),
+                              preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bkgqs,bqkgh->bskh", ds.astype(io_dtype),
+                              q_blk,
+                              preferred_element_type=jnp.float32) * scale
+            dq_acc = dq_acc + jnp.einsum(
+                "bkgqs,bskh->bqkgh", ds.astype(io_dtype), k_blk,
+                preferred_element_type=jnp.float32) * scale
+            return dq_acc, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, q_chunk, Kv, g, hd), jnp.float32)
+        ks = (jnp.arange(nk), jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0))
+        dq_blk, (dk_blks, dv_blks) = jax.lax.scan(k_step, dq0, ks)
+        return carry_none, (dq_blk, dk_blks, dv_blks)
+
+    do_q = jnp.moveaxis(dop, 1, 0).astype(io_dtype)
+    q_q = jnp.moveaxis(qp, 1, 0)
+    qs = (jnp.arange(nq), q_q, do_q, ms, ls, D)
+    _, (dq_blks, dk_parts, dv_parts) = jax.lax.scan(q_step, None, qs)
+    # dq: (nq, B, qc, Kv, g, hd) -> (B, T, H, hd)
+    dq = jnp.moveaxis(dq_blks, 0, 1).reshape(B, Tq, H, hd)[:, :T]
+    # dk/dv: (nq, nk, B, kc, Kv, hd) — sum over q chunks
+    dk = jnp.moveaxis(dk_parts.sum(0), 0, 1).reshape(B, Sk, Kv, hd)[:, :S]
+    dv = jnp.moveaxis(dv_parts.sum(0), 0, 1).reshape(B, Sk, Kv, hd)[:, :S]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention_jax.defvjp(_flash_fwd, _flash_bwd)
+
+
+# §Perf H3: flip to enable the flash custom-VJP path in blockwise attention.
+_FLASH_VJP: list = [False]
+
+
+@contextlib.contextmanager
+def flash_vjp(enabled: bool = True):
+    _FLASH_VJP.append(enabled)
+    try:
+        yield
+    finally:
+        _FLASH_VJP.pop()
+
+
+# ---------------------------------------------------------------------------
+# public: training / prefill
+# ---------------------------------------------------------------------------
+
+def attention_full(p: dict, cfg: ModelConfig, x: jax.Array,
+                   positions: Optional[jax.Array] = None,
+                   window: Optional[int] = "cfg") -> jax.Array:
+    """Causal self-attention over a whole sequence (training & prefill)."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = default_positions(B, T, cfg)
+    if window == "cfg":
+        window = cfg.sliding_window
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    q, k, v = _maybe_batchpar(q, k, v)
+    q, k, v, H_orig, kv_padded = _maybe_pad_heads(q, k, v, cfg)
+    if _HEAD_PAD_AXIS[-1] is not None and q.shape[2] % 16 == 0:
+        from jax.sharding import PartitionSpec as P
+        wsc = jax.lax.with_sharding_constraint
+        ax = _HEAD_PAD_AXIS[-1]
+        q = wsc(q, P(None, None, ax, None))
+        if kv_padded:
+            # MHA: kv heads padded too -> shard them the same way
+            k = wsc(k, P(None, None, ax, None))
+            v = wsc(v, P(None, None, ax, None))
+        else:
+            # GQA with few kv heads: replicate the (small) kv tensors so the
+            # contracting head_dim is never sharded
+            k = wsc(k, P(None, None, None, None))
+            v = wsc(v, P(None, None, None, None))
+    if T <= BLOCKWISE_THRESHOLD:
+        pos = jnp.arange(T)
+        o = _full_attention(q, k, v, pos, pos, window, cfg.attn_logit_softcap)
+    elif _FLASH_VJP[-1]:
+        o = _flash_attention_jax(q, k, v, window, cfg.attn_logit_softcap,
+                                 Q_CHUNK, K_CHUNK)
+    else:
+        o = _blockwise_attention(q, k, v, window, cfg.attn_logit_softcap)
+    o = _maybe_unpad_heads(o, cfg, H_orig, kv_padded)
+    return layers.linear(p["wo"], o.reshape(B, T, -1))
+
+
+# ---------------------------------------------------------------------------
+# decode with ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    hd = cfg.dims_per_head
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.kv_heads, hd), dtype),
+        "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def attention_decode(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                     cache: dict, window: Optional[int] = "cfg") -> tuple[jax.Array, dict]:
+    """One-token decode. x (B, 1, D); pos (B,) absolute positions.
+
+    The cache is a ring buffer: slot = pos % cache_len. Works for full causal
+    (cache_len >= max_len) and windowed decode (cache_len >= window).
+    """
+    B, one, _ = x.shape
+    assert one == 1
+    if window == "cfg":
+        window = cfg.sliding_window
+    C = cache["k"].shape[1]
+    hd = cfg.dims_per_head
+    if cfg.rope_style == "mrope":
+        positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+    else:
+        positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    slot = (pos % C).astype(jnp.int32)  # (B,)
+    upd = lambda buf, new: jax.vmap(
+        lambda b, n, s: jax.lax.dynamic_update_slice(b, n, (s, 0, 0))
+    )(buf, new, slot)
+    k_cache = upd(cache["k"], k_new.astype(cache["k"].dtype))
+    v_cache = upd(cache["v"], v_new.astype(cache["v"].dtype))
+    slot_pos = jax.vmap(lambda sp, s, pv: sp.at[s].set(pv))(cache["slot_pos"], slot, pos)
+
+    Kv, g = cfg.kv_heads, cfg.num_heads // cfg.kv_heads
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Kv, g, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qg.astype(jnp.float32), k_cache.astype(jnp.float32)) * scale
+    s = _softcap(s, cfg.attn_logit_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    if window is not None:
+        valid &= slot_pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", prob, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    y = layers.linear(p["wo"], o)
+    return y, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos}

@@ -1,0 +1,222 @@
+"""Encoder-decoder backbone (seamless-m4t-medium, arXiv:2308.11596).
+
+Transformer backbone ONLY (per carve-out): the speech frontend
+(mel-spectrogram + conv feature extractor) is stubbed — ``apply`` consumes
+precomputed frame embeddings (B, S_enc, D). Encoder = bidirectional
+self-attention; decoder = causal self-attention + cross-attention over the
+encoder memory + FFN. M4T's relative positional scheme is approximated by
+RoPE on self-attention (documented deviation; shape/FLOP-faithful).
+
+Decode: self-attn ring cache + cross-attn K/V precomputed once from memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mlp
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+
+NEG_INF = attention.NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# cross attention
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig) -> dict:
+    hd = cfg.dims_per_head
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": layers.linear_init(kq, cfg.d_model, cfg.num_heads * hd, cfg.jdtype),
+        "wk": layers.linear_init(kk, cfg.d_model, cfg.kv_heads * hd, cfg.jdtype),
+        "wv": layers.linear_init(kv, cfg.d_model, cfg.kv_heads * hd, cfg.jdtype),
+        "wo": layers.linear_init(ko, cfg.num_heads * hd, cfg.d_model, cfg.jdtype),
+    }
+
+
+def cross_kv(p, cfg: ModelConfig, memory):
+    B, S, _ = memory.shape
+    hd = cfg.dims_per_head
+    k = layers.linear(p["wk"], memory).reshape(B, S, cfg.kv_heads, hd)
+    v = layers.linear(p["wv"], memory).reshape(B, S, cfg.kv_heads, hd)
+    return k, v
+
+
+def cross_attend(p, cfg: ModelConfig, x, k, v):
+    """x (B, T, D) queries over precomputed memory K/V (B, S, Kv, hd)."""
+    B, T, _ = x.shape
+    hd = cfg.dims_per_head
+    Kv, g = cfg.kv_heads, cfg.num_heads // cfg.kv_heads
+    q = layers.linear(p["wq"], x).reshape(B, T, Kv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("btkgh,bskh->bkgts", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskh->btkgh", prob, v.astype(jnp.float32))
+    o = o.reshape(B, T, cfg.num_heads * hd).astype(x.dtype)
+    return layers.linear(p["wo"], o)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def _enc_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention.attn_init(k1, cfg),
+        "ln2": layers.norm_init(cfg.norm, cfg.d_model),
+        "ffn": mlp.mlp_init(k2, cfg),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.norm_init(cfg.norm, cfg.d_model),
+        "attn": attention.attn_init(k1, cfg),
+        "ln_x": layers.norm_init(cfg.norm, cfg.d_model),
+        "cross": cross_attn_init(k2, cfg),
+        "ln2": layers.norm_init(cfg.norm, cfg.d_model),
+        "ffn": mlp.mlp_init(k3, cfg),
+    }
+
+
+def _enc_layer(p, cfg: ModelConfig, x, positions):
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    # bidirectional: full attention without causal mask
+    B, T, _ = x.shape
+    q, k, v = attention._project_qkv(p["attn"], cfg, xn, positions)
+    pos = jnp.arange(T)
+    h = attention._full_attention(q, k, v, pos, pos, None, None, causal=False)
+    x = x + layers.linear(p["attn"]["wo"], h.reshape(B, T, -1))
+    xn = layers.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    return x + mlp.mlp(p["ffn"], cfg, xn)
+
+
+def _dec_layer(p, cfg: ModelConfig, x, positions, mem_k, mem_v):
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    x = x + attention.attention_full(p["attn"], cfg, xn, positions)
+    xn = layers.apply_norm(cfg.norm, p["ln_x"], x, cfg.norm_eps)
+    x = x + cross_attend(p["cross"], cfg, xn, mem_k, mem_v)
+    xn = layers.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    return x + mlp.mlp(p["ffn"], cfg, xn)
+
+
+# ---------------------------------------------------------------------------
+# model
+# ---------------------------------------------------------------------------
+
+def build_encdec(cfg: ModelConfig) -> Model:
+    assert cfg.encoder_layers > 0
+
+    def init(key):
+        ke, kd, kt, kn = jax.random.split(key, 4)
+        enc_keys = jax.random.split(ke, cfg.encoder_layers)
+        dec_keys = jax.random.split(kd, cfg.num_layers)
+        return {
+            "embed": layers.embed_init(kt, cfg.vocab_padded, cfg.d_model, cfg.jdtype),
+            "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+            "enc_norm": layers.norm_init(cfg.norm, cfg.d_model),
+            "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+            "final_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        }
+
+    def encode(params, frames):
+        """frames (B, S_enc, D) — stub frontend embeddings."""
+        B, S, _ = frames.shape
+        positions = attention.default_positions(B, S, cfg)
+        x = frames.astype(cfg.jdtype)
+
+        enc_fn = lambda lp, x: _enc_layer(lp, cfg, x, positions)
+        if cfg.remat:
+            enc_fn = jax.checkpoint(enc_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(x, lp):
+            return enc_fn(lp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return layers.apply_norm(cfg.norm, params["enc_norm"], x, cfg.norm_eps)
+
+    def _logits(params, x):
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+        return layers.mask_padded_vocab(layers.unembed(params["embed"], x), cfg.vocab_size)
+
+    def apply(params, tokens, frontend: Optional[jax.Array] = None,
+              last_only: bool = False):
+        """frontend = encoder frame embeddings (required)."""
+        memory = encode(params, frontend)
+        B, T = tokens.shape
+        positions = attention.default_positions(B, T, cfg)
+        x = layers.embed(params["embed"], tokens)
+
+        def dec_fn(lp, x):
+            k, v = cross_kv(lp["cross"], cfg, memory)
+            return _dec_layer(lp, cfg, x, positions, k, v)
+        if cfg.remat:
+            dec_fn = jax.checkpoint(dec_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def body(x, lp):
+            return dec_fn(lp, x), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        if last_only:
+            x = x[:, -1:]
+        return _logits(params, x), jnp.zeros((), jnp.float32)
+
+    def loss_fn(params, batch):
+        logits, aux = apply(params, batch["tokens"], batch["frontend"])
+        labels = batch["labels"]
+        mask = labels >= 0
+        safe = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def init_cache(batch: int, cache_len: int):
+        one = attention.init_attn_cache(cfg, batch, cache_len, cfg.jdtype)
+        self_cache = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape).copy(), one)
+        # cross K/V filled by prime_cache from the encoder memory
+        hd = cfg.dims_per_head
+        S = max(cache_len // 4, 8)  # encoder frames (see configs/seamless)
+        zeros = jnp.zeros((cfg.num_layers, batch, S, cfg.kv_heads, hd), cfg.jdtype)
+        return {"self": self_cache, "cross_k": zeros, "cross_v": zeros}
+
+    def prime_cache(params, cache, frames):
+        """Run the encoder once and fill the cross-attention K/V."""
+        memory = encode(params, frames)
+
+        def per_layer(lp):
+            return cross_kv(lp["cross"], cfg, memory)
+
+        ks, vs = jax.vmap(per_layer)(params["dec_layers"])
+        return {**cache, "cross_k": ks, "cross_v": vs}
+
+    def decode_step(params, cache, tokens, pos):
+        x = layers.embed(params["embed"], tokens)
+
+        def body(x, lpc):
+            lp, self_c, ck, cv = lpc
+            xn = layers.apply_norm(cfg.norm, lp["ln1"], x, cfg.norm_eps)
+            h, self_c = attention.attention_decode(lp["attn"], cfg, xn, pos, self_c)
+            x = x + h
+            xn = layers.apply_norm(cfg.norm, lp["ln_x"], x, cfg.norm_eps)
+            x = x + cross_attend(lp["cross"], cfg, xn, ck, cv)
+            xn = layers.apply_norm(cfg.norm, lp["ln2"], x, cfg.norm_eps)
+            x = x + mlp.mlp(lp["ffn"], cfg, xn)
+            return x, self_c
+
+        x, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross_k"], cache["cross_v"]))
+        return _logits(params, x), {**cache, "self": new_self}
+
+    return Model(cfg=cfg, init=init, apply=apply, loss_fn=loss_fn,
+                 init_cache=init_cache, decode_step=decode_step,
+                 prime_cache=prime_cache)

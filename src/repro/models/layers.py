@@ -1,0 +1,107 @@
+"""Functional NN primitives (no flax): params are plain nested dicts.
+
+Initializers return param dicts; apply functions are pure. All matmul params
+are created in cfg.dtype (bf16 for full configs), norms in f32 for stability.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, stddev):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": _normal(key, (d_in, d_out), dtype, 1.0 / math.sqrt(d_in))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d_model: int, dtype) -> dict:
+    # 1/sqrt(d) keeps tied-unembedding logits O(1) at init
+    return {"table": _normal(key, (vocab, d_model), dtype, 1.0 / math.sqrt(d_model))}
+
+
+def embed(p: dict, ids: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Tied unembedding (logits in f32 for a stable softmax/CE)."""
+    return x.astype(jnp.float32) @ p["table"].astype(jnp.float32).T
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(kind: str, dim: int) -> dict:
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(kind: str, p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"]).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+    raise ValueError(kind)
+
+
+def rms_head_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS norm over the last (head_dim) axis — qwen3 qk_norm."""
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations / losses
+# ---------------------------------------------------------------------------
+
+def activation(kind: str, x: jax.Array) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def mask_padded_vocab(logits: jax.Array, vocab_real: int) -> jax.Array:
+    """-inf the padded vocab columns (see ModelConfig.vocab_padded)."""
+    V = logits.shape[-1]
+    if V == vocab_real:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < vocab_real, logits, -1e30)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits (..., V) f32, labels (...) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

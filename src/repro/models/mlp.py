@@ -1,0 +1,22 @@
+"""Gated MLP (SwiGLU family) — the dense FFN used by every assigned arch."""
+from __future__ import annotations
+
+import jax
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": layers.linear_init(kg, cfg.d_model, d_ff, cfg.jdtype),
+        "up": layers.linear_init(ku, cfg.d_model, d_ff, cfg.jdtype),
+        "down": layers.linear_init(kd, d_ff, cfg.d_model, cfg.jdtype),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    h = layers.activation(cfg.act, layers.linear(p["gate"], x)) * layers.linear(p["up"], x)
+    return layers.linear(p["down"], h)

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer: top-k router + sort-based capacity dispatch.
+
+Used by mixtral-8x7b (8 experts, top-2, softmax gate) and llama4-scout
+(16 experts, top-1, sigmoid gate + always-on shared expert).
+
+Dispatch strategy (TPU-friendly, FLOP-faithful): assignments are sorted by
+expert id, each expert processes a fixed-capacity (E, C, D) buffer with a
+batched matmul — compiled FLOPs are proportional to *active* expert compute
+(C ~ N*k/E * capacity_factor), not to E * dense like the naive one-hot
+einsum. Overflowed tokens (> capacity) are dropped (standard practice); the
+router aux loss keeps load balanced so drops are rare.
+
+Expert buffers have a leading E axis that the sharding rules may place on
+the model axis (expert parallelism) or keep replicated with tensor-parallel
+experts — the hillclimb compares both.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+import contextlib
+
+# §Perf: grouped-dispatch context (set by serving/dry-run perf variants).
+# value = (groups, mesh_axis_for_group_dim or None)
+_DISPATCH_GROUPS: list = [1]
+_DISPATCH_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def grouped_dispatch(groups: int, axis: str | None = None):
+    _DISPATCH_GROUPS.append(groups)
+    _DISPATCH_AXIS.append(axis)
+    try:
+        yield
+    finally:
+        _DISPATCH_GROUPS.pop()
+        _DISPATCH_AXIS.pop()
+
+
+def current_dispatch_groups() -> int:
+    return _DISPATCH_GROUPS[-1]
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    E = cfg.num_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    d, f = cfg.d_model, cfg.d_ff
+    std_in = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    std_out = 1.0 / jnp.sqrt(f).astype(jnp.float32)
+    p = {
+        "router": layers.linear_init(kr, d, E, jnp.float32),  # router in f32
+        "gate": (jax.random.normal(kg, (E, d, f), jnp.float32) * std_in).astype(cfg.jdtype),
+        "up": (jax.random.normal(ku, (E, d, f), jnp.float32) * std_in).astype(cfg.jdtype),
+        "down": (jax.random.normal(kd, (E, f, d), jnp.float32) * std_out).astype(cfg.jdtype),
+    }
+    if cfg.shared_expert:
+        from repro.models import mlp as mlp_mod
+        p["shared"] = mlp_mod.mlp_init(ks, cfg)
+    return p
+
+
+def _router(p, cfg: ModelConfig, xf: jax.Array):
+    """Returns (weights (N, k), expert_idx (N, k), aux_loss scalar)."""
+    logits = layers.linear(p["router"], xf.astype(jnp.float32))  # (N, E)
+    k = cfg.num_experts_per_tok
+    top_logits, top_idx = jax.lax.top_k(logits, k)
+    if k == 1:
+        weights = jax.nn.sigmoid(top_logits)  # llama4-style gate
+    else:
+        weights = jax.nn.softmax(top_logits, axis=-1)  # mixtral renormalized
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = cfg.num_experts
+    assign = jax.nn.one_hot(top_idx[:, 0], E)  # primary assignment fraction
+    f_e = assign.mean(axis=0)
+    P_e = probs.mean(axis=0)
+    aux = E * jnp.sum(f_e * P_e)
+    return weights, top_idx, aux
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              dispatch_groups: int = 1) -> tuple[jax.Array, jax.Array]:
+    """x (B, T, D) -> (y (B, T, D), aux_loss).
+
+    dispatch_groups > 1 splits tokens into G independent dispatch groups
+    (vmapped); with G = the data-axis size and the group dim sharded over
+    "data", the argsort/scatter/gather become shard-local instead of
+    replicated giant scatters — §Perf hillclimb H1 iter 5. Capacity per
+    group is C/G (same total).
+    """
+    if dispatch_groups > 1:
+        B, T, D = x.shape
+        N = B * T
+        G = dispatch_groups
+        assert N % G == 0, (N, G)
+        xg = x.reshape(G, 1, N // G, D)
+        if _DISPATCH_AXIS[-1] is not None:
+            from jax.sharding import PartitionSpec as P
+            xg = jax.lax.with_sharding_constraint(
+                xg, P(_DISPATCH_AXIS[-1], None, None, None))
+        yg, auxg = jax.vmap(lambda xx: moe_apply(p, cfg, xx, 1))(xg)
+        return yg.reshape(B, T, D), jnp.mean(auxg)
+
+    B, T, D = x.shape
+    N = B * T
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(N, D)
+
+    weights, top_idx, aux = _router(p, cfg, xf)
+
+    # capacity per expert (static)
+    C = int(max(1, round(N * k / E * cfg.moe_capacity_factor)))
+    C = min(C, N)
+
+    # ---- sort assignments by expert ----
+    Nk = N * k
+    eid = top_idx.reshape(Nk)
+    tok = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+    wgt = weights.reshape(Nk)
+    order = jnp.argsort(eid, stable=True)
+    eid_s, tok_s, wgt_s = eid[order], tok[order], wgt[order]
+
+    # position of each assignment within its expert group
+    starts = jnp.searchsorted(eid_s, jnp.arange(E), side="left")
+    pos_s = jnp.arange(Nk, dtype=jnp.int32) - starts[eid_s].astype(jnp.int32)
+    keep = pos_s < C
+    slot = jnp.where(keep, pos_s, C)  # overflow slot C is discarded
+
+    # ---- scatter tokens into (E, C+1, D) buffers ----
+    buf = jnp.zeros((E, C + 1, D), x.dtype)
+    buf = buf.at[eid_s, slot].set(xf[tok_s].astype(x.dtype), mode="drop")
+    buf = buf[:, :C]  # (E, C, D)
+
+    # ---- expert FFN: batched SwiGLU over the expert axis ----
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["up"]
+    )
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])  # (E, C, D)
+
+    # ---- gather back + weighted combine ----
+    y_assign = y_buf[eid_s, jnp.minimum(slot, C - 1)]
+    y_assign = jnp.where(keep[:, None], y_assign, 0.0) * wgt_s[:, None].astype(x.dtype)
+    y = jnp.zeros((N, D), x.dtype).at[tok_s].add(y_assign)
+
+    if cfg.shared_expert:
+        from repro.models import mlp as mlp_mod
+        y = y + mlp_mod.mlp(p["shared"], cfg, xf)
+    return y.reshape(B, T, D), aux * cfg.router_aux_coef

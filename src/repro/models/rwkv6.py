@@ -1,0 +1,175 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892) — attention-free, data-dependent decay.
+
+Time mixing: token-shift interpolation with data-dependent (LoRA) mix
+coefficients, multi-head WKV recurrence with per-channel *input-dependent*
+decay w_t = exp(-exp(w0 + lora(x))) — the paper's headline feature — and a
+bonus term u for the current token. Channel mixing: squared-ReLU FFN with
+token shift.
+
+The WKV recurrence is a lax.scan over time (the pure-JAX reference; the
+chunked Pallas kernel is a perf-phase swap-in). Decode carries
+(wkv_state (B,H,K,V), shift states) — O(1) per token, which is why rwkv6
+legitimately runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+LORA_RANK = 32
+
+
+def _lora_init(key, d_in, d_out, rank, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "a": (jax.random.normal(k1, (d_in, rank), jnp.float32) * 0.01).astype(dtype),
+        "b": jnp.zeros((rank, d_out), dtype),
+    }
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def time_mix_init(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = D // K
+    ks = jax.random.split(key, 12)
+    dt = cfg.jdtype
+    p = {
+        "mu": jnp.full((5, D), 0.5, jnp.float32),          # base mix for w,k,v,r,g
+        "lora_mix": _lora_init(ks[0], D, 5 * D, LORA_RANK, jnp.float32),
+        "w0": jnp.zeros((D,), jnp.float32) - 0.5,           # base decay
+        "lora_w": _lora_init(ks[1], D, D, 2 * LORA_RANK, jnp.float32),
+        "u": jnp.zeros((H, K), jnp.float32) + 0.1,          # bonus
+        "wr": layers.linear_init(ks[2], D, D, dt),
+        "wk": layers.linear_init(ks[3], D, D, dt),
+        "wv": layers.linear_init(ks[4], D, D, dt),
+        "wg": layers.linear_init(ks[5], D, D, dt),
+        "wo": layers.linear_init(ks[6], D, D, dt),
+        "ln_x": jnp.ones((D,), jnp.float32),                # per-head group norm scale
+    }
+    return p
+
+
+def _wkv_scan(r, k, v, w, u, state0):
+    """Multi-head WKV. r,k,w (B,T,H,K); v (B,T,H,K); u (H,K); state0 (B,H,K,K_v).
+
+    y_t = r_t^T (S + u ⊙ k_t v_t^T);  S <- diag(w_t) S + k_t v_t^T
+    (all in f32; head value dim == key dim K).
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]            # (B,H,K,K)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1), state                      # (B,T,H,K), (B,H,K,K)
+
+
+def _shift(x, x_prev):
+    """Token shift: concat last-step feature, drop final. x (B,T,D)."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def time_mix(p, cfg: ModelConfig, x, x_prev, wkv_state):
+    """x (B,T,D); x_prev (B,D) shift carry; wkv_state (B,H,K,K)."""
+    B, T, D = x.shape
+    K = cfg.rwkv_head_dim
+    H = D // K
+    xf = x.astype(jnp.float32)
+    xx = _shift(xf, x_prev) - xf                               # (B,T,D)
+
+    base = xf + xx * p["mu"][0]
+    mixes = _lora(p["lora_mix"], base).reshape(B, T, 5, D)
+    def mixed(i):
+        return (xf + xx * (p["mu"][i] + mixes[:, :, i])).astype(cfg.jdtype)
+    x_w, x_k, x_v, x_r, x_g = (mixed(i) for i in range(5))
+
+    r = layers.linear(p["wr"], x_r).reshape(B, T, H, K).astype(jnp.float32)
+    k = layers.linear(p["wk"], x_k).reshape(B, T, H, K).astype(jnp.float32)
+    v = layers.linear(p["wv"], x_v).reshape(B, T, H, K).astype(jnp.float32)
+    g = jax.nn.silu(layers.linear(p["wg"], x_g).astype(jnp.float32))
+
+    # data-dependent decay (the Finch contribution)
+    w_log = p["w0"] + _lora(p["lora_w"], x_w.astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(w_log)).reshape(B, T, H, K)
+
+    y, new_state = _wkv_scan(r, k, v, w, p["u"], wkv_state)
+    y = y.reshape(B, T, D)
+    # per-head group norm
+    y = y.reshape(B, T, H, K)
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), axis=-1, keepdims=True) + 64e-5)
+    y = (y.reshape(B, T, D) * p["ln_x"]) * g
+    out = layers.linear(p["wo"], y.astype(cfg.jdtype))
+    return out, xf[:, -1], new_state
+
+
+def channel_mix_init(key, cfg: ModelConfig) -> dict:
+    kk, kr, kv = jax.random.split(key, 3)
+    dt = cfg.jdtype
+    return {
+        "mu_k": jnp.full((cfg.d_model,), 0.5, jnp.float32),
+        "mu_r": jnp.full((cfg.d_model,), 0.5, jnp.float32),
+        "wk": layers.linear_init(kk, cfg.d_model, cfg.d_ff, dt),
+        "wr": layers.linear_init(kr, cfg.d_model, cfg.d_model, dt),
+        "wv": layers.linear_init(kv, cfg.d_ff, cfg.d_model, dt),
+    }
+
+
+def channel_mix(p, cfg: ModelConfig, x, x_prev):
+    xf = x.astype(jnp.float32)
+    xx = _shift(xf, x_prev) - xf
+    xk = (xf + xx * p["mu_k"]).astype(cfg.jdtype)
+    xr = (xf + xx * p["mu_r"]).astype(cfg.jdtype)
+    k = jnp.square(jax.nn.relu(layers.linear(p["wk"], xk)))
+    kv = layers.linear(p["wv"], k)
+    out = jax.nn.sigmoid(layers.linear(p["wr"], xr).astype(jnp.float32)).astype(cfg.jdtype) * kv
+    return out, xf[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (train + decode share code paths: decode is T == 1)
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": layers.norm_init("layernorm", cfg.d_model),
+        "tm": time_mix_init(k1, cfg),
+        "ln2": layers.norm_init("layernorm", cfg.d_model),
+        "cm": channel_mix_init(k2, cfg),
+    }
+
+
+def block_apply(p, cfg: ModelConfig, x, state):
+    """state = {'tm_shift' (B,D), 'cm_shift' (B,D), 'wkv' (B,H,K,K)}."""
+    h, tm_shift, wkv = time_mix(
+        p["tm"], cfg, layers.apply_norm("layernorm", p["ln1"], x, cfg.norm_eps),
+        state["tm_shift"], state["wkv"],
+    )
+    x = x + h
+    h, cm_shift = channel_mix(
+        p["cm"], cfg, layers.apply_norm("layernorm", p["ln2"], x, cfg.norm_eps),
+        state["cm_shift"],
+    )
+    x = x + h
+    return x, {"tm_shift": tm_shift, "cm_shift": cm_shift, "wkv": wkv}
+
+
+def init_block_state(cfg: ModelConfig, batch: int) -> dict:
+    D = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = D // K
+    return {
+        "tm_shift": jnp.zeros((batch, D), jnp.float32),
+        "cm_shift": jnp.zeros((batch, D), jnp.float32),
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+    }

@@ -1,0 +1,289 @@
+"""Decoder-only model assembly for every non-enc-dec family.
+
+Families:
+  dense        — attn + SwiGLU          (qwen2-7b, minicpm, internlm2, qwen3, qwen2-vl)
+  moe          — attn + MoE             (mixtral, llama4-scout)
+  rwkv6        — RWKV6 blocks           (rwkv6-3b)
+  rglru_hybrid — (rec, rec, attn) + MLP (recurrentgemma)
+
+Homogeneous families scan over stacked layer params (compact HLO at 64
+layers); the hybrid pattern loops python-side. Multimodal archs (vlm/audio
+decoder-only) consume stub frontend embeddings via early fusion: the first
+``frontend_tokens`` positions of the sequence are replaced by the provided
+embeddings and masked out of the loss.
+
+The public surface is ``build_model(cfg) -> Model`` with pure functions:
+  init(key) -> params
+  apply(params, tokens, frontend=None) -> (logits, aux_loss)
+  loss_fn(params, batch) -> (loss, metrics)
+  init_cache(batch, cache_len) -> cache
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, mlp, moe, rglru, rwkv6
+from repro.models.config import ModelConfig
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Any
+    apply: Any
+    loss_fn: Any
+    init_cache: Any
+    decode_step: Any
+    prime_cache: Any = None  # enc-dec only: fill cross-attn K/V from encoder
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply by family
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "rwkv":
+        return rwkv6.block_init(key, cfg)
+    p = {"ln1": layers.norm_init(cfg.norm, cfg.d_model),
+         "ln2": layers.norm_init(cfg.norm, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = attention.attn_init(k1, cfg)
+        p["ffn"] = mlp.mlp_init(k2, cfg)
+    elif kind == "moe":
+        p["attn"] = attention.attn_init(k1, cfg)
+        p["moe"] = moe.moe_init(k2, cfg)
+    elif kind == "rec":
+        p["rec"] = rglru.recurrent_block_init(k1, cfg)
+        p["ffn"] = mlp.mlp_init(k2, cfg)
+    elif kind == "local_attn":
+        p["attn"] = attention.attn_init(k1, cfg)
+        p["ffn"] = mlp.mlp_init(k2, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# §Perf: sequence-parallel residual stream (Megatron-SP). Constraining the
+# between-layer activations to be TIME-sharded over the model axis turns the
+# 2-per-layer full all-reduces of (B, T, D) partial sums into
+# reduce-scatter + all-gather pairs (half the bytes, and the norm/elementwise
+# region runs on 1/16th of the tokens per chip).
+import contextlib
+
+_SP_RESIDUAL_AXIS: list = [None]
+
+
+@contextlib.contextmanager
+def sp_residual(axis: str | None):
+    _SP_RESIDUAL_AXIS.append(axis)
+    try:
+        yield
+    finally:
+        _SP_RESIDUAL_AXIS.pop()
+
+
+def _maybe_sp(x):
+    axis = _SP_RESIDUAL_AXIS[-1]
+    if axis is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(None, axis, None))
+
+
+def _layer_apply(p, cfg: ModelConfig, kind: str, x, positions):
+    """Full-sequence (train/prefill) layer. Returns (x, aux)."""
+    x = _maybe_sp(x)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "rwkv":
+        state = rwkv6.init_block_state(cfg, x.shape[0])
+        x, _ = rwkv6.block_apply(p, cfg, x, state)
+        return x, aux
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "moe"):
+        h = attention.attention_full(p["attn"], cfg, xn, positions)
+    elif kind == "local_attn":
+        h = attention.attention_full(p["attn"], cfg, xn, positions,
+                                     window=cfg.local_attn_window)
+    elif kind == "rec":
+        st = rglru.init_recurrent_state(cfg, x.shape[0])
+        h, _ = rglru.recurrent_block_apply(p["rec"], cfg, xn, st)
+    x = x + h
+    xn = layers.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        h, aux = moe.moe_apply(p["moe"], cfg, xn,
+                               dispatch_groups=moe.current_dispatch_groups())
+    else:
+        h = mlp.mlp(p["ffn"], cfg, xn)
+    return x + h, aux
+
+
+def _layer_decode(p, cfg: ModelConfig, kind: str, x, pos, cache):
+    """One-token decode layer. Returns (x, new_cache)."""
+    if kind == "rwkv":
+        return rwkv6.block_apply(p, cfg, x, cache)  # T == 1 works natively
+    xn = layers.apply_norm(cfg.norm, p["ln1"], x, cfg.norm_eps)
+    if kind in ("attn", "moe"):
+        h, cache_attn = attention.attention_decode(p["attn"], cfg, xn, pos, cache["attn"])
+        cache = {**cache, "attn": cache_attn}
+    elif kind == "local_attn":
+        h, cache_attn = attention.attention_decode(
+            p["attn"], cfg, xn, pos, cache["attn"], window=cfg.local_attn_window)
+        cache = {**cache, "attn": cache_attn}
+    elif kind == "rec":
+        h, rec_state = rglru.recurrent_block_step(p["rec"], cfg, xn, cache["rec"])
+        cache = {**cache, "rec": rec_state}
+    x = x + h
+    xn = layers.apply_norm(cfg.norm, p["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        h, _ = moe.moe_apply(p["moe"], cfg, xn)
+    else:
+        h = mlp.mlp(p["ffn"], cfg, xn)
+    return x + h, cache
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    if kind == "rwkv":
+        return rwkv6.init_block_state(cfg, batch)
+    c = {}
+    if kind in ("attn", "moe"):
+        c["attn"] = attention.init_attn_cache(cfg, batch, cache_len, cfg.jdtype)
+    elif kind == "local_attn":
+        c["attn"] = attention.init_attn_cache(
+            cfg, batch, min(cache_len, cfg.local_attn_window), cfg.jdtype)
+    elif kind == "rec":
+        c["rec"] = rglru.init_recurrent_state(cfg, batch)
+    return c
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "dense":
+        return ["attn"] * cfg.num_layers
+    if cfg.family == "moe":
+        return ["moe"] * cfg.num_layers
+    if cfg.family == "rwkv6":
+        return ["rwkv"] * cfg.num_layers
+    if cfg.family == "rglru_hybrid":
+        pat = cfg.hybrid_pattern
+        kinds = [("rec" if pat[i % len(pat)] == "rec" else "local_attn")
+                 for i in range(cfg.num_layers)]
+        return kinds
+    raise ValueError(cfg.family)
+
+
+def _is_homogeneous(cfg: ModelConfig) -> bool:
+    kinds = layer_kinds(cfg)
+    return cfg.scan_layers and all(k == kinds[0] for k in kinds)
+
+
+# ---------------------------------------------------------------------------
+# model builder
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig) -> Model:
+    kinds = layer_kinds(cfg)
+    homogeneous = _is_homogeneous(cfg)
+
+    # ---- init ----
+    def init(key) -> dict:
+        k_embed, k_layers, k_out = jax.random.split(key, 3)
+        params = {
+            "embed": layers.embed_init(k_embed, cfg.vocab_padded, cfg.d_model, cfg.jdtype),
+            "final_norm": layers.norm_init(cfg.norm, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = layers.linear_init(k_out, cfg.d_model, cfg.vocab_padded, cfg.jdtype)
+        if homogeneous:
+            keys = jax.random.split(k_layers, cfg.num_layers)
+            params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg, kinds[0]))(keys)
+        else:
+            keys = jax.random.split(k_layers, cfg.num_layers)
+            params["layers"] = [
+                _layer_init(keys[i], cfg, kinds[i]) for i in range(cfg.num_layers)
+            ]
+        return params
+
+    def _logits(params, x):
+        x = layers.apply_norm(cfg.norm, params["final_norm"], x, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = layers.unembed(params["embed"], x)
+        else:
+            logits = layers.linear(params["unembed"], x).astype(jnp.float32)
+        return layers.mask_padded_vocab(logits, cfg.vocab_size)
+
+    def _embed_inputs(params, tokens, frontend):
+        x = layers.embed(params["embed"], tokens)
+        if cfg.frontend is not None and frontend is not None:
+            ft = frontend.shape[1]
+            x = jnp.concatenate([frontend.astype(x.dtype), x[:, ft:]], axis=1)
+        return x
+
+    # ---- full-sequence apply ----
+    def apply(params, tokens, frontend: Optional[jax.Array] = None,
+              last_only: bool = False):
+        """last_only: return logits for the final position only — prefill
+        never needs the (B, T, V) logits tensor (§Perf hillclimb 1)."""
+        B, T = tokens.shape
+        x = _embed_inputs(params, tokens, frontend)
+        positions = attention.default_positions(B, T, cfg)
+        layer_fn = lambda lp, k, x: _layer_apply(lp, cfg, k, x, positions)
+        if cfg.remat:
+            layer_fn = jax.checkpoint(layer_fn, static_argnums=(1,),
+                                      policy=jax.checkpoint_policies.nothing_saveable)
+        if homogeneous:
+            def body(x, layer_p):
+                x, aux = layer_fn(layer_p, kinds[0], x)
+                return x, aux
+            x, auxes = jax.lax.scan(body, x, params["layers"])
+            aux = jnp.sum(auxes)
+        else:
+            aux = jnp.zeros((), jnp.float32)
+            for i, lp in enumerate(params["layers"]):
+                x, a = layer_fn(lp, kinds[i], x)
+                aux = aux + a
+        if last_only:
+            x = x[:, -1:]
+        return _logits(params, x), aux
+
+    # ---- loss ----
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        frontend = batch.get("frontend")
+        logits, aux = apply(params, tokens, frontend)
+        mask = (labels >= 0)
+        labels_safe = jnp.maximum(labels, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+        ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    # ---- decode ----
+    def init_cache(batch: int, cache_len: int):
+        if homogeneous:
+            one = _layer_cache(cfg, kinds[0], batch, cache_len)
+            return jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape).copy(), one)
+        return [_layer_cache(cfg, kinds[i], batch, cache_len) for i in range(cfg.num_layers)]
+
+    def decode_step(params, cache, tokens, pos):
+        """tokens (B, 1) int32; pos (B,) absolute positions."""
+        x = layers.embed(params["embed"], tokens)
+        if homogeneous:
+            def body(x, layer_pc):
+                layer_p, layer_c = layer_pc
+                x, new_c = _layer_decode(layer_p, cfg, kinds[0], x, pos, layer_c)
+                return x, new_c
+            x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        else:
+            new_cache = []
+            for i, lp in enumerate(params["layers"]):
+                x, c = _layer_decode(lp, cfg, kinds[i], x, pos, cache[i])
+                new_cache.append(c)
+        return _logits(params, x), new_cache
+
+    return Model(cfg=cfg, init=init, apply=apply, loss_fn=loss_fn,
+                 init_cache=init_cache, decode_step=decode_step)

@@ -1,0 +1,6 @@
+"""Optimizers + LR schedules (self-contained; no optax in this container)."""
+from repro.optim.optimizers import sgd, adamw, apply_updates, Optimizer
+from repro.optim.schedules import constant, cosine, warmup_cosine, wsd
+
+__all__ = ["sgd", "adamw", "apply_updates", "Optimizer",
+           "constant", "cosine", "warmup_cosine", "wsd"]

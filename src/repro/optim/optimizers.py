@@ -1,0 +1,69 @@
+"""Minimal optax-style optimizers: init/update pairs over pytrees.
+
+Used for the non-private all-reduce baseline runs; the paper's OMD/GossipDP
+optimizer lives in repro.core (it needs the mixing/noise stage between the
+gradient and the parameter update).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr_schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        lr = lr_schedule(state["step"])
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+            return upd, {"step": state["step"] + 1, "mu": mu}
+        upd = jax.tree_util.tree_map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return upd, {"step": state["step"] + 1, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_schedule(state["step"])
+        f32 = lambda g: g.astype(jnp.float32)
+        m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * f32(g), state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(f32(g)),
+                                   state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

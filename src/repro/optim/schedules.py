@@ -1,0 +1,37 @@
+"""LR schedules. ``wsd`` is the MiniCPM warmup-stable-decay schedule
+[arXiv:2404.06395] used by the minicpm-2b recipe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+    def f(step):
+        w = jnp.clip(step / jnp.maximum(warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return f
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int, final_frac: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, flat stable phase,
+    exponential-ish decay over the last `decay` steps."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = lr * (final_frac ** t)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, lr, dec))
+    return f

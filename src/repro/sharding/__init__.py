@@ -1,0 +1,6 @@
+from repro.sharding.rules import (
+    param_pspecs, batch_pspec, cache_pspecs, with_node_axis, NODE_AXES, MODEL_AXIS,
+)
+
+__all__ = ["param_pspecs", "batch_pspec", "cache_pspecs", "with_node_axis",
+           "NODE_AXES", "MODEL_AXIS"]

@@ -1,0 +1,189 @@
+"""Sharding rules: parameter-path regex -> PartitionSpec.
+
+2D layout on the ("data", "model") mesh (+"pod" in front on the multi-pod
+mesh). Tensor parallelism over "model":
+  * embed/unembed: vocab axis sharded (Megatron-style)
+  * attention: head projections sharded on the head (output) axis, wo on
+    its input axis
+  * FFN: up/gate sharded on d_ff out, down on d_ff in
+  * MoE expert stacks: sharded on the d_ff axis within each expert
+    (tensor-parallel experts; expert-parallel is the hillclimb variant)
+  * norms / small vectors: replicated
+Under GossipDP every param leaf gains a LEADING node axis, sharded over the
+gossip mesh axes ("data", or ("pod",) multi-pod) — see core/gossip.py.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MODEL_AXIS = "model"
+NODE_AXES = {"single": ("data",), "multi": ("pod",)}
+
+# (regex over flattened path, spec builder given leaf ndim)
+_RULES: list[tuple[str, Any]] = [
+    # embedding / unembedding — shard the vocab axis
+    (r"embed/table$", lambda nd: P(MODEL_AXIS, None)),
+    (r"unembed/w$", lambda nd: P(None, MODEL_AXIS)),
+    # attention projections
+    (r"(attn|cross)/w[qkv]/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"(attn|cross)/w[qkv]/b$", lambda nd: P(MODEL_AXIS)),
+    (r"(attn|cross)/wo/w$", lambda nd: P(MODEL_AXIS, None)),
+    # dense FFN
+    (r"(ffn|shared)/(gate|up)/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"(ffn|shared)/down/w$", lambda nd: P(MODEL_AXIS, None)),
+    # MoE expert stacks (E, d, f) / (E, f, d): shard f
+    (r"moe/(gate|up)$", lambda nd: P(None, None, MODEL_AXIS)),
+    (r"moe/down$", lambda nd: P(None, MODEL_AXIS, None)),
+    (r"moe/router/w$", lambda nd: P(None, None)),
+    # RWKV6 matrices (D, D) / (D, F)
+    (r"tm/w[rkvgo]/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"cm/wk/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"cm/wv/w$", lambda nd: P(MODEL_AXIS, None)),
+    (r"cm/wr/w$", lambda nd: P(None, MODEL_AXIS)),
+    # RG-LRU blocks
+    (r"rec/(gate|inp)/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"rec/out/w$", lambda nd: P(MODEL_AXIS, None)),
+    (r"rec/lru/w[ax]/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"rec/lru/w[ax]/b$", lambda nd: P(MODEL_AXIS)),
+    (r"rec/lru/lam$", lambda nd: P(MODEL_AXIS)),
+    (r"rec/conv/w$", lambda nd: P(None, MODEL_AXIS)),
+    (r"rec/conv/b$", lambda nd: P(MODEL_AXIS)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(re.sub(r"[^\w]", "", str(p)))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, leaf) -> P:
+    for pattern, builder in _RULES:
+        if re.search(pattern, path_str):
+            spec = builder(leaf.ndim)
+            # layer-stacked params have a leading L axis -> prepend None
+            extra = leaf.ndim - len(spec)
+            if extra > 0:
+                spec = P(*([None] * extra + list(spec)))
+            return spec
+    return P()  # replicate
+
+
+def _axis_size(mesh, axis) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _sanitize(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Drop (or relocate) mesh axes whose size doesn't divide the dim.
+
+    Non-divisible cases (odd vocabs like 122753) first try the OTHER dim of
+    a 2D param; otherwise the dim is replicated.
+    """
+    if mesh is None:
+        return spec
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    for i, ax in enumerate(dims):
+        if ax is None:
+            continue
+        if shape[i] % _axis_size(mesh, ax) != 0:
+            dims[i] = None
+            # fallback: move to another free, divisible dim — LATER dims
+            # first (e.g. kv_heads 8 % 16 != 0 -> shard head_dim), never a
+            # leading layer-stack dim (sharding L would all-gather every
+            # scan iteration; found via the roofline table, see EXPERIMENTS)
+            for j in list(range(i + 1, len(dims))) + list(range(i - 1, -1, -1)):
+                if dims[j] is None and shape[j] % _axis_size(mesh, ax) == 0 \
+                        and shape[j] >= _axis_size(mesh, ax):
+                    dims[j] = ax
+                    break
+    while dims and dims[-1] is None:
+        dims.pop()
+    return P(*dims)
+
+
+def param_pspecs(params: Any, node_axes: tuple[str, ...] = (), mesh=None) -> Any:
+    """PartitionSpec tree for a param tree. node_axes prepends the gossip
+    node dimension's axes (params must already carry the leading node dim).
+    Pass ``mesh`` to validate divisibility (falls back per _sanitize)."""
+    if node_axes:
+        # leaf.ndim includes the node axis; spec computed on ndim-1
+        def one_node(path, leaf):
+            class _V:  # shim: rules see the per-node ndim
+                ndim = leaf.ndim - 1
+            spec = _sanitize(spec_for(_path_str(path), _V), leaf.shape[1:], mesh)
+            inner = list(spec) + [None] * (leaf.ndim - 1 - len(spec))
+            return P(node_axes if len(node_axes) > 1 else node_axes[0], *inner)
+        return jax.tree_util.tree_map_with_path(one_node, params)
+
+    def one(path, leaf):
+        return _sanitize(spec_for(_path_str(path), leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_pspec(batch_axes: tuple[str, ...], ndim: int) -> P:
+    """Batch arrays: leading axis over the data axes, rest replicated."""
+    lead = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def cache_pspecs(cache: Any, batch_axes: tuple[str, ...], mesh=None) -> Any:
+    """KV caches: (L, B, ...) or (B, ...) — shard the batch dim over data
+    axes; attention head dims over model where shaped like (.., kv, hd).
+    Pass ``mesh`` to drop non-divisible axes (e.g. 40 WKV heads on a
+    16-way model axis)."""
+    lead = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        # caches from init_cache are stacked (L, B, ...) for scan models,
+        # plain (B, ...) inside per-layer lists; the -k indexing below works
+        # for both.
+        if re.search(r"(^|/)(k|v|cross_k|cross_v)$", ps) and leaf.ndim >= 4:
+            # (..., B, C, kv, hd): shard B over data, kv over model
+            spec = [None] * leaf.ndim
+            spec[-4] = lead
+            spec[-2] = MODEL_AXIS
+            return _sanitize(P(*spec), leaf.shape, mesh)
+        if re.search(r"wkv$", ps) and leaf.ndim >= 4:
+            spec = [None] * leaf.ndim
+            spec[-4] = lead
+            spec[-3] = MODEL_AXIS  # heads
+            return _sanitize(P(*spec), leaf.shape, mesh)
+        if re.search(r"/conv$", ps) and leaf.ndim >= 3:
+            # (.., B, W-1, R): batch at -3
+            spec = [None] * leaf.ndim
+            spec[-3] = lead
+            return _sanitize(P(*spec), leaf.shape, mesh)
+        if re.search(r"(slot_pos|tm_shift|cm_shift|^h$|/h$)", ps) and leaf.ndim >= 2:
+            # (.., B, X): batch at -2
+            spec = [None] * leaf.ndim
+            spec[-2] = lead
+            return _sanitize(P(*spec), leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def with_node_axis(tree: Any, nodes: int) -> Any:
+    """Tile a param tree with a leading node axis (replicated start state)."""
+    import jax.numpy as jnp
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (nodes,) + l.shape), tree)

@@ -1,0 +1,9 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device; distributed tests spawn subprocesses with their own flags."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,109 @@
+"""Behavioural tests of the paper's Algorithm 1 (simulator)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.core.regret import best_fixed_hinge, cumulative_regret, theorem2_bound
+from repro.data.social import SocialStream
+
+
+def _stream(m=8, n=64, T=300, seed=0):
+    s = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.2, seed=seed)
+    return s.chunk(0, T)
+
+
+def _run(eps, m=8, n=64, T=300, lam=1e-3, topology="ring", seed=1):
+    xs, ys = _stream(m, n, T)
+    alg = Algorithm1(
+        graph=GossipGraph.make(topology, m),
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=lam),
+        privacy=PrivacyConfig(eps=eps, L=1.0),
+        n=n,
+    )
+    outs = alg.run(jax.random.PRNGKey(seed), xs, ys)
+    return xs, ys, outs
+
+
+def test_nonprivate_learns():
+    _, _, outs = _run(math.inf)
+    acc = float(outs.correct[-100:].mean())
+    assert acc > 0.8, acc
+
+
+def test_regret_sublinear_nonprivate():
+    xs, ys, outs = _run(math.inf, T=400)
+    reg = cumulative_regret(outs.w_bar_loss, xs, ys, 8)
+    # average regret decreasing over time = sublinear
+    assert reg[-1] / 400 < reg[100] / 100 + 1e-6
+
+
+def test_privacy_hurts_monotonically():
+    accs = {}
+    for eps in (0.5, 5.0, math.inf):
+        _, _, outs = _run(eps)
+        accs[eps] = float(outs.correct[-100:].mean())
+    assert accs[math.inf] >= accs[5.0] - 0.05
+    assert accs[5.0] >= accs[0.5] - 0.05
+    assert accs[math.inf] > accs[0.5]  # strictly: heavy noise must hurt
+
+
+def test_topology_invariance_paper_fig3():
+    """Fig. 3: topology makes no *significant* difference."""
+    finals = []
+    for topo in ("ring", "complete", "hypercube"):
+        _, _, outs = _run(math.inf, topology=topo)
+        finals.append(float(outs.correct[-100:].mean()))
+    assert max(finals) - min(finals) < 0.1, finals
+
+
+def test_lasso_induces_sparsity():
+    _, _, outs_dense = _run(math.inf, lam=0.0)
+    _, _, outs_sparse = _run(math.inf, lam=0.3)
+    assert float(outs_sparse.sparsity[-1]) > float(outs_dense.sparsity[-1])
+    assert float(outs_sparse.sparsity[-1]) > 0.05
+
+
+def test_consensus_under_mixing():
+    """Ring-mixed nodes end closer together than disconnected ones."""
+    xs, ys = _stream()
+    def spread(topology):
+        alg = Algorithm1(
+            graph=GossipGraph.make(topology, 8),
+            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-3),
+            privacy=PrivacyConfig(eps=math.inf, L=1.0),
+            n=64,
+        )
+        w, _ = alg.final_params(jax.random.PRNGKey(0), xs, ys)
+        return float(jnp.linalg.norm(w - w.mean(0, keepdims=True)))
+    assert spread("ring") < spread("disconnected")
+
+
+def test_time_varying_topology_runs():
+    xs, ys = _stream()
+    alg = Algorithm1(
+        graph=GossipGraph.make("time_varying", 8),
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-3),
+        privacy=PrivacyConfig(eps=1.0, L=1.0),
+        n=64,
+    )
+    outs = alg.run(jax.random.PRNGKey(0), xs, ys)
+    assert np.isfinite(np.asarray(outs.loss)).all()
+
+
+def test_theorem2_bound_shape():
+    b_lo = theorem2_bound(1000, 64, 10_000, 1.0, 0.01, 2.0, eps=0.1)
+    b_hi = theorem2_bound(1000, 64, 10_000, 1.0, 0.01, 2.0, eps=10.0)
+    b_np = theorem2_bound(1000, 64, 10_000, 1.0, 0.01, 2.0, eps=math.inf)
+    assert b_lo > b_hi > b_np > 0  # higher privacy (smaller eps) = worse bound
+
+
+def test_best_fixed_comparator_quality():
+    xs, ys = _stream(T=200)
+    w = best_fixed_hinge(xs, ys, steps=300)
+    margins = ys * jnp.einsum("n,tmn->tm", w, xs)
+    acc = float((margins > 0).mean())
+    assert acc > 0.9

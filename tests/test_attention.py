@@ -1,0 +1,148 @@
+"""Attention-substrate correctness: blockwise==full, GQA, windows, M-RoPE,
+decode ring cache == full-sequence apply."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention
+from repro.models.config import ModelConfig
+
+
+def _cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=1, d_model=64,
+                num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=64,
+                dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _qkv(cfg, B=2, T=64, seed=0):
+    key = jax.random.PRNGKey(seed)
+    p = attention.attn_init(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, T, cfg.d_model))
+    return p, x
+
+
+def test_blockwise_equals_full():
+    cfg = _cfg()
+    p, x = _qkv(cfg, T=256)
+    pos = attention.default_positions(2, 256, cfg)
+    q, k, v = attention._project_qkv(p, cfg, x, pos)
+    o_full = attention._full_attention(q, k, v, jnp.arange(256), jnp.arange(256),
+                                       None, None)
+    o_block = attention._blockwise_attention(q, k, v, None, None,
+                                             q_chunk=64, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_block),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_equals_full_with_window():
+    cfg = _cfg()
+    p, x = _qkv(cfg, T=256)
+    pos = attention.default_positions(2, 256, cfg)
+    q, k, v = attention._project_qkv(p, cfg, x, pos)
+    o_full = attention._full_attention(q, k, v, jnp.arange(256), jnp.arange(256),
+                                       64, None)
+    o_block = attention._blockwise_attention(q, k, v, 64, None,
+                                             q_chunk=32, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_block),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_nondivisible_lengths():
+    cfg = _cfg()
+    p, x = _qkv(cfg, T=100)
+    pos = attention.default_positions(2, 100, cfg)
+    q, k, v = attention._project_qkv(p, cfg, x, pos)
+    o_full = attention._full_attention(q, k, v, jnp.arange(100), jnp.arange(100),
+                                       None, None)
+    o_block = attention._blockwise_attention(q, k, v, None, None,
+                                             q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_block),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_gqa_equals_repeated_kv_mha():
+    """GQA grouped computation == MHA with explicitly repeated K/V heads."""
+    cfg = _cfg(num_heads=4, num_kv_heads=2)
+    p, x = _qkv(cfg)
+    pos = attention.default_positions(2, 64, cfg)
+    q, k, v = attention._project_qkv(p, cfg, x, pos)
+    o = attention._full_attention(q, k, v, jnp.arange(64), jnp.arange(64), None, None)
+    # repeat kv to full heads and compute with Kv == H
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    o_rep = attention._full_attention(q, k_rep, v_rep, jnp.arange(64),
+                                      jnp.arange(64), None, None)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_rep), rtol=2e-4, atol=1e-5)
+
+
+def test_causality():
+    """Changing future tokens must not change past outputs."""
+    cfg = _cfg()
+    p, x = _qkv(cfg, T=32)
+    pos = attention.default_positions(2, 32, cfg)
+    y1 = attention.attention_full(p, cfg, x, pos)
+    x2 = x.at[:, 20:].set(99.0)
+    y2 = attention.attention_full(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(y1[:, :20]), np.asarray(y2[:, :20]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_limits_receptive_field():
+    cfg = _cfg(sliding_window=8)
+    p, x = _qkv(cfg, T=32)
+    pos = attention.default_positions(2, 32, cfg)
+    y1 = attention.attention_full(p, cfg, x, pos)
+    # tokens > window behind position 31 must not affect it
+    x2 = x.at[:, :16].set(-7.0)
+    y2 = attention.attention_full(p, cfg, x2, pos)
+    np.testing.assert_allclose(np.asarray(y1[:, -1]), np.asarray(y2[:, -1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_mrope_text_equals_standard_rope():
+    """With equal (t, h, w) positions, M-RoPE == standard RoPE."""
+    cfg_std = _cfg(rope_style="standard")
+    cfg_mr = _cfg(rope_style="mrope", mrope_sections=(2, 3, 3))  # head_dim 16 -> half 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 16))
+    pos_std = attention.default_positions(2, 16, cfg_std)
+    pos_mr = attention.default_positions(2, 16, cfg_mr)
+    np.testing.assert_allclose(
+        np.asarray(attention.apply_rope(x, pos_std, cfg_std)),
+        np.asarray(attention.apply_rope(x, pos_mr, cfg_mr)),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_mrope_diverges_for_spatial_positions():
+    cfg_mr = _cfg(rope_style="mrope", mrope_sections=(2, 3, 3))
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 4, 16))
+    pos_text = attention.default_positions(1, 8, cfg_mr)
+    pos_img = pos_text.at[..., 1].set(pos_text[..., 1] + 5)  # h channel differs
+    a = attention.apply_rope(x, pos_text, cfg_mr)
+    b = attention.apply_rope(x, pos_img, cfg_mr)
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_decode_matches_full_apply(window):
+    """Ring-buffer decode, token by token, == full-sequence attention."""
+    cfg = _cfg(sliding_window=window)
+    T = 24
+    p, x = _qkv(cfg, T=T)
+    pos = attention.default_positions(2, T, cfg)
+    y_full = attention.attention_full(p, cfg, x, pos)
+
+    cache = attention.init_attn_cache(cfg, 2, cache_len=T if window is None else window,
+                                      dtype=jnp.float32)
+    outs = []
+    for i in range(T):
+        y1, cache = attention.attention_decode(
+            p, cfg, x[:, i:i+1], jnp.full((2,), i, jnp.int32), cache)
+        outs.append(y1)
+    y_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=3e-4, atol=3e-5)

@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 12, tree)
+    assert latest_step(d) == 12
+    back = restore_checkpoint(d, tree, step=7)
+    assert back["params"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(back["params"]["w"], np.float32),
+                               np.arange(12).reshape(3, 4))
+    np.testing.assert_array_equal(np.asarray(back["params"]["b"]), np.ones(4))
+    assert int(back["step"]) == 7
+
+
+def test_checkpoint_latest_of_empty(tmp_path):
+    assert latest_step(str(tmp_path / "nope")) is None

@@ -1,0 +1,54 @@
+"""Delayed-gossip extension (the paper's stated future work)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.data.social import SocialStream
+
+
+def _alg(delay, m=8, n=64):
+    return Algorithm1(
+        graph=GossipGraph.make("ring", m),
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+        privacy=PrivacyConfig(eps=math.inf, L=1.0),
+        n=n, delay=delay,
+    )
+
+
+def _stream(m=8, n=64, T=250):
+    s = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.2, seed=4)
+    return s.chunk(0, T)
+
+
+def test_delay_zero_unchanged():
+    """delay=0 must be bit-identical to the original algorithm."""
+    xs, ys = _stream()
+    base = Algorithm1(graph=GossipGraph.make("ring", 8),
+                      omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+                      privacy=PrivacyConfig(eps=math.inf, L=1.0), n=64)
+    a = base.run(jax.random.PRNGKey(0), xs, ys)
+    b = _alg(0).run(jax.random.PRNGKey(0), xs, ys)
+    np.testing.assert_array_equal(np.asarray(a.loss), np.asarray(b.loss))
+
+
+def test_delayed_still_learns():
+    xs, ys = _stream()
+    outs = _alg(4).run(jax.random.PRNGKey(0), xs, ys)
+    assert float(outs.correct[-80:].mean()) > 0.7
+
+
+def test_large_delay_degrades_but_no_divergence():
+    xs, ys = _stream()
+    fast = _alg(0).run(jax.random.PRNGKey(0), xs, ys)
+    slow = _alg(32).run(jax.random.PRNGKey(0), xs, ys)
+    assert np.isfinite(np.asarray(slow.loss)).all()
+    assert float(slow.correct[-80:].mean()) <= float(fast.correct[-80:].mean()) + 0.05
+
+
+def test_negative_delay_rejected():
+    with pytest.raises(ValueError):
+        _alg(-1)

@@ -1,0 +1,137 @@
+"""GossipDP distributed-strategy unit tests (single device; sharded-lowering
+equivalence is in test_distributed.py)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
+from repro.core.gossip import gossip_mix_tree, per_node_clip
+from repro.core.graph import complete_matrix, ring_matrix
+
+
+def _theta(m=8, n=32, key=0):
+    k = jax.random.PRNGKey(key)
+    return {"w": jax.random.normal(k, (m, n)), "b": jax.random.normal(k, (m, 4))}
+
+
+@pytest.mark.parametrize("topology,matrix_fn", [
+    ("ring", lambda m: ring_matrix(m, 0.5)),
+    ("complete", complete_matrix),
+])
+def test_mix_equals_dense_matrix(topology, matrix_fn):
+    m = 8
+    theta = _theta(m)
+    cfg = GossipConfig(topology=topology, self_weight=0.5, nodes=m)
+    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+                            True, jnp.zeros((), jnp.int32))
+    A = matrix_fn(m)
+    for leafname in ("w", "b"):
+        np.testing.assert_allclose(
+            np.asarray(mixed[leafname]), A @ np.asarray(theta[leafname]),
+            rtol=1e-5, atol=1e-6)
+
+
+def test_disconnected_is_identity():
+    theta = _theta()
+    cfg = GossipConfig(topology="disconnected", nodes=8)
+    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.asarray(5.0), cfg,
+                            True, jnp.zeros((), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mixed["w"]), np.asarray(theta["w"]))
+
+
+def test_mix_preserves_mean_noise_free():
+    theta = _theta()
+    for topo in ("ring", "complete", "ring_alternating"):
+        cfg = GossipConfig(topology=topo, nodes=8)
+        mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+                                True, jnp.zeros((), jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(mixed["w"].mean(0)), np.asarray(theta["w"].mean(0)),
+            rtol=1e-4, atol=1e-5)
+
+
+def test_ring_alternating_switches_direction():
+    theta = _theta()
+    cfg = GossipConfig(topology="ring_alternating", nodes=8)
+    even = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+                           True, jnp.zeros((), jnp.int32))
+    odd = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+                          True, jnp.ones((), jnp.int32))
+    assert not np.allclose(np.asarray(even["w"]), np.asarray(odd["w"]))
+
+
+def test_noise_self_false_removes_own_noise():
+    """With huge noise but noise_self=False + disconnected... use ring and
+    check the self-weight portion is clean: complete graph, m=1 edge case."""
+    m, n = 4, 16
+    theta = {"w": jnp.ones((m, n))}
+    cfg = GossipConfig(topology="complete", nodes=m)
+    # noise-free equivalence of the noise_self variants
+    a = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), cfg, True,
+                        jnp.zeros((), jnp.int32))
+    b = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), cfg, False,
+                        jnp.zeros((), jnp.int32))
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), rtol=1e-6)
+
+
+@given(L=st.floats(0.1, 5.0))
+@settings(max_examples=10, deadline=None)
+def test_per_node_clip(L):
+    grads = {"w": jnp.full((4, 100), 1.0)}  # per-node norm = 10
+    clipped, norms = per_node_clip(grads, L)
+    np.testing.assert_allclose(np.asarray(norms), 10.0, rtol=1e-5)
+    got = float(jnp.linalg.norm(clipped["w"][0]))
+    assert got <= min(L, 10.0) * (1 + 1e-5)
+
+
+def test_gossip_dp_update_end_to_end():
+    m, n = 8, 64
+    gdp = GossipDP(
+        gossip=GossipConfig(topology="ring", nodes=m),
+        omd=OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.05),
+        privacy=PrivacyConfig(eps=1.0, L=1.0),
+    )
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, n))}
+    state = gdp.init(params, jax.random.PRNGKey(1))
+    grads = {"w": jnp.ones((m, n))}
+    state2, metrics = gdp.update(state, grads)
+    assert int(state2.t) == 1
+    assert float(metrics["noise_scale"]) > 0
+    assert np.isfinite(np.asarray(state2.theta["w"])).all()
+    # primal applies the Lasso prox
+    w = gdp.primal(state2)
+    assert float(jnp.mean((w["w"] == 0).astype(jnp.float32))) >= 0.0
+    # nonprivate path: noise scale exactly 0
+    gdp_np = GossipDP(gossip=GossipConfig(topology="ring", nodes=m),
+                      omd=OMDConfig(alpha0=0.5, lam=0.05),
+                      privacy=PrivacyConfig(eps=math.inf, L=1.0))
+    st_np = gdp_np.init(params, jax.random.PRNGKey(1))
+    _, m_np = gdp_np.update(st_np, grads)
+    assert float(m_np["noise_scale"]) == 0.0
+
+
+def test_gossip_matches_simulator_one_round():
+    """Distributed-tree update == dense-A simulator update (noise-free)."""
+    from repro.core.algorithm1 import Algorithm1
+    from repro.core.graph import GossipGraph
+
+    m, n = 8, 32
+    key = jax.random.PRNGKey(3)
+    theta0 = jax.random.normal(key, (m, n))
+    grads = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+    alpha = 1.0  # sqrt_t at t=1
+
+    gdp = GossipDP(gossip=GossipConfig(topology="ring", nodes=m),
+                   omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.0),
+                   privacy=PrivacyConfig(eps=math.inf, L=1e9))
+    state = gdp.init({"w": theta0}, key)
+    state2, _ = gdp.update(state, {"w": grads})
+
+    A = ring_matrix(m, 0.5)
+    expected = A @ np.asarray(theta0) - alpha * np.asarray(grads)
+    np.testing.assert_allclose(np.asarray(state2.theta["w"]), expected,
+                               rtol=1e-4, atol=1e-5)

@@ -1,0 +1,87 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import (
+    GossipGraph, assert_doubly_stochastic, complete_matrix, disconnected_matrix,
+    hypercube_matrix, metropolis_hastings, random_regular_matrix, ring_matrix,
+    ring_neighbor_weights, spectral_gap, time_varying_schedule, torus_matrix,
+)
+
+
+@pytest.mark.parametrize("m", [1, 2, 3, 8, 64])
+def test_ring_doubly_stochastic(m):
+    assert_doubly_stochastic(ring_matrix(m))
+
+
+@pytest.mark.parametrize("m", [2, 4, 16, 64])
+def test_hypercube_doubly_stochastic(m):
+    assert_doubly_stochastic(hypercube_matrix(m))
+
+
+def test_hypercube_rejects_non_power_of_two():
+    with pytest.raises(ValueError):
+        hypercube_matrix(6)
+
+
+@pytest.mark.parametrize("rows,cols", [(2, 2), (4, 4), (2, 8), (8, 8)])
+def test_torus_doubly_stochastic(rows, cols):
+    assert_doubly_stochastic(torus_matrix(rows, cols))
+
+
+@pytest.mark.parametrize("m", [4, 8, 64])
+def test_random_regular_doubly_stochastic(m):
+    assert_doubly_stochastic(random_regular_matrix(m, seed=1))
+
+
+def test_complete_and_disconnected():
+    assert_doubly_stochastic(complete_matrix(7))
+    assert_doubly_stochastic(disconnected_matrix(7))
+    assert spectral_gap(complete_matrix(7)) > 0.99
+    assert spectral_gap(disconnected_matrix(7)) < 1e-9
+
+
+def test_time_varying_all_doubly_stochastic():
+    for A in time_varying_schedule(8):
+        assert_doubly_stochastic(A)
+    for A in time_varying_schedule(8, kind="random_matching", seed=3):
+        assert_doubly_stochastic(A)
+
+
+@given(m=st.integers(2, 32), sw=st.floats(0.1, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_ring_property(m, sw):
+    A = ring_matrix(m, self_weight=sw)
+    assert_doubly_stochastic(A)
+    # mixing preserves the mean of any vector
+    x = np.random.default_rng(0).normal(size=(m,))
+    assert np.isclose((A @ x).mean(), x.mean(), atol=1e-6)
+
+
+@given(m=st.integers(2, 24))
+@settings(max_examples=20, deadline=None)
+def test_metropolis_from_random_adjacency(m):
+    rng = np.random.default_rng(m)
+    adj = rng.uniform(size=(m, m)) < 0.4
+    adj = np.triu(adj, 1)
+    adj = adj | adj.T
+    for i in range(m):  # ensure no isolated nodes
+        adj[i, (i + 1) % m] = adj[(i + 1) % m, i] = True
+    np.fill_diagonal(adj, False)
+    assert_doubly_stochastic(metropolis_hastings(adj))
+
+
+def test_gossip_graph_factory_and_spectral_ordering():
+    ring = GossipGraph.make("ring", 16)
+    comp = GossipGraph.make("complete", 16)
+    assert ring.m == comp.m == 16
+    # complete mixes faster than ring
+    assert spectral_gap(comp.at(0)) > spectral_gap(ring.at(0))
+
+
+def test_ring_neighbor_weights_match_matrix():
+    w = ring_neighbor_weights(0.5)
+    A = ring_matrix(8, 0.5)
+    assert np.isclose(A[0, 0], w[0])
+    assert np.isclose(A[0, 1], w[1])
+    assert np.isclose(A[0, 7], w[-1])

@@ -1,0 +1,87 @@
+"""Pallas kernel allclose sweeps vs pure-jnp oracles (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("rows", [8, 16, 64, 512, 1024])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pdomd_update_sweep(rows, dtype):
+    keys = jax.random.split(jax.random.PRNGKey(rows), 4)
+    args = [jax.random.normal(k, (rows, 128), dtype) for k in keys]
+    alpha, lam = jnp.float32(0.05), jnp.float32(0.02)
+    w, th = ops.pdomd_update(*args, alpha, lam)
+    w_r, th_r = ref.pdomd_update_ref(*args, alpha, lam,
+                                     jnp.float32(0.5), jnp.float32(0.25))
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(th), np.asarray(th_r), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block_rows", [8, 64, 512])
+def test_pdomd_update_block_shapes(block_rows):
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    args = [jax.random.normal(k, (1024, 128)) for k in keys]
+    w, th = ops.pdomd_update(*args, jnp.float32(0.1), jnp.float32(0.01),
+                             block_rows=block_rows)
+    w_r, th_r = ref.pdomd_update_ref(*args, jnp.float32(0.1), jnp.float32(0.01),
+                                     jnp.float32(0.5), jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(w), np.asarray(w_r), rtol=1e-5, atol=1e-6)
+
+
+def test_pdomd_update_produces_sparsity():
+    keys = jax.random.split(jax.random.PRNGKey(2), 4)
+    args = [jax.random.normal(k, (64, 128)) for k in keys]
+    w, _ = ops.pdomd_update(*args, jnp.float32(0.0), jnp.float32(0.8))
+    assert float((w == 0).mean()) > 0.3
+
+
+@pytest.mark.parametrize("B,n", [(8, 128), (32, 256), (128, 1024), (100, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hinge_grad_sweep(B, n, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(B + n), 3)
+    x = (jax.random.normal(k1, (B, n)) / np.sqrt(n)).astype(dtype)
+    y = jnp.sign(jax.random.normal(k2, (B,))).astype(dtype)
+    w = jax.random.normal(k3, (n,)).astype(dtype)
+    loss, g, margin = ops.hinge_grad(x, y, w)
+    loss_r, g_r, margin_r = ref.hinge_grad_ref(x, y, w)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(loss_r), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_r), rtol=tol, atol=tol)
+
+
+def test_hinge_grad_matches_jax_autodiff():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, n = 64, 256
+    x = jax.random.normal(k1, (B, n)) / np.sqrt(n)
+    y = jnp.sign(jax.random.normal(k2, (B,)))
+    w = jax.random.normal(k3, (n,))
+    _, g, _ = ops.hinge_grad(x, y, w)
+    g_auto = jax.grad(lambda w: jnp.mean(jnp.maximum(1 - y * (x @ w), 0.0)))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_auto), rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(1, 40), st.floats(0.0, 2.0))
+@settings(max_examples=15, deadline=None)
+def test_pdomd_kernel_property_sparsity_monotone(rows8, lam):
+    rows = rows8 * 8
+    keys = jax.random.split(jax.random.PRNGKey(7), 4)
+    args = [jax.random.normal(k, (rows, 128)) for k in keys]
+    w1, _ = ops.pdomd_update(*args, jnp.float32(0.0), jnp.float32(lam))
+    w2, _ = ops.pdomd_update(*args, jnp.float32(0.0), jnp.float32(lam + 0.5))
+    assert float((w2 == 0).mean()) >= float((w1 == 0).mean())
+
+
+def test_tree_tiles_roundtrip():
+    tree = {"a": jnp.arange(300, dtype=jnp.bfloat16).reshape(20, 15),
+            "b": {"c": jnp.ones((7,), jnp.float32)}}
+    tiles = ops.tree_to_tiles(tree)
+    assert tiles.shape[1] == 128 and tiles.shape[0] % 8 == 0
+    back = ops.tiles_to_tree(tiles, tree)
+    np.testing.assert_allclose(np.asarray(back["a"], np.float32),
+                               np.asarray(tree["a"], np.float32))
+    assert back["b"]["c"].dtype == jnp.float32

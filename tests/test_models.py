@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (reduced configs, forward + train step +
+decode==apply consistency) — deliverable (f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import build_model
+
+
+def _batch(cfg, B=2, T=32, seed=7):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    tokens = jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size)
+    labels = jax.random.randint(ks[1], (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(ks[2], (B, cfg.frontend_tokens, cfg.d_model))
+        batch["labels"] = labels.at[:, :cfg.frontend_tokens].set(-1)
+    elif cfg.family == "encdec":
+        batch["frontend"] = jax.random.normal(ks[2], (B, max(T // 4, 8), cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = model.apply(params, batch["tokens"], batch.get("frontend"))
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    (loss, metrics), grads = jax.value_and_grad(model.loss_fn, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss))
+    assert 0 < float(loss) < 50
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_consistency(arch):
+    """Token-by-token decode logits == full-sequence apply logits."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, T = 2, 16
+    batch = _batch(cfg, B, T)
+    tokens = batch["tokens"]
+
+    # reference: text-only apply (decode embeds tokens only; vlm frontend
+    # injection happens at prefill in production, orthogonal to cache logic)
+    frontend = batch.get("frontend") if cfg.family == "encdec" else None
+    logits_full, _ = model.apply(params, tokens, frontend)
+
+    cache = model.init_cache(B, cache_len=T)
+    if model.prime_cache is not None:
+        cache = model.prime_cache(params, cache, batch["frontend"])
+    outs = []
+    for i in range(T):
+        step_logits, cache = model.decode_step(
+            params, cache, tokens[:, i:i+1], jnp.full((B,), i, jnp.int32))
+        outs.append(step_logits)
+    logits_dec = jnp.concatenate(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(logits_dec), np.asarray(logits_full),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "rwkv6-3b", "mixtral-8x7b"])
+def test_train_loss_decreases(arch):
+    """A few SGD steps on a fixed batch must reduce the loss."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    batch = _batch(cfg)
+    vg = jax.jit(jax.value_and_grad(lambda p: model.loss_fn(p, batch)[0]))
+    l0, _ = vg(params)
+    for _ in range(5):
+        loss, g = vg(params)
+        params = jax.tree_util.tree_map(lambda p, gg: p - 0.5 * gg.astype(p.dtype),
+                                        params, g)
+    l1, _ = vg(params)
+    assert float(l1) < float(l0), (float(l0), float(l1))
+
+
+def test_full_configs_match_assignment():
+    """The exact numbers from the assignment table."""
+    specs = {
+        "rwkv6-3b": dict(num_layers=32, d_model=2560, d_ff=8960, vocab_size=65536),
+        "recurrentgemma-2b": dict(num_layers=26, d_model=2560, num_heads=10,
+                                  num_kv_heads=1, d_ff=7680, vocab_size=256000),
+        "mixtral-8x7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                             num_kv_heads=8, d_ff=14336, vocab_size=32000,
+                             num_experts=8, num_experts_per_tok=2),
+        "qwen2-vl-2b": dict(num_layers=28, d_model=1536, num_heads=12,
+                            num_kv_heads=2, d_ff=8960, vocab_size=151936),
+        "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120, num_heads=40,
+                                      num_kv_heads=8, d_ff=8192, vocab_size=202048,
+                                      num_experts=16, num_experts_per_tok=1),
+        "qwen2-7b": dict(num_layers=28, d_model=3584, num_heads=28,
+                         num_kv_heads=4, d_ff=18944, vocab_size=152064),
+        "minicpm-2b": dict(num_layers=40, d_model=2304, num_heads=36,
+                           num_kv_heads=36, d_ff=5760, vocab_size=122753),
+        "seamless-m4t-medium": dict(num_layers=12, d_model=1024, num_heads=16,
+                                    num_kv_heads=16, d_ff=4096, vocab_size=256206),
+        "internlm2-20b": dict(num_layers=48, d_model=6144, num_heads=48,
+                              num_kv_heads=8, d_ff=16384, vocab_size=92544),
+        "qwen3-32b": dict(num_layers=64, d_model=5120, num_heads=64,
+                          num_kv_heads=8, d_ff=25600, vocab_size=151936),
+    }
+    for arch, want in specs.items():
+        cfg = get_config(arch)
+        for k, v in want.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # feature flags
+    assert get_config("qwen3-32b").use_qk_norm
+    assert get_config("qwen2-7b").use_qkv_bias
+    assert get_config("qwen2-vl-2b").rope_style == "mrope"
+    assert get_config("mixtral-8x7b").sliding_window == 4096
+    assert get_config("llama4-scout-17b-a16e").shared_expert
+    assert get_config("seamless-m4t-medium").encoder_layers == 12
+    assert get_config("recurrentgemma-2b").hybrid_pattern == ("rec", "rec", "attn")

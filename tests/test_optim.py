@@ -1,0 +1,87 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.omd import OMDConfig, OnlineMirrorDescent, alpha_schedule
+from repro.optim import adamw, apply_updates, constant, cosine, sgd, warmup_cosine, wsd
+
+
+def _quadratic_losses(opt, steps=200, lr_used=None):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    loss_fn = lambda p: jnp.sum(jnp.square(p["w"] - target))
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss_fn(params))
+
+
+def test_sgd_converges_quadratic():
+    assert _quadratic_losses(sgd(constant(0.1))) < 1e-3
+
+
+def test_sgd_momentum_converges():
+    assert _quadratic_losses(sgd(constant(0.05), momentum=0.9)) < 1e-3
+
+
+def test_adamw_converges_quadratic():
+    assert _quadratic_losses(adamw(constant(0.05), weight_decay=0.0)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(constant(0.1), weight_decay=1.0)
+    params = {"w": jnp.full((3,), 10.0)}
+    state = opt.init(params)
+    upd, state = opt.update({"w": jnp.zeros(3)}, state, params)
+    assert float(apply_updates(params, upd)["w"][0]) < 10.0
+
+
+def test_schedules_shapes():
+    assert float(constant(0.1)(jnp.asarray(1000))) == pytest.approx(0.1)
+    cs = cosine(1.0, 100)
+    assert float(cs(jnp.asarray(0))) == pytest.approx(1.0)
+    assert float(cs(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)
+    wc = warmup_cosine(1.0, 10, 110)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+
+
+def test_wsd_phases():
+    f = wsd(1.0, warmup=10, stable=50, decay=40, final_frac=0.1)
+    assert float(f(jnp.asarray(5))) == pytest.approx(0.5)      # warmup
+    assert float(f(jnp.asarray(30))) == pytest.approx(1.0)     # stable
+    assert float(f(jnp.asarray(100))) == pytest.approx(0.1, rel=1e-3)  # decayed
+    # decay is monotone
+    vals = [float(f(jnp.asarray(60 + i))) for i in range(0, 41, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_alpha_schedules():
+    s = alpha_schedule("sqrt_t", 1.0)
+    assert float(s(jnp.asarray(4))) == pytest.approx(0.5)
+    t2 = alpha_schedule("theorem2", 1.0, T=100)
+    assert float(t2(jnp.asarray(1))) == float(t2(jnp.asarray(99))) == pytest.approx(0.1)
+    with pytest.raises(ValueError):
+        alpha_schedule("theorem2", 1.0)  # needs T
+
+
+def test_omd_equals_sgd_when_no_prox():
+    """phi = 1/2||.||^2, lam = 0 => OMD is plain (noise-free, mix-free) SGD."""
+    cfg = OMDConfig(alpha0=0.1, schedule="constant", lam=0.0, prox_kind="none")
+    omd = OnlineMirrorDescent(cfg)
+    params = {"w": jnp.array([1.0, 2.0])}
+    state = omd.init(params)
+    g = {"w": jnp.array([0.5, -0.5])}
+    state = omd.dual_step(state, state.theta, g)
+    w = omd.primal(state)
+    np.testing.assert_allclose(np.asarray(w["w"]), [0.95, 2.05], rtol=1e-6)
+
+
+def test_omd_prox_sparsifies():
+    cfg = OMDConfig(alpha0=1.0, schedule="constant", lam=0.5, prox_kind="l1")
+    omd = OnlineMirrorDescent(cfg)
+    state = omd.init({"w": jnp.array([0.3, -0.2, 2.0])})
+    w = omd.primal(state)
+    np.testing.assert_allclose(np.asarray(w["w"]), [0.0, 0.0, 1.5], atol=1e-6)

@@ -1,0 +1,72 @@
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.privacy import (
+    PrivacyAccountant, PrivacyConfig, clip_by_l2, laplace_scale, sample_laplace,
+    sample_laplace_tree, sensitivity,
+)
+
+
+def test_sensitivity_lemma1():
+    # S(t) <= 2 alpha sqrt(n) L
+    assert float(sensitivity(0.1, 100, 1.0)) == pytest.approx(2 * 0.1 * 10 * 1.0)
+
+
+def test_laplace_scale_eq8():
+    assert float(laplace_scale(0.1, 100, 1.0, 0.5)) == pytest.approx(2 * 0.1 * 10 / 0.5)
+    assert float(laplace_scale(0.1, 100, 1.0, math.inf)) == 0.0
+
+
+def test_laplace_empirical_scale():
+    key = jax.random.PRNGKey(0)
+    b = 2.5
+    x = sample_laplace(key, (200_000,), b)
+    # Laplace(b): E|x| = b, Var = 2 b^2
+    assert float(jnp.mean(jnp.abs(x))) == pytest.approx(b, rel=0.02)
+    assert float(jnp.var(x)) == pytest.approx(2 * b * b, rel=0.05)
+
+
+def test_laplace_zero_scale_is_zero():
+    x = sample_laplace(jax.random.PRNGKey(1), (100,), 0.0)
+    assert float(jnp.max(jnp.abs(x))) == 0.0
+
+
+def test_laplace_tree_independent_leaves():
+    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((1000,))}
+    noise = sample_laplace_tree(jax.random.PRNGKey(2), tree, 1.0)
+    corr = np.corrcoef(np.asarray(noise["a"]), np.asarray(noise["b"]))[0, 1]
+    assert abs(corr) < 0.05
+
+
+@given(norm_target=st.floats(0.01, 10.0))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_l2(norm_target):
+    tree = {"w": jnp.full((64,), 2.0), "b": jnp.full((8,), -1.0)}
+    clipped, pre = clip_by_l2(tree, norm_target)
+    post = math.sqrt(sum(float(jnp.sum(jnp.square(l))) for l in jax.tree.leaves(clipped)))
+    assert post <= norm_target * (1 + 1e-5)
+    if float(pre) <= norm_target:  # no-op when already inside the ball
+        np.testing.assert_allclose(np.asarray(clipped["w"]), 2.0, rtol=1e-6)
+
+
+def test_privacy_config_coordinate_style():
+    cfg = PrivacyConfig(eps=1.0, L=1.0, clip_style="coordinate")
+    # per-coordinate scale has no sqrt(n) factor
+    assert float(cfg.scale_for(0.1, 10_000)) == pytest.approx(0.2)
+    g = PrivacyConfig(eps=1.0, L=1.0, clip_style="global")
+    assert float(g.scale_for(0.1, 10_000)) == pytest.approx(0.2 * 100)
+
+
+def test_accountant_parallel_composition():
+    acc = PrivacyAccountant(eps_per_round=0.5)
+    for _ in range(100):
+        acc.step()
+    assert acc.guarantee == 0.5  # Thm 1: disjoint rounds don't compound
+    seq = PrivacyAccountant(eps_per_round=0.5, disjoint_streams=False)
+    seq.step(100)
+    assert seq.guarantee == pytest.approx(50.0)

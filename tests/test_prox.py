@@ -1,0 +1,70 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.prox import (
+    elastic_net_prox, group_soft_threshold, l2_mirror_map, soft_threshold,
+    soft_threshold_tree, sparsity, sparsity_tree,
+)
+
+
+def test_soft_threshold_closed_form():
+    p = jnp.array([-3.0, -0.5, 0.0, 0.5, 3.0])
+    out = soft_threshold(p, 1.0)
+    np.testing.assert_allclose(np.asarray(out), [-2.0, 0.0, 0.0, 0.0, 2.0])
+
+
+def test_soft_threshold_solves_lasso_prox():
+    # w* = argmin 1/2||p - w||^2 + lam ||w||_1  — verify against grid search
+    p = jnp.array([1.3])
+    lam = 0.4
+    w_star = float(soft_threshold(p, lam)[0])
+    grid = np.linspace(-3, 3, 20001)
+    obj = 0.5 * (1.3 - grid) ** 2 + lam * np.abs(grid)
+    assert abs(grid[obj.argmin()] - w_star) < 1e-3
+
+
+@given(hnp.arrays(np.float32, (37,), elements=st.floats(-50, 50, width=32)),
+       st.floats(0.0, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_soft_threshold_properties(p_np, lam):
+    p = jnp.asarray(p_np)
+    w = soft_threshold(p, lam)
+    w_np = np.asarray(w)
+    # 1. shrinkage: |w| <= |p|
+    assert np.all(np.abs(w_np) <= np.abs(p_np) + 1e-6)
+    # 2. sign preservation
+    assert np.all((w_np == 0) | (np.sign(w_np) == np.sign(p_np)))
+    # 3. kill zone: |p| <= lam -> 0
+    assert np.all(w_np[np.abs(p_np) <= lam] == 0)
+    # 4. sparsity monotone in lambda
+    w2 = np.asarray(soft_threshold(p, lam + 1.0))
+    assert (w2 == 0).sum() >= (w_np == 0).sum()
+
+
+def test_group_soft_threshold_zeros_whole_rows():
+    p = jnp.array([[0.1, 0.1], [3.0, 4.0]])
+    out = np.asarray(group_soft_threshold(p, 1.0))
+    assert np.all(out[0] == 0.0)       # ||row0|| < 1 -> whole group killed
+    np.testing.assert_allclose(np.linalg.norm(out[1]), 4.0, rtol=1e-5)  # 5-1
+
+
+def test_elastic_net_prox():
+    out = elastic_net_prox(jnp.array([2.0]), 1.0, 1.0)
+    assert float(out[0]) == 0.5  # (2-1)/(1+1)
+
+
+def test_mirror_map_identity():
+    x = jnp.arange(5.0)
+    np.testing.assert_array_equal(np.asarray(l2_mirror_map(x)), np.asarray(x))
+
+
+def test_sparsity_measures():
+    w = jnp.array([0.0, 1.0, 0.0, 2.0])
+    assert float(sparsity(w)) == 0.5
+    tree = {"a": w, "b": jnp.zeros((4,))}
+    assert float(sparsity_tree(tree)) == 0.75
+    out = soft_threshold_tree(tree, 10.0)
+    assert float(sparsity_tree(out)) == 1.0

@@ -1,0 +1,69 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.sharding import rules
+
+
+class _FakeMesh:
+    """shape-only mesh stand-in for the divisibility sanitizer."""
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_param_rules_basic_paths():
+    params = jax.eval_shape(
+        lambda: build_model(get_config("qwen2-7b").reduced()).init(jax.random.PRNGKey(0)))
+    specs = rules.param_pspecs(params)
+    # embed vocab-sharded; attention/ffn 2D-sharded; norms replicated
+    assert specs["embed"]["table"] == P("model", None)
+    assert specs["final_norm"]["scale"] == P()
+    layer = specs["layers"]
+    assert layer["attn"]["wq"]["w"][-1] == "model"
+    assert layer["attn"]["wo"]["w"][-2] == "model"
+    assert layer["ffn"]["gate"]["w"][-1] == "model"
+    assert layer["ffn"]["down"]["w"][-2] == "model"
+
+
+def test_sanitizer_moves_indivisible_vocab():
+    params = jax.eval_shape(
+        lambda: build_model(get_config("minicpm-2b")).init(jax.random.PRNGKey(0)))
+    mesh = _FakeMesh(data=16, model=16)
+    specs = rules.param_pspecs(params, mesh=mesh)
+    # padded vocab (122880) divides 16 -> vocab stays sharded
+    # (sanitizer pops trailing Nones: P('model') == P('model', None))
+    assert specs["embed"]["table"][0] == "model"
+    assert params["embed"]["table"].shape[0] % 16 == 0
+
+
+def test_sanitizer_drops_or_moves():
+    class _L:
+        shape = (10, 64)
+        ndim = 2
+    spec = rules._sanitize(P("model", None), (10, 64), _FakeMesh(data=4, model=16))
+    # 10 % 16 != 0 -> moved to dim 1 (64 % 16 == 0)
+    assert spec == P(None, "model")
+    spec2 = rules._sanitize(P("model",), (10,), _FakeMesh(model=16))
+    assert spec2 == P()
+
+
+def test_node_axis_prepended():
+    params = {"ffn": {"gate": {"w": jax.ShapeDtypeStruct((4, 64, 128), jnp.float32)}}}
+    specs = rules.param_pspecs(params, node_axes=("data",))
+    assert specs["ffn"]["gate"]["w"][0] == "data"
+    assert specs["ffn"]["gate"]["w"][2] == "model"
+
+
+def test_cache_specs():
+    cfg = get_config("qwen2-7b").reduced()
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(8, 64))
+    specs = rules.cache_pspecs(cache, ("data",))
+    k_spec = specs["attn"]["k"]  # stacked (L, B, C, kv, hd)
+    assert k_spec[-4] == "data" and k_spec[-2] == "model"
+    sp = specs["attn"]["slot_pos"]
+    assert sp[-2] == "data"

@@ -1,0 +1,47 @@
+"""The paper's OMD+Lasso vs its cited baselines (truncated gradient, RDA)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.data.social import SocialStream
+
+
+def _run(method, lam, T=300, m=8, n=128, gamma=1.0):
+    s = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.1, seed=2)
+    xs, ys = s.chunk(0, T)
+    alg = Algorithm1(
+        graph=GossipGraph.make("ring", m),
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=lam),
+        privacy=PrivacyConfig(eps=math.inf, L=1.0),
+        n=n, method=method, rda_gamma=gamma,
+    )
+    return alg.run(jax.random.PRNGKey(0), xs, ys)
+
+
+def test_all_methods_learn():
+    for method, lam in (("omd", 0.3), ("tg", 0.003), ("rda", 0.002)):
+        outs = _run(method, lam)
+        acc = float(outs.correct[-80:].mean())
+        assert acc > 0.7, (method, acc)
+
+
+def test_rda_produces_sparsity():
+    outs = _run("rda", 0.005)
+    assert float(outs.sparsity[-1]) > 0.2
+
+
+def test_tg_truncation_sparsifies_vs_no_reg():
+    dense = _run("tg", 0.0)
+    sparse = _run("tg", 0.01)
+    assert float(sparse.sparsity[-1]) > float(dense.sparsity[-1])
+
+
+def test_unknown_method_rejected():
+    with pytest.raises(ValueError):
+        Algorithm1(graph=GossipGraph.make("ring", 4),
+                   omd=OMDConfig(), privacy=PrivacyConfig(), n=8,
+                   method="nope")
