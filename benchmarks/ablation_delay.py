@@ -13,8 +13,7 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import Scale, final_accuracy
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from benchmarks.common import Scale, final_accuracy, make_spec
 from repro.data.social import SocialStream
 
 DELAYS = (0, 1, 4, 16, 64)
@@ -28,12 +27,7 @@ def run(scale: Scale | None = None, eps: float = math.inf,
     xs, ys = stream.chunk(0, scale.T)
     rows = []
     for d in DELAYS:
-        alg = Algorithm1(
-            graph=GossipGraph.make("ring", scale.m),
-            omd=OMDConfig(alpha0=scale.alpha0, schedule="sqrt_t", lam=0.01),
-            privacy=PrivacyConfig(eps=eps, L=scale.L, clip_style="coordinate"),
-            n=scale.n, delay=d,
-        )
+        alg = make_spec(scale, eps=eps, lam=0.01, delay=d).build_simulator()
         outs = alg.run(jax.random.PRNGKey(1), xs, ys)
         rows.append({"delay": d, "accuracy": final_accuracy(outs)})
     os.makedirs(out_dir, exist_ok=True)

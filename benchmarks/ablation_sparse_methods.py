@@ -12,16 +12,15 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import Scale, final_accuracy
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from benchmarks.common import Scale, final_accuracy, make_spec
 from repro.data.social import SocialStream
 
-# lambdas tuned per method (they threshold different quantities: w for tg,
-# the running mean gradient for rda, theta for omd)
+# lambdas tuned per local rule (they threshold different quantities: w for
+# tg, the running mean gradient for rda, theta for omd)
 METHODS = {
-    "omd (paper)": dict(method="omd", lam=1.0),
-    "truncated-gradient [11]": dict(method="tg", lam=0.003),
-    "rda [12]": dict(method="rda", lam=0.001),
+    "omd (paper)": dict(local_rule="omd", lam=1.0),
+    "truncated-gradient [11]": dict(local_rule="tg", lam=0.003),
+    "rda [12]": dict(local_rule="rda", lam=0.001),
 }
 
 
@@ -33,13 +32,7 @@ def run(scale: Scale | None = None, eps: float = math.inf,
     xs, ys = stream.chunk(0, scale.T)
     rows = {}
     for name, kw in METHODS.items():
-        alg = Algorithm1(
-            graph=GossipGraph.make("ring", scale.m),
-            omd=OMDConfig(alpha0=scale.alpha0, schedule="sqrt_t", lam=kw["lam"]),
-            privacy=PrivacyConfig(eps=eps, L=scale.L, clip_style="coordinate"),
-            n=scale.n,
-            method=kw["method"],
-        )
+        alg = make_spec(scale, eps=eps, **kw).build_simulator()
         outs = alg.run(jax.random.PRNGKey(1), xs, ys)
         rows[name] = {
             "accuracy": final_accuracy(outs),

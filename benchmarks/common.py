@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.core.regret import best_fixed_hinge, cumulative_regret
 from repro.data.social import SocialStream
 
@@ -32,25 +32,33 @@ class Scale:
         return cls(n=10_000, m=64, T=100_000 // 64)
 
 
+def make_spec(scale: Scale, *, eps: float, lam: float = 1e-3,
+              topology: str = "ring", seed: int = 0,
+              clip_style: str = "coordinate", **kw) -> RunSpec:
+    """The shared declarative description all figure sweeps build from."""
+    return RunSpec(
+        nodes=scale.m, dim=scale.n, mixer=topology, seed=seed,
+        eps=eps, clip_norm=scale.L, calibration=clip_style,
+        alpha0=scale.alpha0, schedule="sqrt_t", lam=lam, **kw)
+
+
 def run_algorithm1(scale: Scale, *, eps: float, lam: float = 1e-3,
                    topology: str = "ring", seed: int = 0,
-                   clip_style: str = "coordinate"):
+                   clip_style: str = "coordinate", **spec_kw):
     """One full Algorithm-1 run; returns (outs, xs, ys, seconds).
 
     clip_style='coordinate' is the tighter per-coordinate Laplace calibration
     (DESIGN.md deviation #3); 'global' is the paper's exact Lemma-1 scale
     (sqrt(n) larger — with n=10^4 it drowns learning entirely, which is why
     the paper's own Fig. 2 cannot have used it; we report both).
+    Extra keywords (local_rule=, delay=, mechanism=, ...) pass through to
+    `repro.api.RunSpec`.
     """
     stream = SocialStream(n=scale.n, nodes=scale.m, rounds=scale.T,
                           sparsity_true=0.05, seed=seed)
     xs, ys = stream.chunk(0, scale.T)
-    alg = Algorithm1(
-        graph=GossipGraph.make(topology, scale.m, seed=seed),
-        omd=OMDConfig(alpha0=scale.alpha0, schedule="sqrt_t", lam=lam),
-        privacy=PrivacyConfig(eps=eps, L=scale.L, clip_style=clip_style),
-        n=scale.n,
-    )
+    alg = make_spec(scale, eps=eps, lam=lam, topology=topology, seed=seed,
+                    clip_style=clip_style, **spec_kw).build_simulator()
     t0 = time.time()
     outs = alg.run(jax.random.PRNGKey(seed + 1), xs, ys)
     jax.block_until_ready(outs.loss)

@@ -58,12 +58,9 @@ def bench_hinge(B: int = 1024, n: int = 10_240) -> list[tuple[str, float, str]]:
 
 def bench_algorithm1_round(m: int = 64, n: int = 10_000) -> list[tuple[str, float, str]]:
     """The paper's per-round hot loop at the paper's own scale."""
-    import math
-    from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
-    alg = Algorithm1(graph=GossipGraph.make("ring", m),
-                     omd=OMDConfig(alpha0=1.0, lam=1e-3),
-                     privacy=PrivacyConfig(eps=1.0, L=1.0),
-                     n=n)
+    from repro.api import RunSpec
+    alg = RunSpec(nodes=m, dim=n, mixer="ring", eps=1.0, clip_norm=1.0,
+                  alpha0=1.0, lam=1e-3).build_simulator()
     state = alg.init(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (m, n)) / jnp.sqrt(n * 1.0)
     y = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (m,)))

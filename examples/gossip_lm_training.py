@@ -21,11 +21,15 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--local-rule", default="omd",
+                    help="repro.api LOCAL_RULES registry name for the gossip runs")
     args = ap.parse_args()
 
     runs = {
-        "gossip eps=inf": dict(strategy="gossip", eps=math.inf),
-        "gossip eps=1.0": dict(strategy="gossip", eps=1.0),
+        "gossip eps=inf": dict(strategy="gossip", eps=math.inf,
+                               local_rule=args.local_rule),
+        "gossip eps=1.0": dict(strategy="gossip", eps=1.0,
+                               local_rule=args.local_rule),
         "allreduce adamw": dict(strategy="allreduce"),
     }
     results = {}

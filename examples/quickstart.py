@@ -4,15 +4,16 @@
 
 Runs private distributed online learning (8 simulated data centers, ring
 gossip, Laplace DP, Lasso sparsity) on a synthetic social-data stream and
-prints the regret/accuracy trajectory — then shows the same algorithm as a
-framework component (GossipDP) doing one distributed round.
+prints the regret/accuracy trajectory — then shows the SAME declarative
+`RunSpec` building the algorithm as a framework distribution strategy
+(GossipDP) doing one distributed round.
 """
 import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.core.regret import cumulative_regret
 from repro.data.social import SocialStream
 
@@ -21,36 +22,32 @@ m, n, T = 8, 256, 800
 stream = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.05, seed=0)
 xs, ys = stream.chunk(0, T)
 
-alg = Algorithm1(
-    graph=GossipGraph.make("ring", m),                  # data-center network
-    omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-2),   # OMD + Lasso
-    privacy=PrivacyConfig(eps=1.0, L=1.0, clip_style="coordinate"),  # eps-DP
-    n=n,
+spec = RunSpec(
+    nodes=m, dim=n,
+    mixer="ring",                       # data-center network (MIXERS registry)
+    mechanism="laplace", eps=1.0,       # eps-DP broadcast (MECHANISMS registry)
+    calibration="coordinate",
+    local_rule="omd", lam=1e-2,         # OMD + Lasso (LOCAL_RULES registry)
+    clipper="l2", clip_norm=1.0,        # Assumption 2.3 (CLIPPERS registry)
+    alpha0=1.0, schedule="sqrt_t",
 )
+alg = spec.build_simulator()
 outs = alg.run(jax.random.PRNGKey(0), xs, ys)
 reg = cumulative_regret(outs.w_bar_loss, xs, ys, m)
 
 print("Private distributed online learning (paper Algorithm 1)")
-print(f"  nodes={m} dim={n} rounds={T} eps=1.0 topology=ring")
+print(f"  nodes={m} dim={n} rounds={T} eps={spec.eps} topology={spec.mixer}")
 for t in (100, 400, T - 1):
     acc = float(outs.correct[max(0, t - 100): t].mean())
     print(f"  t={t:4d}: cumulative regret={reg[t]:10.1f}  acc(last100)={acc:.3f}  "
           f"sparsity={float(outs.sparsity[t]):.3f}")
 
-nonpriv = Algorithm1(graph=alg.graph, omd=alg.omd,
-                     privacy=PrivacyConfig(eps=math.inf, L=1.0), n=n)
-outs_np = nonpriv.run(jax.random.PRNGKey(0), xs, ys)
+outs_np = spec.replace(eps=math.inf).build_simulator().run(jax.random.PRNGKey(0), xs, ys)
 print(f"  non-private final acc: {float(outs_np.correct[-100:].mean()):.3f} "
       f"(privacy cost = {float(outs_np.correct[-100:].mean() - outs.correct[-100:].mean()):.3f})")
 
-# --- 2. the same algorithm as a framework strategy ------------------------
-from repro.core import GossipConfig, GossipDP
-
-gdp = GossipDP(
-    gossip=GossipConfig(topology="ring", nodes=m),
-    omd=OMDConfig(alpha0=0.5, lam=1e-3),
-    privacy=PrivacyConfig(eps=1.0, L=1.0),
-)
+# --- 2. the SAME RunSpec as a framework distribution strategy -------------
+gdp = spec.replace(alpha0=0.5, lam=1e-3).build_distributed()
 params = {"w": jnp.zeros((m, n))}          # any pytree works — here a linear model
 state = gdp.init(params, jax.random.PRNGKey(1))
 grads = {"w": jax.random.normal(jax.random.PRNGKey(2), (m, n))}

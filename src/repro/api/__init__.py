@@ -1,0 +1,43 @@
+"""repro.api — composable strategy layer for the paper's round pipeline.
+
+Decomposes Algorithm 1 (clip -> Laplace-noise -> gossip-mix -> local sparse
+update -> L1 prox) into four registry-backed protocols shared by BOTH
+engines (the dense simulator `core.algorithm1.Algorithm1` and the
+distributed `core.gossip.GossipDP`):
+
+  Mixer      — topology (ring, complete, disconnected, ring_alternating,
+               dense/torus/hypercube/random/time_varying, delayed)
+  Mechanism  — privacy (laplace [global|coordinate calibration], gaussian,
+               none)
+  LocalRule  — sparse update (omd, tg, rda)
+  Clipper    — gradient bounding (l2, value, none)
+
+`RunSpec` is the single declarative description that builds either engine;
+new scenarios register via the registries and never touch engine code.
+"""
+from repro.api.registry import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
+                                Registry)
+from repro.api.mixers import (AlternatingRingMixer, CompleteMixer,
+                              DelayedMixer, DenseMatrixMixer,
+                              DisconnectedMixer, Mixer, MixerBase,
+                              RingRollMixer)
+from repro.api.mechanisms import (GaussianMechanism, LaplaceMechanism,
+                                  Mechanism, NoNoise)
+from repro.api.rules import (LocalRule, OMDLassoRule, RDARule, StepContext,
+                             TruncatedGradientRule)
+from repro.api.clippers import (Clipper, NoClipper, PerNodeL2Clipper,
+                                ValueClipper, per_node_norms)
+from repro.api.spec import RunSpec
+
+__all__ = [
+    "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS",
+    "Mixer", "MixerBase", "DenseMatrixMixer", "RingRollMixer",
+    "CompleteMixer", "DisconnectedMixer", "AlternatingRingMixer",
+    "DelayedMixer",
+    "Mechanism", "LaplaceMechanism", "GaussianMechanism", "NoNoise",
+    "LocalRule", "StepContext", "OMDLassoRule", "TruncatedGradientRule",
+    "RDARule",
+    "Clipper", "PerNodeL2Clipper", "ValueClipper", "NoClipper",
+    "per_node_norms",
+    "RunSpec",
+]

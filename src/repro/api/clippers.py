@@ -1,0 +1,92 @@
+"""Clipper protocol — enforces Assumption 2.3 (||g|| <= L) before noising.
+
+Without clipping the DP guarantee is vacuous for unbounded losses, so the
+clipper is a first-class pipeline stage rather than inline engine code.
+Clippers act per node (axis 0 of every leaf) on either a bare (m, n) array
+or a node-stacked pytree — tree_util treats the bare array as a one-leaf
+tree, so one implementation serves both engines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import CLIPPERS
+
+__all__ = ["Clipper", "PerNodeL2Clipper", "ValueClipper", "NoClipper",
+           "per_node_norms"]
+
+
+def per_node_norms(grads: Any) -> jax.Array:
+    """(m,) global L2 norm of each node's slice across all leaves."""
+    leaves = jax.tree_util.tree_leaves(grads)
+    sq = sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+        for l in leaves
+    )
+    return jnp.sqrt(sq)
+
+
+@runtime_checkable
+class Clipper(Protocol):
+    """Gradient-bounding stage. Returns (clipped, (m,) pre-clip norms)."""
+
+    def clip(self, grads: Any) -> tuple[Any, jax.Array]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class PerNodeL2Clipper:
+    """Scale each node's gradient slice to L2 norm <= max_norm (the bound L
+    the Lemma-1 sensitivity is calibrated against)."""
+
+    max_norm: float = 1.0
+
+    def clip(self, grads):
+        norms = per_node_norms(grads)
+        factor = jnp.minimum(1.0, self.max_norm / jnp.maximum(norms, 1e-12))
+
+        def scale(l):
+            f = factor.reshape((-1,) + (1,) * (l.ndim - 1))
+            return (l * f).astype(l.dtype)
+
+        return jax.tree_util.tree_map(scale, grads), norms
+
+
+@dataclasses.dataclass(frozen=True)
+class ValueClipper:
+    """Per-coordinate clamp to [-max_value, max_value] — pairs with the
+    'coordinate' Laplace calibration (bounds the L-inf sensitivity)."""
+
+    max_value: float = 1.0
+
+    def clip(self, grads):
+        norms = per_node_norms(grads)
+        clipped = jax.tree_util.tree_map(
+            lambda l: jnp.clip(l, -self.max_value, self.max_value), grads)
+        return clipped, norms
+
+
+@dataclasses.dataclass(frozen=True)
+class NoClipper:
+    """Pass-through (non-private baselines only: voids Assumption 2.3)."""
+
+    def clip(self, grads):
+        return grads, per_node_norms(grads)
+
+
+@CLIPPERS.register("l2")
+def _l2(max_norm: float = 1.0) -> Clipper:
+    return PerNodeL2Clipper(max_norm=max_norm)
+
+
+@CLIPPERS.register("value")
+def _value(max_norm: float = 1.0) -> Clipper:
+    return ValueClipper(max_value=max_norm)
+
+
+@CLIPPERS.register("none")
+def _noclip() -> Clipper:
+    return NoClipper()

@@ -1,0 +1,302 @@
+"""Mixer protocol — the gossip topology stage of the round pipeline.
+
+A Mixer applies the doubly-stochastic A(t) of Assumption 1 along axis 0
+(the node axis) of an (m, ...) array. Both engines consume the same
+protocol: the simulator (`core.algorithm1`) feeds it (m, n) matrices, the
+distributed strategy (`core.gossip`) feeds it every node-stacked pytree
+leaf. Roll-based mixers lower to collective-permute when the node axis is
+sharded (the paper's "adjacent data centers only" constraint on the ICI
+ring); the dense-matrix mixer supports ANY doubly-stochastic schedule and
+hoists the matrix stack to construction time (no per-round `jnp.stack`).
+
+The mix signature carries both the clean theta and the noised broadcast
+copy theta~ so the mixer — not the engine — owns the noise-placement
+algebra: with ``noise_self=True`` (faithful Algorithm 1 line 10) the
+self-term uses theta~; with False the own-noise contribution
+``diag(A) * (theta~ - theta)`` is removed, since a node's own state needs
+no network hop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import MIXERS
+
+__all__ = [
+    "Mixer",
+    "MixerBase",
+    "DenseMatrixMixer",
+    "RingRollMixer",
+    "CompleteMixer",
+    "DisconnectedMixer",
+    "AlternatingRingMixer",
+    "DelayedMixer",
+]
+
+
+def _bcast(diag: jax.Array, like: jax.Array) -> jax.Array:
+    """Broadcast an (m,) diagonal against an (m, ...) leaf."""
+    return diag.reshape((-1,) + (1,) * (like.ndim - 1)).astype(like.dtype)
+
+
+@runtime_checkable
+class Mixer(Protocol):
+    """Topology stage: mixes (m, ...) arrays with A(t) along axis 0."""
+
+    m: int
+    delay: int  # rounds of staleness for neighbor terms (0 = synchronous)
+
+    def apply(self, x: jax.Array, t: jax.Array) -> jax.Array:
+        """A(t) @ x along the node axis (noise-agnostic linear map)."""
+        ...
+
+    def diag(self, t: jax.Array) -> jax.Array:
+        """(m,) diagonal of A(t) — the self-weights."""
+        ...
+
+    def mix(self, clean: jax.Array, tilde: jax.Array, noise_self: bool,
+            t: jax.Array) -> jax.Array:
+        """One synchronous gossip exchange of the noised broadcast copies."""
+        ...
+
+    def mix_delayed(self, clean: jax.Array, tilde: jax.Array, recv: jax.Array,
+                    noise_self: bool, t: jax.Array) -> jax.Array:
+        """Exchange where neighbor terms use the stale ``recv`` copies."""
+        ...
+
+
+class MixerBase:
+    """Default noise-placement algebra shared by all concrete mixers.
+
+    Subclasses implement :meth:`apply` and :meth:`diag`; the generic
+    identities below then cover every topology:
+
+      mix        = A x~                      (noise_self)
+                 = A x~ - diag * (x~ - x)    (own-noise removed)
+      mix_delayed= A r - diag * r + diag * s where s = x~ or x
+    """
+
+    m: int = 0
+    delay: int = 0
+
+    def apply(self, x: jax.Array, t: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def diag(self, t: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def mix(self, clean, tilde, noise_self, t):
+        mixed = self.apply(tilde, t)
+        if not noise_self:
+            mixed = mixed - _bcast(self.diag(t), tilde) * (tilde - clean)
+        return mixed
+
+    def mix_delayed(self, clean, tilde, recv, noise_self, t):
+        d = _bcast(self.diag(t), recv)
+        self_term = tilde if noise_self else clean
+        return self.apply(recv, t) - d * recv + d * self_term
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseMatrixMixer(MixerBase):
+    """Any (possibly time-varying) doubly-stochastic schedule as dense A(t).
+
+    The matrix stack and its diagonals are materialised ONCE at construction
+    (the seed code re-stacked ``graph.matrices`` inside every traced round).
+    ``apply`` contracts the node axis with tensordot, so it also mixes
+    node-stacked pytree leaves of any trailing shape.
+    """
+
+    stack: Any               # (k, m, m) jnp.float32
+    name: str = "dense"
+    delay: int = 0
+
+    def __post_init__(self):
+        stack = jnp.asarray(self.stack, jnp.float32)
+        if stack.ndim == 2:
+            stack = stack[None]
+        object.__setattr__(self, "stack", stack)
+        object.__setattr__(self, "_diags",
+                           jnp.stack([jnp.diag(A) for A in stack]))
+
+    @property
+    def m(self) -> int:
+        return int(self.stack.shape[-1])
+
+    @classmethod
+    def from_graph(cls, graph: "GossipGraph", delay: int = 0) -> "DenseMatrixMixer":
+        return cls(stack=np.stack([np.asarray(A) for A in graph.matrices]),
+                   name=graph.name, delay=delay)
+
+    @classmethod
+    def from_topology(cls, topology: str, m: int, seed: int = 0,
+                      **kw) -> "DenseMatrixMixer":
+        # deferred: repro.core.__init__ imports the engines, which import
+        # this module — a top-level core import would be circular
+        from repro.core.graph import GossipGraph
+        return cls.from_graph(GossipGraph.make(topology, m, seed=seed, **kw))
+
+    def apply(self, x, t):
+        A = self.stack[t % self.stack.shape[0]]
+        return jnp.tensordot(A, x.astype(A.dtype), axes=1).astype(x.dtype)
+
+    def diag(self, t):
+        return self._diags[t % self.stack.shape[0]]
+
+
+@dataclasses.dataclass(frozen=True)
+class RingRollMixer(MixerBase):
+    """Bidirectional ring via jnp.roll — lowers to collective-permute on a
+    sharded node axis. Numerically identical to ``graph.ring_matrix``."""
+
+    m: int
+    self_weight: float = 0.5
+    delay: int = 0
+
+    def apply(self, x, t):
+        nw = (1.0 - self.self_weight) / 2.0
+        return (self.self_weight * x
+                + nw * jnp.roll(x, 1, axis=0)
+                + nw * jnp.roll(x, -1, axis=0))
+
+    def diag(self, t):
+        return jnp.full((self.m,), self.self_weight, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompleteMixer(MixerBase):
+    """Fully connected graph: exact consensus (all-reduce mean) every round."""
+
+    m: int
+    delay: int = 0
+
+    def apply(self, x, t):
+        return jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape)
+
+    def diag(self, t):
+        return jnp.full((self.m,), 1.0 / self.m, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DisconnectedMixer(MixerBase):
+    """No communication: every node keeps its own CLEAN state.
+
+    Nothing leaves the node, so nothing needs the Laplace broadcast noise —
+    ``mix`` ignores theta~ entirely (local-only ablation baseline).
+    """
+
+    m: int
+    delay: int = 0
+
+    def apply(self, x, t):
+        return x
+
+    def diag(self, t):
+        return jnp.ones((self.m,), jnp.float32)
+
+    def mix(self, clean, tilde, noise_self, t):
+        return clean
+
+    def mix_delayed(self, clean, tilde, recv, noise_self, t):
+        return clean
+
+
+@dataclasses.dataclass(frozen=True)
+class AlternatingRingMixer(MixerBase):
+    """Time-varying graph: even rounds pair with the +1 ring neighbor, odd
+    rounds with the -1 neighbor; each A(t) is a (1/2, 1/2) circulant."""
+
+    m: int
+    delay: int = 0
+
+    def apply(self, x, t):
+        fwd = 0.5 * x + 0.5 * jnp.roll(x, 1, axis=0)
+        bwd = 0.5 * x + 0.5 * jnp.roll(x, -1, axis=0)
+        return jnp.where((t % 2) == 0, fwd, bwd)
+
+    def diag(self, t):
+        return jnp.full((self.m,), 0.5, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedMixer(MixerBase):
+    """Wrap any mixer with a WAN delay: neighbor terms arrive ``delay``
+    rounds late (paper §VI future work). The engines own the history ring
+    buffer; this wrapper only declares the staleness and delegates the
+    algebra to the inner mixer."""
+
+    inner: Mixer
+    delay: int = 1
+
+    def __post_init__(self):
+        if self.delay < 1:
+            raise ValueError("DelayedMixer needs delay >= 1")
+
+    @property
+    def m(self) -> int:
+        return self.inner.m
+
+    def apply(self, x, t):
+        return self.inner.apply(x, t)
+
+    def diag(self, t):
+        return self.inner.diag(t)
+
+    def mix(self, clean, tilde, noise_self, t):
+        return self.inner.mix(clean, tilde, noise_self, t)
+
+    def mix_delayed(self, clean, tilde, recv, noise_self, t):
+        return self.inner.mix_delayed(clean, tilde, recv, noise_self, t)
+
+
+# -- registry entries --------------------------------------------------------
+
+@MIXERS.register("ring")
+def _ring(m: int, self_weight: float = 0.5, delay: int = 0) -> Mixer:
+    return RingRollMixer(m=m, self_weight=self_weight, delay=delay)
+
+
+@MIXERS.register("complete")
+def _complete(m: int, delay: int = 0) -> Mixer:
+    return CompleteMixer(m=m, delay=delay)
+
+
+@MIXERS.register("disconnected")
+def _disconnected(m: int, delay: int = 0) -> Mixer:
+    return DisconnectedMixer(m=m, delay=delay)
+
+
+@MIXERS.register("ring_alternating")
+def _ring_alternating(m: int, delay: int = 0) -> Mixer:
+    return AlternatingRingMixer(m=m, delay=delay)
+
+
+@MIXERS.register("dense")
+def _dense(m: int, matrices=None, topology: str = "ring", seed: int = 0,
+           delay: int = 0, **kw) -> Mixer:
+    if matrices is not None:
+        mixer = DenseMatrixMixer(stack=np.stack([np.asarray(A) for A in matrices]))
+    else:
+        mixer = DenseMatrixMixer.from_topology(topology, m, seed=seed, **kw)
+    return dataclasses.replace(mixer, delay=delay)
+
+
+# Graph-backed topologies the simulator's Fig. 3 sweep uses, exposed directly.
+for _name in ("torus", "hypercube", "random", "time_varying"):
+    @MIXERS.register(_name)
+    def _graph_mixer(m: int, seed: int = 0, delay: int = 0,
+                     _topology: str = _name, **kw) -> Mixer:
+        mixer = DenseMatrixMixer.from_topology(_topology, m, seed=seed, **kw)
+        return dataclasses.replace(mixer, delay=delay)
+
+
+@MIXERS.register("delayed")
+def _delayed(m: int, inner: str | Mixer = "ring", delay: int = 1,
+             seed: int = 0, **kw) -> Mixer:
+    return DelayedMixer(inner=MIXERS.build(inner, m=m, seed=seed, **kw),
+                        delay=delay)

@@ -1,0 +1,143 @@
+"""LocalRule protocol — the node-local sparse-online-learning stage.
+
+A LocalRule defines the two halves of steps 6-10 that are NOT mixing:
+primal recovery (state -> prediction weights) and the dual step (mixed
+state + clipped gradient -> next state). Rules operate on single (m, ...)
+arrays; the distributed engine tree_maps them over node-stacked leaves, so
+one implementation serves both engines.
+
+Families (paper §I):
+  'omd' — the paper's rule: mirror descent + Lasso prox (Algorithm 1).
+  'tg'  — truncated gradient (Langford, Li & Zhang '09, ref [11]):
+          gossip mixes w itself; w <- shrink(w_mixed - a g, a lam).
+  'rda' — L1 regularized dual averaging (Xiao '10, ref [12]): gossip mixes
+          the cumulative gradient G; w = -(sqrt(t)/gamma) shrink(G/t, lam).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import LOCAL_RULES
+
+__all__ = ["StepContext", "LocalRule", "OMDLassoRule", "TruncatedGradientRule",
+           "RDARule"]
+
+
+class StepContext(NamedTuple):
+    """Per-round schedule values every rule may consume.
+
+    t is the 1-based round index; lam_t = alpha_t * lam is the Theorem-2
+    coupled Lasso strength, lam the raw (schedule-free) strength RDA uses.
+    """
+
+    t: jax.Array
+    alpha_t: jax.Array
+    lam_t: jax.Array
+    lam: float
+
+
+@runtime_checkable
+class LocalRule(Protocol):
+    """Local update stage: primal recovery + dual step, mixing-agnostic."""
+
+    def init_state(self, params: jax.Array) -> jax.Array:
+        """Initial dual state for one leaf of model parameters."""
+        ...
+
+    def primal(self, theta: jax.Array, ctx: StepContext) -> jax.Array:
+        """State -> prediction weights w_t (steps 6-7)."""
+        ...
+
+    def dual_step(self, mixed: jax.Array, grad: jax.Array,
+                  ctx: StepContext) -> jax.Array:
+        """Post-mixing state + clipped grad -> next state (step 10)."""
+        ...
+
+
+def _prox():
+    # deferred import: repro.core.__init__ imports the engines, which import
+    # this module — a top-level core import would be circular
+    from repro.core import prox
+    return prox
+
+
+_PROX = {
+    "l1": lambda p, lam_t: _prox().soft_threshold(p, lam_t),
+    "none": lambda p, lam_t: p,
+    "group": lambda p, lam_t: _prox().group_soft_threshold(p, lam_t),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OMDLassoRule:
+    """The paper's rule: identity mirror map + composite prox (Thm 2)."""
+
+    prox_kind: str = "l1"
+
+    def __post_init__(self):
+        if self.prox_kind not in _PROX:
+            raise ValueError(f"unknown prox_kind {self.prox_kind!r}")
+
+    def init_state(self, params):
+        return params  # theta_1 = model init (identity mirror map)
+
+    def primal(self, theta, ctx):
+        return _PROX[self.prox_kind](_prox().l2_mirror_map(theta), ctx.lam_t)
+
+    def dual_step(self, mixed, grad, ctx):
+        return mixed - ctx.alpha_t * grad.astype(mixed.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class TruncatedGradientRule:
+    """Ref [11]: the state IS w; shrink after every gradient step."""
+
+    def init_state(self, params):
+        return params  # state is w itself
+
+    def primal(self, theta, ctx):
+        return theta
+
+    def dual_step(self, mixed, grad, ctx):
+        return _prox().soft_threshold(
+            mixed - ctx.alpha_t * grad.astype(mixed.dtype), ctx.lam_t)
+
+
+@dataclasses.dataclass(frozen=True)
+class RDARule:
+    """Ref [12]: the state is the running gradient sum G; w from the
+    l1-RDA closed form with the sqrt(t)/gamma schedule."""
+
+    gamma: float = 1.0
+
+    def init_state(self, params):
+        # the state is the cumulative gradient sum G, not the weights —
+        # seeding it with a model init would silently corrupt the RDA iterate
+        return jnp.zeros_like(params)
+
+    def primal(self, theta, ctx):
+        tf = jnp.maximum(ctx.t.astype(jnp.float32), 1.0)
+        gbar = theta / tf
+        return -(jnp.sqrt(tf) / self.gamma) * _prox().soft_threshold(gbar, ctx.lam)
+
+    def dual_step(self, mixed, grad, ctx):
+        return mixed + grad.astype(mixed.dtype)
+
+
+@LOCAL_RULES.register("omd")
+def _omd(prox_kind: str = "l1") -> LocalRule:
+    return OMDLassoRule(prox_kind=prox_kind)
+
+
+@LOCAL_RULES.register("tg", "truncated_gradient")
+def _tg() -> LocalRule:
+    return TruncatedGradientRule()
+
+
+@LOCAL_RULES.register("rda")
+def _rda(gamma: float = 1.0) -> LocalRule:
+    return RDARule(gamma=gamma)

@@ -1,0 +1,141 @@
+"""RunSpec — one declarative description that builds either engine.
+
+A RunSpec names (or holds) the four round-pipeline protocols — Mixer,
+Mechanism, LocalRule, Clipper — plus the shared schedule knobs, and builds
+either the faithful dense simulator (`build_simulator`) or the distributed
+node-stacked strategy (`build_distributed`) from the same description:
+
+    spec = RunSpec(nodes=16, dim=512, mixer="ring", mechanism="laplace",
+                   eps=1.0, local_rule="omd", lam=1e-3, alpha0=1.0)
+    alg = spec.build_simulator()        # core.algorithm1.Algorithm1
+    gdp = spec.build_distributed()      # core.gossip.GossipDP
+
+Fields accept registry names (declarative path: CLI flags, sweep configs,
+JSON) or constructed protocol instances (fully custom path); scenario
+plugins register under `repro.api` registries and become available to both
+engines without touching engine code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.api.clippers import CLIPPERS, Clipper
+from repro.api.mechanisms import MECHANISMS, Mechanism
+from repro.api.mixers import MIXERS, DelayedMixer, Mixer
+from repro.api.rules import LOCAL_RULES, LocalRule
+from repro.core.omd import OMDConfig
+
+__all__ = ["RunSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Declarative description of one private-gossip-learning run.
+
+    nodes:   m data centers (the node axis of both engines).
+    dim:     feature dimension n — required by `build_simulator` and by the
+             'global' Lemma-1 calibration; the distributed engine infers the
+             per-node parameter count from the pytree instead.
+    mixer / mechanism / local_rule / clipper:
+             registry name or protocol instance; *_options are forwarded to
+             the registry factory (ignored when an instance is given).
+    eps, clip_norm, noise_self, calibration:
+             shared privacy knobs injected into the default mechanism and
+             clipper factories (explicit *_options win).
+    alpha0, schedule, lam, horizon, prox_kind:
+             the OMD schedule (Theorem 2) shared by every local rule.
+    delay:   WAN staleness in rounds — wraps the mixer in DelayedMixer.
+    """
+
+    nodes: int
+    dim: int | None = None
+    mixer: str | Mixer = "ring"
+    mixer_options: dict = dataclasses.field(default_factory=dict)
+    mechanism: str | Mechanism = "laplace"
+    mechanism_options: dict = dataclasses.field(default_factory=dict)
+    local_rule: str | LocalRule = "omd"
+    local_rule_options: dict = dataclasses.field(default_factory=dict)
+    clipper: str | Clipper = "l2"
+    clipper_options: dict = dataclasses.field(default_factory=dict)
+    # shared knobs
+    eps: float = 1.0
+    clip_norm: float = 1.0
+    noise_self: bool = True
+    calibration: str = "global"
+    alpha0: float = 0.1
+    schedule: str = "sqrt_t"
+    lam: float = 0.01
+    horizon: int | None = None
+    prox_kind: str = "l1"
+    delay: int = 0
+    seed: int = 0
+    loss_and_grad: Callable | None = None
+
+    # -- protocol resolution -------------------------------------------------
+
+    def resolve_mixer(self) -> Mixer:
+        mixer = MIXERS.build(self.mixer, self.mixer_options,
+                             m=self.nodes, seed=self.seed)
+        if getattr(mixer, "m", self.nodes) != self.nodes:
+            raise ValueError(
+                f"mixer is built for m={mixer.m} nodes but RunSpec.nodes="
+                f"{self.nodes}")
+        mixer_delay = getattr(mixer, "delay", 0)
+        if self.delay and mixer_delay and mixer_delay != self.delay:
+            raise ValueError(
+                f"conflicting delays: RunSpec.delay={self.delay} but the "
+                f"mixer already carries delay={mixer_delay}")
+        if self.delay and not mixer_delay:
+            mixer = DelayedMixer(inner=mixer, delay=self.delay)
+        return mixer
+
+    def resolve_mechanism(self) -> Mechanism:
+        return MECHANISMS.build(
+            self.mechanism, self.mechanism_options,
+            eps=self.eps, L=self.clip_norm, noise_self=self.noise_self,
+            calibration=self.calibration)
+
+    def resolve_local_rule(self) -> LocalRule:
+        return LOCAL_RULES.build(self.local_rule, self.local_rule_options,
+                                 prox_kind=self.prox_kind)
+
+    def resolve_clipper(self) -> Clipper:
+        return CLIPPERS.build(self.clipper, self.clipper_options,
+                              max_norm=self.clip_norm)
+
+    def omd_config(self) -> OMDConfig:
+        return OMDConfig(alpha0=self.alpha0, schedule=self.schedule,
+                         lam=self.lam, T=self.horizon,
+                         prox_kind=self.prox_kind)
+
+    # -- engine builders -----------------------------------------------------
+
+    def build_simulator(self) -> "Algorithm1":
+        """The dense (m, n) reference engine (core.algorithm1)."""
+        from repro.core.algorithm1 import Algorithm1, hinge_loss_and_grad
+        if self.dim is None:
+            raise ValueError("RunSpec.dim is required for the simulator")
+        return Algorithm1(
+            omd=self.omd_config(),
+            n=self.dim,
+            mixer=self.resolve_mixer(),
+            mechanism=self.resolve_mechanism(),
+            local_rule=self.resolve_local_rule(),
+            clipper=self.resolve_clipper(),
+            loss_and_grad=self.loss_and_grad or hinge_loss_and_grad,
+        )
+
+    def build_distributed(self) -> "GossipDP":
+        """The node-stacked pytree engine (core.gossip)."""
+        from repro.core.gossip import GossipDP
+        return GossipDP(
+            omd=self.omd_config(),
+            mixer=self.resolve_mixer(),
+            mechanism=self.resolve_mechanism(),
+            local_rule=self.resolve_local_rule(),
+            clipper=self.resolve_clipper(),
+        )
+
+    def replace(self, **kw: Any) -> "RunSpec":
+        return dataclasses.replace(self, **kw)

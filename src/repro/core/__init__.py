@@ -8,6 +8,11 @@ Modules:
   algorithm1 — faithful m-node simulator of the paper's Algorithm 1
   gossip     — distributed GossipDP strategy (shardable node-parallel update)
   regret     — Definition-3 regret measurement + Theorem-2 bound
+
+Both engines are thin compositions over the `repro.api` protocol layer
+(Mixer / Mechanism / LocalRule / Clipper); build them declaratively with
+`repro.api.RunSpec`. The legacy constructors (graph=/privacy=/method= and
+gossip=/privacy=) keep working for one release with a DeprecationWarning.
 """
 from repro.core.graph import GossipGraph
 from repro.core.omd import OMDConfig, OnlineMirrorDescent

@@ -1,27 +1,40 @@
 """Algorithm 1, faithful simulator (paper §II-D).
 
 Runs m virtual data-center nodes inside one device via vectorized ops:
-theta is an (m, n) matrix, mixing is the dense product A @ theta_tilde,
-so ANY doubly-stochastic A (fixed or time-varying) is supported — this is
-the reference implementation that the distributed shard_map strategy
-(core/gossip.py) is tested against for ring topologies.
-
-The default workload is the paper's: hinge loss f(w,x,y) = [1 - y<w,x>]_+,
-high-dimension sparse data. Everything runs under one lax.scan over rounds,
+theta is an (m, n) matrix and the whole horizon runs under one lax.scan,
 so a 100k-round x 64-node x 10k-dim simulation JITs into a single program.
+
+The engine is a thin composition over the `repro.api` protocol stages —
+Clipper -> Mechanism -> Mixer -> LocalRule — and contains no topology /
+method / mechanism branching of its own: new scenarios register in the
+`repro.api` registries (or are passed as instances, usually via
+`repro.api.RunSpec.build_simulator`) and plug in without touching this
+file. The distributed strategy (core/gossip.py) composes the SAME protocol
+instances over node-stacked pytrees, which is what the cross-engine
+equivalence tests rely on.
+
+The legacy constructor (graph= / privacy= / method= / rda_gamma= kwargs)
+still works for one release and maps onto the protocol stages with a
+DeprecationWarning.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+import warnings
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.clippers import Clipper, PerNodeL2Clipper
+from repro.api.mechanisms import LaplaceMechanism, Mechanism
+from repro.api.mixers import DenseMatrixMixer, Mixer
+from repro.api.registry import LOCAL_RULES
+from repro.api.rules import LocalRule, OMDLassoRule, StepContext
 from repro.core import prox
 from repro.core.graph import GossipGraph
 from repro.core.omd import OMDConfig
-from repro.core.privacy import PrivacyConfig, sample_laplace
+from repro.core.privacy import PrivacyConfig
 
 __all__ = ["Algorithm1", "SimState", "RoundOutput", "hinge_loss_and_grad"]
 
@@ -56,39 +69,80 @@ class RoundOutput(NamedTuple):
 class Algorithm1:
     """Private Distributed Online Learning (paper Algorithm 1).
 
-    graph:   mixing topology (Assumption 1).
-    omd:     local online-mirror-descent config (alpha/lambda schedules).
-    privacy: Laplace mechanism config (eps, L, Lemma-1 scaling).
-    loss_and_grad: (w, x, y) -> (loss (m,), grad (m,n)); default hinge.
-    method:  local sparse-online-learning rule. 'omd' is the paper's
-             (mirror descent + Lasso prox). The paper's §I cites two prior
-             families, implemented as comparable baselines:
-             'tg'  — truncated gradient (Langford, Li & Zhang '09, ref [11]):
-                     gossip mixes w itself; w <- shrink(w_mixed - a g, a*lam)
-             'rda' — l1 regularized dual averaging (Xiao '10, ref [12]):
-                     gossip mixes the cumulative gradient G;
-                     w = -(sqrt(t)/gamma) * shrink(G/t, lam)
+    Protocol stages (see `repro.api`; usually built via RunSpec):
+      mixer:      topology — applies the doubly-stochastic A(t).
+      mechanism:  privacy — noise scale + sampler for the theta~ broadcast.
+      local_rule: sparse update — primal recovery + dual step
+                  ('omd' is the paper's; 'tg'/'rda' are the §I baselines).
+      clipper:    enforces Assumption 2.3 (||g|| <= L) pre-noise.
+
+    omd supplies the alpha_t / lambda_t schedules (Theorem 2) shared by all
+    rules; n is the feature dimension; loss_and_grad defaults to the
+    paper's hinge workload.
+
+    Deprecated (one release): graph= / privacy= / method= / rda_gamma=
+    build the matching protocol stages; delay= wraps the history buffer the
+    way `RunSpec(delay=...)` does via DelayedMixer.
     """
 
-    graph: GossipGraph
     omd: OMDConfig
-    privacy: PrivacyConfig
     n: int
+    mixer: Mixer | None = None
+    mechanism: Mechanism | None = None
+    local_rule: LocalRule | None = None
+    clipper: Clipper | None = None
     loss_and_grad: Callable = staticmethod(hinge_loss_and_grad)
-    method: str = "omd"
-    rda_gamma: float = 1.0
-    # Communication DELAY in rounds (the paper's stated future work §VI):
-    # neighbors' theta~ arrive `delay` rounds late (own state is current).
     delay: int = 0
+    # -- deprecated legacy surface ------------------------------------------
+    graph: GossipGraph | None = None
+    privacy: PrivacyConfig | None = None
+    method: str | None = None
+    rda_gamma: float = 1.0
 
     def __post_init__(self):
-        if self.method not in ("omd", "tg", "rda"):
-            raise ValueError(self.method)
+        legacy = [k for k, v in (("graph", self.graph), ("privacy", self.privacy),
+                                 ("method", self.method)) if v is not None]
+        if legacy:
+            warnings.warn(
+                f"Algorithm1({', '.join(legacy)}=...) is deprecated; build "
+                "protocol stages via repro.api.RunSpec instead",
+                DeprecationWarning, stacklevel=3)
+        if self.mixer is None:
+            if self.graph is None:
+                raise ValueError("Algorithm1 needs mixer= (or legacy graph=)")
+            self.mixer = DenseMatrixMixer.from_graph(self.graph)
+        if self.mechanism is None:
+            if self.privacy is None:
+                raise ValueError("Algorithm1 needs mechanism= (or legacy privacy=)")
+            self.mechanism = LaplaceMechanism(
+                eps=self.privacy.eps, L=self.privacy.L,
+                calibration=self.privacy.clip_style,
+                noise_self=self.privacy.noise_self)
+        if self.clipper is None:
+            # default to the bound the mechanism's sensitivity is calibrated
+            # against — a mismatch would silently void the DP guarantee
+            self.clipper = PerNodeL2Clipper(
+                max_norm=getattr(self.mechanism, "L", 1.0))
+        if self.local_rule is None:
+            self.local_rule = (
+                LOCAL_RULES.build(self.method, gamma=self.rda_gamma)
+                if self.method is not None else OMDLassoRule())
         if self.delay < 0:
             raise ValueError("delay must be >= 0")
+        # staleness can come from the engine kwarg or a DelayedMixer wrapper
+        mixer_delay = getattr(self.mixer, "delay", 0)
+        if self.delay and mixer_delay and self.delay != mixer_delay:
+            raise ValueError(
+                f"conflicting delays: Algorithm1(delay={self.delay}) but the "
+                f"mixer already carries delay={mixer_delay}")
+        self.delay = max(self.delay, mixer_delay)
+
+    @property
+    def m(self) -> int:
+        return self.mixer.m
 
     def init(self, key: jax.Array) -> SimState:
-        m = self.graph.m
+        m = self.m
         hist = (jnp.zeros((self.delay + 1, m, self.n), jnp.float32)
                 if self.delay else None)
         return SimState(
@@ -98,23 +152,8 @@ class Algorithm1:
             history=hist,
         )
 
-    def _primal(self, theta: jax.Array, alpha_t, lam_t, t) -> jax.Array:
-        """State -> prediction weights, per method."""
-        if self.method == "omd":
-            return prox.soft_threshold(theta, lam_t)
-        if self.method == "tg":
-            return theta  # state IS w
-        # rda: theta is the cumulative gradient sum G; w from the RDA rule
-        tf = jnp.maximum(t.astype(jnp.float32), 1.0)
-        gbar = theta / tf
-        return -(jnp.sqrt(tf) / self.rda_gamma) * prox.soft_threshold(gbar, self.omd.lam)
-
-    def _dual_step(self, mixed: jax.Array, grad: jax.Array, alpha_t, lam_t) -> jax.Array:
-        if self.method == "omd":
-            return mixed - alpha_t * grad
-        if self.method == "tg":
-            return prox.soft_threshold(mixed - alpha_t * grad, lam_t)
-        return mixed + grad  # rda accumulates
+    def _ctx(self, t: jax.Array) -> StepContext:
+        return self.omd.step_context(t)
 
     # -- one round -----------------------------------------------------------
     def round(self, state: SimState, batch) -> tuple[SimState, RoundOutput]:
@@ -124,12 +163,11 @@ class Algorithm1:
         (disjoint streams => parallel composition, Thm 1).
         """
         x, y = batch
-        m = self.graph.m
-        alpha_t = self.omd.alpha()(state.t + 1)
-        lam_t = self.omd.lam_t(alpha_t)
+        m = self.m
+        ctx = self._ctx(state.t + 1)
 
-        # Steps 6-7: primal recovery (per method; 'omd' = the paper's Lasso prox).
-        w = self._primal(state.theta, alpha_t, lam_t, state.t + 1)
+        # Steps 6-7: primal recovery (the paper's rule = Lasso prox).
+        w = self.local_rule.primal(state.theta, ctx)
 
         # Steps 8-9: predict, receive label, suffer loss.
         loss, grad = self.loss_and_grad(w, x, y)
@@ -137,40 +175,30 @@ class Algorithm1:
         correct = (margin_sign == y).astype(jnp.float32)
 
         # Clip to enforce Assumption 2.3 (||g|| <= L) — required for Lemma 1.
-        gnorm = jnp.linalg.norm(grad, axis=1, keepdims=True)
-        grad = grad * jnp.minimum(1.0, self.privacy.L / jnp.maximum(gnorm, 1e-12))
+        grad, _ = self.clipper.clip(grad)
 
-        # Step 11 (previous round's broadcast): add Laplace noise to egress.
+        # Step 11 (previous round's broadcast): perturb the egress copies.
         key, sub = jax.random.split(state.key)
-        scale = self.privacy.scale_for(alpha_t, self.n)
-        delta = sample_laplace(sub, (m, self.n), scale)
+        scale = self.mechanism.scale(ctx.alpha_t, self.n)
+        delta = self.mechanism.sample(sub, (m, self.n), scale)
         theta_tilde = state.theta + delta
 
-        # Optional WAN delay: neighbors see theta~ from `delay` rounds ago
-        # (own state stays current). History is a ring buffer.
+        # Step 10: gossip mixing with doubly-stochastic A(t).
         new_history = state.history
         if self.delay:
+            # WAN staleness: neighbors see theta~ from `delay` rounds ago
+            # (own state stays current). History is a ring buffer.
             slot = state.t % (self.delay + 1)
             new_history = state.history.at[slot].set(theta_tilde)
             recv_slot = (state.t + 1) % (self.delay + 1)  # oldest = t - delay
             theta_recv = jnp.where(state.t >= self.delay,
                                    state.history[recv_slot], theta_tilde)
+            mixed = self.mixer.mix_delayed(state.theta, theta_tilde, theta_recv,
+                                           self.mechanism.noise_self, state.t)
         else:
-            theta_recv = theta_tilde
-
-        # Step 10: gossip mixing with doubly-stochastic A(t), minus grad step.
-        mats = jnp.stack([jnp.asarray(A) for A in self.graph.matrices])
-        A = mats[state.t % len(self.graph.matrices)]
-        diag = jnp.diag(A)[:, None]
-        if self.delay:
-            # off-diagonal terms use delayed copies; self term is current
-            mixed = (A @ theta_recv) - diag * theta_recv + diag * (
-                theta_tilde if self.privacy.noise_self else state.theta)
-        elif self.privacy.noise_self:
-            mixed = A @ theta_tilde
-        else:
-            mixed = (A @ theta_tilde) - diag * delta  # remove own-noise contribution
-        theta_next = self._dual_step(mixed, grad, alpha_t, lam_t)
+            mixed = self.mixer.mix(state.theta, theta_tilde,
+                                   self.mechanism.noise_self, state.t)
+        theta_next = self.local_rule.dual_step(mixed, grad, ctx)
 
         # Definition 3 regret is w.r.t. the average parameter w_bar.
         w_bar = jnp.mean(w, axis=0, keepdims=True)
@@ -208,6 +236,5 @@ class Algorithm1:
             return st, out
 
         state, outs = jax.lax.scan(body, state, (xs, ys))
-        alpha_T = self.omd.alpha()(state.t)
-        w = self._primal(state.theta, alpha_T, self.omd.lam_t(alpha_T), state.t)
+        w = self.local_rule.primal(state.theta, self._ctx(state.t))
         return w, outs

@@ -7,43 +7,59 @@ of gossip "data centers"), sharded over a mesh axis ("data" on the single-pod
 mesh; "pod" on the multi-pod mesh, where each pod is one data center and
 within-pod data parallelism is ordinary all-reduce handled by GSPMD).
 
-Gossip mixing is expressed as ``jnp.roll`` along the node axis: under GSPMD,
-a roll of a sharded axis lowers to ``collective-permute`` — the neighbor
-exchange of the paper's communication graph mapped onto the physical ICI
-ring. No all-reduce is issued for theta; this is verifiable in the dry-run
-HLO (see EXPERIMENTS.md §Dry-run) and is exactly the paper's "communicate
-with adjacent data centers only" constraint.
+The engine is a thin composition over the SAME `repro.api` protocol stages
+as the dense simulator — Clipper -> Mechanism -> Mixer -> LocalRule applied
+per node-stacked leaf — and contains no topology / mechanism / method
+branching of its own. Roll-based mixers (`RingRollMixer`,
+`AlternatingRingMixer`) express the exchange as ``jnp.roll`` along the node
+axis: under GSPMD a roll of a sharded axis lowers to ``collective-permute``
+— the neighbor exchange of the paper's communication graph mapped onto the
+physical ICI ring, with no all-reduce for theta (verifiable in the dry-run
+HLO, see EXPERIMENTS.md §Dry-run). Dense-matrix mixers also work (they
+tensordot the node axis) for arbitrary topologies, at all-gather cost.
 
 Memory note: node-parallel params cost the same per chip as replicated data
 parallelism (replication redundancy is repurposed as per-node state), but the
 technique precludes ZeRO-style optimizer-state sharding — each node owns its
 theta. Recorded as a finding in EXPERIMENTS.md.
+
+The legacy constructor (gossip=GossipConfig(...), privacy=PrivacyConfig(...))
+still works for one release and maps onto the protocol stages with a
+DeprecationWarning; build new code through `repro.api.RunSpec`.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.api.clippers import Clipper, PerNodeL2Clipper
+from repro.api.mechanisms import LaplaceMechanism, Mechanism
+from repro.api.mixers import Mixer
+from repro.api.registry import MIXERS
+from repro.api.rules import LocalRule, OMDLassoRule, StepContext
 from repro.core import prox
 from repro.core.omd import OMDConfig
-from repro.core.privacy import PrivacyConfig, sample_laplace
+from repro.core.privacy import PrivacyConfig
 
-__all__ = ["GossipConfig", "GossipState", "GossipDP", "gossip_mix_tree", "per_node_clip"]
+__all__ = ["GossipConfig", "GossipState", "GossipDP", "gossip_mix_tree",
+           "per_node_clip"]
 
+# Legacy names restricted to the shard-friendly (roll/mean based) mixers —
+# no dense matrix, so the node axis never needs an all-gather.
 DISTRIBUTED_TOPOLOGIES = ("ring", "complete", "disconnected", "ring_alternating")
 
 
 @dataclasses.dataclass(frozen=True)
 class GossipConfig:
-    """Distributed gossip knobs.
+    """DEPRECATED distributed gossip knobs — use `repro.api.RunSpec` /
+    `MIXERS` registry names instead. Retained for one release.
 
-    topology:    one of DISTRIBUTED_TOPOLOGIES. 'ring' is the TPU-native
-                 default (ICI neighbors). 'complete' degenerates to the
-                 all-reduce average (useful as the "classic DP" baseline with
-                 noise). 'ring_alternating' is the time-varying graph.
+    topology:    one of DISTRIBUTED_TOPOLOGIES (legacy names; each maps to a
+                 `repro.api.mixers` class via ``to_mixer``).
     self_weight: a_ii for the ring ((1-a_ii)/2 per neighbor).
     nodes:       m — must equal the mesh axis size the node dim is sharded on.
     """
@@ -56,6 +72,11 @@ class GossipConfig:
         if self.topology not in DISTRIBUTED_TOPOLOGIES:
             raise ValueError(f"topology {self.topology!r} not in {DISTRIBUTED_TOPOLOGIES}")
 
+    def to_mixer(self) -> Mixer:
+        return MIXERS.build(self.topology, m=self.nodes,
+                            self_weight=self.self_weight)  # injected: non-ring
+                                                           # mixers ignore it
+
 
 class GossipState(NamedTuple):
     theta: Any          # pytree; every leaf (m, ...) float32
@@ -63,50 +84,29 @@ class GossipState(NamedTuple):
     key: jax.Array      # PRNG key for the Laplace mechanism
 
 
-def _leaf_mix(leaf: jax.Array, tilde: jax.Array, cfg: GossipConfig,
-              noise_self: bool, t: jax.Array) -> jax.Array:
-    """Mix one (m, ...) leaf according to the topology.
-
-    ``leaf`` is the clean theta, ``tilde`` the noised broadcast copy. With
-    the faithful ``noise_self=True`` the self-term also uses ``tilde``
-    (Algorithm 1 line 10 sums a_ij * theta~ over ALL j).
-    """
-    self_term = tilde if noise_self else leaf
-    if cfg.topology == "disconnected":
-        return leaf
-    if cfg.topology == "complete":
-        m = cfg.nodes
-        mean_tilde = jnp.mean(tilde, axis=0, keepdims=True)
-        mixed = jnp.broadcast_to(mean_tilde, tilde.shape)
-        if not noise_self:
-            mixed = mixed + (leaf - tilde) / m
-        return mixed
-    if cfg.topology == "ring":
-        sw = cfg.self_weight
-        nw = (1.0 - sw) / 2.0
-        return (
-            sw * self_term
-            + nw * jnp.roll(tilde, 1, axis=0)
-            + nw * jnp.roll(tilde, -1, axis=0)
-        )
-    if cfg.topology == "ring_alternating":
-        # time-varying: even rounds exchange with +1 neighbor, odd with -1;
-        # each round's matrix is a circulant with (1/2, 1/2) — doubly stochastic.
-        fwd = 0.5 * self_term + 0.5 * jnp.roll(tilde, 1, axis=0)
-        bwd = 0.5 * self_term + 0.5 * jnp.roll(tilde, -1, axis=0)
-        return jnp.where((t % 2) == 0, fwd, bwd)
-    raise AssertionError(cfg.topology)
-
-
 def gossip_mix_tree(theta: Any, key: jax.Array, noise_scale: jax.Array,
-                    cfg: GossipConfig, noise_self: bool, t: jax.Array) -> Any:
-    """Noise + mix every leaf. Returns the post-mixing theta pytree."""
+                    mixer: Mixer | GossipConfig, noise_self: bool = True,
+                    t: jax.Array = 0, mechanism: Mechanism | None = None) -> Any:
+    """Noise + mix every (m, ...) leaf. Returns the post-mixing theta pytree.
+
+    ``mixer`` may be a `repro.api` Mixer or a legacy GossipConfig. When a
+    ``mechanism`` is given, its own ``noise_self`` wins (the positional flag
+    exists for the legacy mechanism-less call style and must not contradict
+    an explicit mechanism); otherwise the Laplace sampler at ``noise_scale``
+    is used with the flag as passed.
+    """
+    if isinstance(mixer, GossipConfig):
+        mixer = mixer.to_mixer()
+    if mechanism is not None:
+        mech, noise_self = mechanism, mechanism.noise_self
+    else:
+        mech = LaplaceMechanism(noise_self=noise_self)
     leaves, treedef = jax.tree_util.tree_flatten(theta)
     keys = jax.random.split(key, len(leaves))
     mixed = []
     for k, leaf in zip(keys, leaves):
-        delta = sample_laplace(k, leaf.shape, noise_scale, leaf.dtype)
-        mixed.append(_leaf_mix(leaf, leaf + delta, cfg, noise_self, t))
+        delta = mech.sample(k, leaf.shape, noise_scale, leaf.dtype)
+        mixed.append(mixer.mix(leaf, leaf + delta, noise_self, t))
     return jax.tree_util.tree_unflatten(treedef, mixed)
 
 
@@ -114,37 +114,67 @@ def per_node_clip(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
     """Clip each node's gradient slice (axis 0) to L2 norm <= max_norm.
 
     Enforces Assumption 2.3 per node. Returns (clipped, (m,) pre-clip norms).
+    Thin wrapper over `repro.api.PerNodeL2Clipper` (kept as a public name).
     """
-    leaves = jax.tree_util.tree_leaves(grads)
-    sq = sum(
-        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
-        for l in leaves
-    )
-    norms = jnp.sqrt(sq)  # (m,)
-    factor = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
-
-    def scale(l):
-        f = factor.reshape((-1,) + (1,) * (l.ndim - 1))
-        return (l * f).astype(l.dtype)
-
-    return jax.tree_util.tree_map(scale, grads), norms
+    return PerNodeL2Clipper(max_norm=max_norm).clip(grads)
 
 
 @dataclasses.dataclass(frozen=True)
 class GossipDP:
-    """The full per-round update: clip -> noise -> gossip-mix -> OMD -> prox.
+    """The full per-round update: clip -> noise -> gossip-mix -> local rule.
 
     Works on node-stacked pytrees; pure function of state so it jits/lowers
     under any mesh. The training driver computes per-node grads (vmapped
-    model) and calls :meth:`update`.
+    model) and calls :meth:`update`. Protocol stages come from `repro.api`
+    (usually via ``RunSpec.build_distributed()``); the legacy
+    gossip=/privacy= kwargs still resolve to them for one release.
     """
 
-    gossip: GossipConfig
     omd: OMDConfig
-    privacy: PrivacyConfig
+    mixer: Mixer | None = None
+    mechanism: Mechanism | None = None
+    local_rule: LocalRule | None = None
+    clipper: Clipper | None = None
+    # -- deprecated legacy surface ------------------------------------------
+    gossip: GossipConfig | None = None
+    privacy: PrivacyConfig | None = None
+
+    def __post_init__(self):
+        legacy = [k for k, v in (("gossip", self.gossip),
+                                 ("privacy", self.privacy)) if v is not None]
+        if legacy:
+            warnings.warn(
+                f"GossipDP({', '.join(legacy)}=...) is deprecated; build "
+                "protocol stages via repro.api.RunSpec instead",
+                DeprecationWarning, stacklevel=3)
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        if self.mixer is None:
+            if self.gossip is None:
+                raise ValueError("GossipDP needs mixer= (or legacy gossip=)")
+            set_("mixer", self.gossip.to_mixer())
+        if self.mechanism is None:
+            if self.privacy is None:
+                raise ValueError("GossipDP needs mechanism= (or legacy privacy=)")
+            set_("mechanism", LaplaceMechanism(
+                eps=self.privacy.eps, L=self.privacy.L,
+                calibration=self.privacy.clip_style,
+                noise_self=self.privacy.noise_self))
+        if self.clipper is None:
+            # default to the bound the mechanism's sensitivity is calibrated
+            # against — a mismatch would silently void the DP guarantee
+            set_("clipper", PerNodeL2Clipper(
+                max_norm=getattr(self.mechanism, "L", 1.0)))
+        if self.local_rule is None:
+            set_("local_rule", OMDLassoRule(prox_kind=self.omd.prox_kind))
+        if getattr(self.mixer, "delay", 0):
+            raise ValueError(
+                "delayed mixing is simulator-only for now — GossipState has "
+                "no history buffer; use Algorithm1 / RunSpec.build_simulator")
 
     def init(self, node_params: Any, key: jax.Array) -> GossipState:
-        theta = jax.tree_util.tree_map(lambda p: p.astype(jnp.float32), node_params)
+        theta = jax.tree_util.tree_map(
+            lambda p: self.local_rule.init_state(p.astype(jnp.float32)),
+            node_params)
         return GossipState(theta=theta, t=jnp.zeros((), jnp.int32), key=key)
 
     def param_count_per_node(self, theta: Any) -> int:
@@ -152,32 +182,31 @@ class GossipDP:
             int(l.size // l.shape[0]) for l in jax.tree_util.tree_leaves(theta)
         )
 
+    def _ctx(self, t: jax.Array) -> StepContext:
+        return self.omd.step_context(t)
+
     def primal(self, state: GossipState) -> Any:
-        """w_t from theta_t (steps 6-7): identity mirror map + L1 prox."""
-        alpha_t = self.omd.alpha()(state.t + 1)
-        lam_t = self.omd.lam_t(alpha_t)
-        if self.omd.prox_kind == "none":
-            return state.theta
-        return prox.soft_threshold_tree(state.theta, lam_t)
+        """w_t from theta_t (steps 6-7) via the local rule, per leaf."""
+        ctx = self._ctx(state.t + 1)
+        return jax.tree_util.tree_map(
+            lambda th: self.local_rule.primal(th, ctx), state.theta)
 
     def update(self, state: GossipState, grads: Any) -> tuple[GossipState, dict]:
         """Steps 10-11 for every node at once."""
-        alpha_t = self.omd.alpha()(state.t + 1)
-        grads, gnorms = per_node_clip(grads, self.privacy.L)
+        ctx = self._ctx(state.t + 1)
+        grads, gnorms = self.clipper.clip(grads)
 
         n = self.param_count_per_node(state.theta)
-        scale = self.privacy.scale_for(alpha_t, n)
+        scale = self.mechanism.scale(ctx.alpha_t, n)
 
         key, sub = jax.random.split(state.key)
-        mixed = gossip_mix_tree(
-            state.theta, sub, scale, self.gossip, self.privacy.noise_self, state.t
-        )
+        mixed = gossip_mix_tree(state.theta, sub, scale, self.mixer,
+                                t=state.t, mechanism=self.mechanism)
         theta_next = jax.tree_util.tree_map(
-            lambda th, g: th - alpha_t * g.astype(th.dtype), mixed, grads
-        )
+            lambda th, g: self.local_rule.dual_step(th, g, ctx), mixed, grads)
         new_state = GossipState(theta=theta_next, t=state.t + 1, key=key)
         metrics = {
-            "alpha_t": alpha_t,
+            "alpha_t": ctx.alpha_t,
             "noise_scale": scale,
             "grad_norm_mean": jnp.mean(gnorms),
             "theta_sparsity": prox.sparsity_tree(self.primal(new_state)),

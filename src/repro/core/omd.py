@@ -67,6 +67,14 @@ class OMDConfig:
     def lam_t(self, alpha_t: jax.Array) -> jax.Array:
         return alpha_t * self.lam
 
+    def step_context(self, t: jax.Array):
+        """Schedule values for 1-based round t, shared by both engines
+        (the Theorem-2 coupling lam_t = alpha_t * lam lives only here)."""
+        from repro.api.rules import StepContext
+        alpha_t = self.alpha()(t)
+        return StepContext(t=t, alpha_t=alpha_t, lam_t=self.lam_t(alpha_t),
+                           lam=self.lam)
+
 
 class OMDState(NamedTuple):
     theta: Any        # dual parameter pytree (same structure as params)

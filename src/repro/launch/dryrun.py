@@ -33,12 +33,7 @@ from repro.sharding import rules as shard_rules
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
 
 
-def _cost_get(cost: dict, key: str) -> float:
-    if not cost:
-        return 0.0
-    if key in cost:
-        return float(cost[key])
-    return float(sum(v for k, v in cost.items() if k.startswith(key)))
+_cost_get = hlo_cost.cost_analysis_get
 
 
 def count_params(tree) -> int:

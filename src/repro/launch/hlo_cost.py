@@ -47,6 +47,19 @@ _ELEMWISE_TRANS = {"exponential": 4, "log": 4, "log-plus-one": 4, "tanh": 6,
                    "exponential-minus-one": 4, "sine": 6, "cosine": 6, "atan2": 8,
                    "erf": 6, "cbrt": 4}
 
+def cost_analysis_get(cost, key: str) -> float:
+    """Read one metric out of ``compiled.cost_analysis()`` across jax
+    versions (older jax wraps the dict in a one-element list); prefix-sums
+    keyed entries like 'bytes accessed{operand 0}'."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    if not cost:
+        return 0.0
+    if key in cost:
+        return float(cost[key])
+    return float(sum(v for k, v in cost.items() if k.startswith(key)))
+
+
 _TYPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{\s*$")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
@@ -95,6 +108,25 @@ def _opcode(rhs: str) -> str:
     return m.group(1) if m else ""
 
 
+def _split_top_level(s: str) -> list[str]:
+    """Split on commas not nested in () / [] / {} — operand shapes like
+    f32[512,512]{1,0} carry commas of their own."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return parts
+
+
 def _operands(rhs: str, opcode: str) -> list[str]:
     pos = rhs.find(opcode)
     paren = rhs.find("(", pos)
@@ -109,7 +141,14 @@ def _operands(rhs: str, opcode: str) -> list[str]:
             if depth == 0:
                 inner = rhs[paren + 1: i]
                 out = []
-                for part in inner.split(","):
+                for part in _split_top_level(inner):
+                    # newer HLO prints typed operands ("f32[512,512]{1,0}
+                    # %Arg_0.1") — the %name is the LAST token; older dumps
+                    # print the bare %name first
+                    m_name = re.search(r"%([\w\.\-]+)\s*$", part.strip())
+                    if m_name:
+                        out.append(m_name.group(1))
+                        continue
                     mm = re.match(r"\s*%?([\w\.\-]+)", part)
                     if mm:
                         out.append(mm.group(1))

@@ -3,7 +3,18 @@ never touches jax device state."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # AxisType landed after jax 0.4.x; older jax only has Auto semantics
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with Auto axis types when the installed jax has them."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -12,13 +23,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     each pod is one gossip data center (see DESIGN.md §4)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(data: int = 4, model: int = 2):
     """Small mesh for subprocess tests with --xla_force_host_platform_device_count."""
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 def gossip_axes(mesh) -> tuple[str, ...]:

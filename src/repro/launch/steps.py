@@ -16,7 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
+from repro.core import GossipDP
 from repro.launch import mesh as mesh_lib
 from repro.models import build_model, Model
 from repro.models.config import ModelConfig, ShapeConfig
@@ -30,12 +31,16 @@ from repro.sharding import rules as shard_rules
 
 @dataclasses.dataclass(frozen=True)
 class TrainRecipe:
+    """Training-launch knobs; the gossip path materialises as a
+    `repro.api.RunSpec` (see :meth:`to_runspec`), so every registry-backed
+    mixer / mechanism / local rule is reachable from the CLI."""
+
     strategy: str = "gossip"        # 'gossip' (the paper) | 'allreduce' (baseline)
     eps: float = 1.0                # DP budget per round (gossip only)
     L: float = 1.0                  # clip norm
     lam: float = 1e-4               # Lasso strength
     alpha0: float = 0.01
-    topology: str = "ring"
+    topology: str = "ring"          # repro.api MIXERS registry name
     lr: float = 3e-4                # allreduce baseline LR
     noise_self: bool = True
     microbatches: int = 1           # grad-accumulation chunks per round
@@ -45,6 +50,25 @@ class TrainRecipe:
     # n ~ 10^9 parameters (DESIGN.md deviation #3) — selectable for the
     # paper-faithful linear workload.
     clip_style: str = "coordinate"
+    mechanism: str = "laplace"      # repro.api MECHANISMS registry name
+    local_rule: str = "omd"         # repro.api LOCAL_RULES registry name
+    clipper: str = "l2"             # repro.api CLIPPERS registry name
+
+    def to_runspec(self, nodes: int) -> RunSpec:
+        return RunSpec(
+            nodes=nodes,
+            mixer=self.topology,
+            mechanism=self.mechanism,
+            local_rule=self.local_rule,
+            clipper=self.clipper,
+            eps=self.eps,
+            clip_norm=self.L,
+            noise_self=self.noise_self,
+            calibration=self.clip_style,
+            alpha0=self.alpha0,
+            schedule="sqrt_t",
+            lam=self.lam,
+        )
 
 
 def effective_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
@@ -76,12 +100,7 @@ class GossipTrainState(NamedTuple):
 
 
 def make_gossip_dp(cfg_nodes: int, recipe: TrainRecipe) -> GossipDP:
-    return GossipDP(
-        gossip=GossipConfig(topology=recipe.topology, nodes=cfg_nodes),
-        omd=OMDConfig(alpha0=recipe.alpha0, schedule="sqrt_t", lam=recipe.lam),
-        privacy=PrivacyConfig(eps=recipe.eps, L=recipe.L, noise_self=recipe.noise_self,
-                              clip_style=recipe.clip_style),
-    )
+    return recipe.to_runspec(cfg_nodes).build_distributed()
 
 
 def make_gossip_train_step(model: Model, gdp: GossipDP, microbatches: int = 1,

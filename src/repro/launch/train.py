@@ -27,13 +27,17 @@ from repro.models import build_model
 def train(arch: str, *, strategy: str = "gossip", nodes: int = 4, steps_n: int = 50,
           batch_per_node: int = 2, seq_len: int = 128, eps: float = 1.0,
           lam: float = 1e-4, smoke: bool = True, log_path: str | None = None,
-          seed: int = 0, microbatches: int = 1, topology: str = "ring") -> dict:
+          seed: int = 0, microbatches: int = 1, topology: str = "ring",
+          local_rule: str = "omd", mechanism: str = "laplace",
+          clip_style: str = "coordinate") -> dict:
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
     model = build_model(cfg)
     recipe = steps.TrainRecipe(strategy=strategy, eps=eps, lam=lam,
-                               microbatches=microbatches, topology=topology)
+                               microbatches=microbatches, topology=topology,
+                               local_rule=local_rule, mechanism=mechanism,
+                               clip_style=clip_style)
 
     if strategy == "gossip":
         gdp = steps.make_gossip_dp(nodes, recipe)
@@ -95,7 +99,16 @@ def main():
     ap.add_argument("--seq-len", type=int, default=128)
     ap.add_argument("--eps", type=float, default=1.0)
     ap.add_argument("--lam", type=float, default=1e-4)
-    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--topology", default="ring",
+                    help="repro.api MIXERS registry name (ring, complete, "
+                         "ring_alternating, disconnected, torus, ...)")
+    ap.add_argument("--local-rule", default="omd",
+                    help="repro.api LOCAL_RULES registry name (omd, tg, rda)")
+    ap.add_argument("--mechanism", default="laplace",
+                    help="repro.api MECHANISMS registry name (laplace, gaussian, none)")
+    ap.add_argument("--clip-style", default="coordinate",
+                    choices=["coordinate", "global"],
+                    help="Laplace calibration (see TrainRecipe.clip_style)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--log", default=None)
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -105,7 +118,9 @@ def main():
     train(args.arch, strategy=args.strategy, nodes=args.nodes, steps_n=args.steps,
           batch_per_node=args.batch_per_node, seq_len=args.seq_len, eps=args.eps,
           lam=args.lam, smoke=args.smoke, log_path=args.log, seed=args.seed,
-          microbatches=args.microbatches, topology=args.topology)
+          microbatches=args.microbatches, topology=args.topology,
+          local_rule=args.local_rule, mechanism=args.mechanism,
+          clip_style=args.clip_style)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,382 @@
+"""repro.api strategy-layer tests: registry round-trips, old-constructor vs
+RunSpec seeded equivalence, and cross-engine (simulator vs distributed)
+agreement."""
+import math
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
+                       AlternatingRingMixer, CompleteMixer, DelayedMixer,
+                       DenseMatrixMixer, DisconnectedMixer, LaplaceMechanism,
+                       NoNoise, PerNodeL2Clipper, RingRollMixer, RunSpec,
+                       StepContext)
+from repro.core import (Algorithm1, GossipConfig, GossipDP, GossipGraph,
+                        OMDConfig, PrivacyConfig)
+from repro.core.algorithm1 import hinge_loss_and_grad
+from repro.core.graph import ring_matrix
+
+
+def _stream(m=8, n=32, T=40, seed=0):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (T, m, n)) / np.sqrt(n)
+    ys = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (T, m)))
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def test_registry_names_cover_the_paper():
+    for name in ("ring", "complete", "disconnected", "ring_alternating",
+                 "dense", "torus", "hypercube", "random", "time_varying",
+                 "delayed"):
+        assert name in MIXERS.names()
+    for name in ("laplace", "gaussian", "none"):
+        assert name in MECHANISMS.names()
+    for name in ("omd", "tg", "rda"):
+        assert name in LOCAL_RULES.names()
+    for name in ("l2", "value", "none"):
+        assert name in CLIPPERS.names()
+
+
+def test_registry_build_roundtrip():
+    mixer = MIXERS.build("ring", m=8, self_weight=0.6)
+    assert isinstance(mixer, RingRollMixer) and mixer.self_weight == 0.6
+    assert isinstance(MIXERS.build("complete", m=4), CompleteMixer)
+    assert isinstance(MIXERS.build("disconnected", m=4), DisconnectedMixer)
+    assert isinstance(MIXERS.build("ring_alternating", m=4), AlternatingRingMixer)
+    assert isinstance(MIXERS.build("torus", m=16), DenseMatrixMixer)
+    # instances pass through untouched
+    assert MIXERS.build(mixer) is mixer
+    mech = MECHANISMS.build("laplace", eps=2.0, L=0.5, calibration="coordinate")
+    assert isinstance(mech, LaplaceMechanism) and mech.eps == 2.0
+    assert isinstance(MECHANISMS.build("none"), NoNoise)
+    assert isinstance(CLIPPERS.build("l2", max_norm=3.0), PerNodeL2Clipper)
+
+
+def test_registry_unknown_name_is_value_and_key_error():
+    with pytest.raises(ValueError):
+        MIXERS.build("nope", m=4)
+    with pytest.raises(KeyError):
+        LOCAL_RULES.get("nope")
+
+
+def test_new_mixer_plugs_in_without_engine_changes():
+    """A scenario plugin registers a topology and both engines accept it."""
+    from repro.api.mixers import MixerBase
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class SelfLoopMixer(MixerBase):
+        m: int
+        delay: int = 0
+
+        def apply(self, x, t):
+            return x
+
+        def diag(self, t):
+            return jnp.ones((self.m,), jnp.float32)
+
+    name = "selfloop_test"
+    if name not in MIXERS.names():
+        MIXERS.register(name)(lambda m, **kw: SelfLoopMixer(m=m))
+    spec = RunSpec(nodes=4, dim=8, mixer=name, eps=math.inf, alpha0=1.0)
+    xs, ys = _stream(m=4, n=8, T=5)
+    outs = spec.build_simulator().run(jax.random.PRNGKey(0), xs, ys)
+    assert np.isfinite(np.asarray(outs.loss)).all()
+    gdp = spec.build_distributed()
+    state = gdp.init({"w": jnp.zeros((4, 8))}, jax.random.PRNGKey(1))
+    state, _ = gdp.update(state, {"w": jnp.ones((4, 8))})
+    assert int(state.t) == 1
+
+
+# ---------------------------------------------------------------------------
+# mixer semantics
+# ---------------------------------------------------------------------------
+
+def test_ring_roll_matches_dense_ring_matrix():
+    m, n = 8, 16
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    t = jnp.zeros((), jnp.int32)
+    roll = RingRollMixer(m=m, self_weight=0.5)
+    dense = DenseMatrixMixer(stack=ring_matrix(m, 0.5))
+    np.testing.assert_allclose(np.asarray(roll.apply(x, t)),
+                               np.asarray(dense.apply(x, t)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(roll.diag(t)),
+                               np.asarray(dense.diag(t)), rtol=1e-6)
+
+
+def test_dense_mixer_hoists_matrix_stack():
+    g = GossipGraph.make("time_varying", 8)
+    mixer = DenseMatrixMixer.from_graph(g)
+    assert mixer.stack.shape == (len(g.matrices), 8, 8)
+    # schedule indexing matches GossipGraph.at
+    for t in range(4):
+        np.testing.assert_allclose(
+            np.asarray(mixer.stack[t % mixer.stack.shape[0]]),
+            np.asarray(g.at(t)))
+
+
+def test_noise_self_false_removes_own_noise_generic():
+    """mix(clean, tilde, noise_self=False) == apply(tilde) - diag*(tilde-clean)
+    and for the complete graph equals the legacy closed form."""
+    m, n = 4, 16
+    clean = jnp.ones((m, n))
+    delta = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    tilde = clean + delta
+    t = jnp.zeros((), jnp.int32)
+    mixer = CompleteMixer(m=m)
+    got = mixer.mix(clean, tilde, False, t)
+    legacy = jnp.broadcast_to(jnp.mean(tilde, 0, keepdims=True), tilde.shape) \
+        + (clean - tilde) / m
+    np.testing.assert_allclose(np.asarray(got), np.asarray(legacy),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# seeded equivalence: legacy constructors vs RunSpec
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rule", ["omd", "tg", "rda"])
+def test_simulator_runspec_matches_legacy_constructor(rule):
+    m, n, T = 8, 32, 30
+    xs, ys = _stream(m, n, T)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Algorithm1(
+            graph=GossipGraph.make("ring", m),
+            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+            privacy=PrivacyConfig(eps=1.0, L=1.0),
+            n=n, method=rule,
+        )
+    spec = RunSpec(nodes=m, dim=n, mixer="ring", mechanism="laplace",
+                   local_rule=rule, clipper="l2", eps=1.0, clip_norm=1.0,
+                   calibration="global", alpha0=1.0, schedule="sqrt_t",
+                   lam=0.01)
+    new = spec.build_simulator()
+    w_l, outs_l = legacy.final_params(jax.random.PRNGKey(7), xs, ys)
+    w_n, outs_n = new.final_params(jax.random.PRNGKey(7), xs, ys)
+    np.testing.assert_allclose(np.asarray(w_n), np.asarray(w_l),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs_n.loss), np.asarray(outs_l.loss),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("topology", ["ring", "complete", "disconnected",
+                                      "ring_alternating"])
+def test_distributed_runspec_matches_legacy_constructor(topology):
+    m, n, T = 8, 16, 10
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = GossipDP(
+            gossip=GossipConfig(topology=topology, nodes=m),
+            omd=OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.01),
+            privacy=PrivacyConfig(eps=1.0, L=1.0),
+        )
+    spec = RunSpec(nodes=m, mixer=topology, mechanism="laplace",
+                   local_rule="omd", clipper="l2", eps=1.0, clip_norm=1.0,
+                   calibration="global", alpha0=0.5, schedule="sqrt_t",
+                   lam=0.01)
+    new = spec.build_distributed()
+
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, n)),
+              "b": jax.random.normal(jax.random.PRNGKey(1), (m, 4))}
+    sl = legacy.init(params, jax.random.PRNGKey(2))
+    sn = new.init(params, jax.random.PRNGKey(2))
+    for t in range(T):
+        g = {"w": jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(3), t),
+                                    (m, n)),
+             "b": jnp.ones((m, 4))}
+        sl, ml = legacy.update(sl, g)
+        sn, mn = new.update(sn, g)
+    np.testing.assert_allclose(np.asarray(sl.theta["w"]),
+                               np.asarray(sn.theta["w"]), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(sl.theta["b"]),
+                               np.asarray(sn.theta["b"]), rtol=1e-6, atol=1e-7)
+    assert float(ml["noise_scale"]) == float(mn["noise_scale"])
+
+
+# ---------------------------------------------------------------------------
+# cross-engine: simulator vs distributed on a linear model
+# ---------------------------------------------------------------------------
+
+def test_cross_engine_ring_equivalence():
+    """Algorithm1 with the ring Mixer == GossipDP rounds (noise-free)."""
+    m, n, T = 8, 32, 25
+    xs, ys = _stream(m, n, T, seed=3)
+    spec = RunSpec(nodes=m, dim=n, mixer="ring", eps=math.inf, clip_norm=1.0,
+                   local_rule="omd", lam=0.01, alpha0=0.5, schedule="sqrt_t")
+
+    alg = spec.build_simulator()
+    state_s = alg.init(jax.random.PRNGKey(9))
+    w_sim, _ = alg.final_params(jax.random.PRNGKey(9), xs, ys)
+
+    gdp = spec.build_distributed()
+    state = gdp.init({"w": jnp.zeros((m, n))}, jax.random.PRNGKey(9))
+    for t in range(T):
+        state_s, _ = alg.round(state_s, (xs[t], ys[t]))
+        w = gdp.primal(state)["w"]
+        _, grad = hinge_loss_and_grad(w, xs[t], ys[t])
+        state, _ = gdp.update(state, {"w": grad})
+    # dual trajectories agree exactly; primal comparison is looser because
+    # final_params evaluates the prox at t=T while primal uses t=T+1
+    np.testing.assert_allclose(np.asarray(state.theta["w"]),
+                               np.asarray(state_s.theta), rtol=1e-5, atol=1e-6)
+    w_dist = gdp.primal(state)["w"]
+    np.testing.assert_allclose(np.asarray(w_dist), np.asarray(w_sim),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("rule", ["omd", "tg", "rda"])
+def test_cross_engine_rules_agree(rule):
+    """Every local rule produces the same trajectory in both engines."""
+    m, n, T = 4, 16, 12
+    xs, ys = _stream(m, n, T, seed=5)
+    spec = RunSpec(nodes=m, dim=n, mixer="ring", eps=math.inf,
+                   local_rule=rule, lam=0.01, alpha0=0.5, schedule="sqrt_t")
+    alg = spec.build_simulator()
+    state_s = alg.init(jax.random.PRNGKey(4))
+
+    gdp = spec.build_distributed()
+    state_d = gdp.init({"w": jnp.zeros((m, n))}, jax.random.PRNGKey(4))
+    for t in range(T):
+        state_s, _ = alg.round(state_s, (xs[t], ys[t]))
+        w = gdp.primal(state_d)["w"]
+        _, grad = hinge_loss_and_grad(w, xs[t], ys[t])
+        state_d, _ = gdp.update(state_d, {"w": grad})
+    np.testing.assert_allclose(np.asarray(state_d.theta["w"]),
+                               np.asarray(state_s.theta), rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RunSpec surface
+# ---------------------------------------------------------------------------
+
+def test_disconnected_dense_escape_hatch_matches_legacy():
+    """mixer='disconnected' now means clean local state in BOTH engines; the
+    README documents mixer='dense' + topology='disconnected' as the exact
+    legacy simulator behaviour (noised self-loop through identity A)."""
+    m, n, T = 4, 16, 10
+    xs, ys = _stream(m, n, T)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = Algorithm1(
+            graph=GossipGraph.make("disconnected", m),
+            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+            privacy=PrivacyConfig(eps=1.0, L=1.0), n=n,
+        )
+    spec = RunSpec(nodes=m, dim=n, mixer="dense",
+                   mixer_options={"topology": "disconnected"},
+                   eps=1.0, clip_norm=1.0, calibration="global",
+                   alpha0=1.0, schedule="sqrt_t", lam=0.01)
+    w_l, _ = legacy.final_params(jax.random.PRNGKey(2), xs, ys)
+    w_n, _ = spec.build_simulator().final_params(jax.random.PRNGKey(2), xs, ys)
+    np.testing.assert_allclose(np.asarray(w_n), np.asarray(w_l),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_runspec_rejects_mixer_node_mismatch():
+    with pytest.raises(ValueError):
+        RunSpec(nodes=64, dim=16, mixer=RingRollMixer(m=8)).build_simulator()
+
+
+def test_typoed_option_raises_instead_of_running_default():
+    with pytest.raises(TypeError):
+        RunSpec(nodes=8, dim=16, mixer="ring",
+                mixer_options={"self_wieght": 0.9}).build_simulator()
+
+
+def test_engine_rejects_conflicting_delay_kwarg():
+    with pytest.raises(ValueError):
+        Algorithm1(omd=OMDConfig(), n=16,
+                   mixer=DelayedMixer(inner=RingRollMixer(m=4), delay=16),
+                   mechanism=LaplaceMechanism(), delay=4)
+
+
+def test_runspec_conflicting_delays_rejected():
+    spec = RunSpec(nodes=8, dim=16, mixer="ring",
+                   mixer_options={"delay": 2}, delay=16)
+    with pytest.raises(ValueError):
+        spec.build_simulator()
+
+
+def test_rda_state_initialises_to_zero_gradient_sum():
+    """RDA's dual state is the cumulative gradient sum G, not the weights —
+    GossipDP.init must not seed it with the model init."""
+    spec = RunSpec(nodes=4, local_rule="rda", eps=math.inf, alpha0=1.0)
+    gdp = spec.build_distributed()
+    params = {"w": jnp.full((4, 8), 3.0)}
+    state = gdp.init(params, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(state.theta["w"]), 0.0)
+    # omd keeps the model init
+    gdp_omd = spec.replace(local_rule="omd").build_distributed()
+    state_omd = gdp_omd.init(params, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(state_omd.theta["w"]), 3.0)
+
+
+def test_default_clipper_follows_mechanism_bound():
+    alg = Algorithm1(omd=OMDConfig(), n=8,
+                     mixer=RingRollMixer(m=4),
+                     mechanism=LaplaceMechanism(eps=1.0, L=0.5))
+    assert alg.clipper.max_norm == 0.5
+
+
+def test_runspec_delay_wraps_mixer_and_is_simulator_only():
+    spec = RunSpec(nodes=8, dim=16, mixer="ring", eps=math.inf, delay=3)
+    alg = spec.build_simulator()
+    assert alg.delay == 3
+    xs, ys = _stream(m=8, n=16, T=8)
+    outs = alg.run(jax.random.PRNGKey(0), xs, ys)
+    assert np.isfinite(np.asarray(outs.loss)).all()
+    with pytest.raises(ValueError):
+        spec.build_distributed()
+
+
+def test_runspec_requires_dim_for_simulator():
+    with pytest.raises(ValueError):
+        RunSpec(nodes=4).build_simulator()
+
+
+def test_engines_reject_partial_construction():
+    with pytest.raises(ValueError):
+        Algorithm1(omd=OMDConfig(), n=8)
+    with pytest.raises(ValueError):
+        GossipDP(omd=OMDConfig())
+
+
+def test_legacy_constructors_warn():
+    with pytest.warns(DeprecationWarning):
+        Algorithm1(graph=GossipGraph.make("ring", 4), omd=OMDConfig(),
+                   privacy=PrivacyConfig(), n=8)
+    with pytest.warns(DeprecationWarning):
+        GossipDP(gossip=GossipConfig(topology="ring", nodes=4),
+                 omd=OMDConfig(), privacy=PrivacyConfig())
+
+
+def test_mechanism_options_override_shared_knobs():
+    spec = RunSpec(nodes=4, dim=8, eps=1.0,
+                   mechanism_options={"eps": 5.0})
+    assert spec.resolve_mechanism().eps == 5.0
+
+
+def test_gaussian_mechanism_via_spec():
+    spec = RunSpec(nodes=4, dim=8, mixer="ring", mechanism="gaussian",
+                   eps=1.0, alpha0=1.0)
+    xs, ys = _stream(m=4, n=8, T=6)
+    outs = spec.build_simulator().run(jax.random.PRNGKey(0), xs, ys)
+    assert np.isfinite(np.asarray(outs.loss)).all()
+
+
+def test_step_context_schedule_values():
+    spec = RunSpec(nodes=4, dim=8, alpha0=1.0, schedule="sqrt_t", lam=0.2)
+    alg = spec.build_simulator()
+    ctx = alg._ctx(jnp.asarray(4, jnp.int32))
+    assert isinstance(ctx, StepContext)
+    assert float(ctx.alpha_t) == pytest.approx(0.5)      # 1/sqrt(4)
+    assert float(ctx.lam_t) == pytest.approx(0.1)        # alpha_t * lam

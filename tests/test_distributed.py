@@ -26,7 +26,8 @@ def test_gossip_ring_lowers_to_collective_permute():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
 theta = {"w": jnp.ones((8, 256))}
 gdp = GossipDP(gossip=GossipConfig(topology="ring", nodes=8),
                omd=OMDConfig(alpha0=0.1, lam=0.01),
@@ -50,8 +51,9 @@ from repro.core import (Algorithm1, GossipConfig, GossipDP, GossipGraph,
                         OMDConfig, PrivacyConfig)
 from repro.core.algorithm1 import hinge_loss_and_grad
 
+from repro.launch.mesh import make_mesh
 m, n, T = 8, 64, 20
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 key = jax.random.PRNGKey(0)
 xs = jax.random.normal(key, (T, m, n)) / np.sqrt(n)
 ys = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (T, m)))
@@ -135,9 +137,8 @@ def test_multipod_mesh_function():
 import os
 import jax
 # 8 devices -> shrink the production mesh shape proportionally via test mesh
-from repro.launch.mesh import gossip_axes, gossip_nodes
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import gossip_axes, gossip_nodes, make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 assert gossip_axes(mesh) == ("pod",)
 assert gossip_nodes(mesh) == 2
 print("OK")

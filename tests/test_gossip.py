@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
 from repro.core.gossip import gossip_mix_tree, per_node_clip
@@ -78,8 +77,7 @@ def test_noise_self_false_removes_own_noise():
     np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), rtol=1e-6)
 
 
-@given(L=st.floats(0.1, 5.0))
-@settings(max_examples=10, deadline=None)
+@pytest.mark.parametrize("L", [0.1, 0.37, 1.0, 2.5, 5.0, 9.99, 10.0, 20.0])
 def test_per_node_clip(L):
     grads = {"w": jnp.full((4, 100), 1.0)}  # per-node norm = 10
     clipped, norms = per_node_clip(grads, L)

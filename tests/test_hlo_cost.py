@@ -31,7 +31,8 @@ def test_scan_trip_count_multiplied():
     assert abs(r.flops - expect) / expect < 0.05
     assert 17 in r.while_trip_counts
     # XLA's own count misses the loop: ours must be much larger
-    assert r.flops > 5 * float(_compile(f, s).cost_analysis()["flops"])
+    xla_flops = hlo_cost.cost_analysis_get(_compile(f, s).cost_analysis(), "flops")
+    assert r.flops > 5 * xla_flops
 
 
 def test_elementwise_fusion_free_bytes():

@@ -4,7 +4,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.privacy import (
     PrivacyAccountant, PrivacyConfig, clip_by_l2, laplace_scale, sample_laplace,
@@ -37,14 +36,15 @@ def test_laplace_zero_scale_is_zero():
 
 
 def test_laplace_tree_independent_leaves():
-    tree = {"a": jnp.zeros((1000,)), "b": jnp.zeros((1000,))}
+    tree = {"a": jnp.zeros((20_000,)), "b": jnp.zeros((20_000,))}
     noise = sample_laplace_tree(jax.random.PRNGKey(2), tree, 1.0)
     corr = np.corrcoef(np.asarray(noise["a"]), np.asarray(noise["b"]))[0, 1]
     assert abs(corr) < 0.05
 
 
-@given(norm_target=st.floats(0.01, 10.0))
-@settings(max_examples=20, deadline=None)
+@pytest.mark.parametrize("norm_target", [
+    0.01, 0.1, 0.5, 1.0, 2.0, 5.0, 8.0, 9.0, 9.5, 10.0,
+])
 def test_clip_by_l2(norm_target):
     tree = {"w": jnp.full((64,), 2.0), "b": jnp.full((8,), -1.0)}
     clipped, pre = clip_by_l2(tree, norm_target)
