@@ -6,7 +6,8 @@ engines (the dense simulator `core.algorithm1.Algorithm1` and the
 distributed `core.gossip.GossipDP`):
 
   Mixer      — topology (ring, complete, disconnected, ring_alternating,
-               dense/torus/hypercube/random/time_varying, delayed)
+               dense/torus/hypercube/random/time_varying, delayed,
+               het_delayed)
   Mechanism  — privacy (laplace [global|coordinate calibration], gaussian,
                none)
   LocalRule  — sparse update (omd, tg, rda)
@@ -14,13 +15,27 @@ distributed `core.gossip.GossipDP`):
 
 `RunSpec` is the single declarative description that builds either engine;
 new scenarios register via the registries and never touch engine code.
+
+>>> from repro.api import RunSpec, MIXERS, MECHANISMS, LOCAL_RULES, CLIPPERS
+>>> "ring" in MIXERS.names() and "het_delayed" in MIXERS.names()
+True
+>>> ("laplace" in MECHANISMS.names(), "omd" in LOCAL_RULES.names(),
+...  "l2" in CLIPPERS.names())
+(True, True, True)
+>>> spec = RunSpec(nodes=4, dim=8, mixer="ring", mechanism="laplace",
+...                eps=1.0, local_rule="omd", lam=1e-3, alpha0=1.0)
+>>> spec.resolve_mixer().m
+4
+>>> round(float(spec.resolve_mechanism().scale(1.0, n=8)), 4)  # Lemma-1 mu
+5.6569
 """
 from repro.api.registry import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
                                 Registry)
 from repro.api.mixers import (AlternatingRingMixer, CompleteMixer,
                               DelayedMixer, DenseMatrixMixer,
-                              DisconnectedMixer, Mixer, MixerBase,
-                              RingRollMixer)
+                              DisconnectedMixer, HeterogeneousDelayMixer,
+                              Mixer, MixerBase, RingRollMixer, ring_read,
+                              ring_write, sample_edge_delays)
 from repro.api.mechanisms import (GaussianMechanism, LaplaceMechanism,
                                   Mechanism, NoNoise)
 from repro.api.rules import (LocalRule, OMDLassoRule, RDARule, StepContext,
@@ -33,7 +48,8 @@ __all__ = [
     "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS",
     "Mixer", "MixerBase", "DenseMatrixMixer", "RingRollMixer",
     "CompleteMixer", "DisconnectedMixer", "AlternatingRingMixer",
-    "DelayedMixer",
+    "DelayedMixer", "HeterogeneousDelayMixer",
+    "ring_read", "ring_write", "sample_edge_delays",
     "Mechanism", "LaplaceMechanism", "GaussianMechanism", "NoNoise",
     "LocalRule", "StepContext", "OMDLassoRule", "TruncatedGradientRule",
     "RDARule",

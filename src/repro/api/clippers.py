@@ -5,6 +5,15 @@ clipper is a first-class pipeline stage rather than inline engine code.
 Clippers act per node (axis 0 of every leaf) on either a bare (m, n) array
 or a node-stacked pytree — tree_util treats the bare array as a one-leaf
 tree, so one implementation serves both engines.
+
+>>> import jax.numpy as jnp
+>>> from repro.api import CLIPPERS
+>>> clipped, norms = CLIPPERS.build("l2", max_norm=1.0).clip(
+...     jnp.full((2, 4), 2.0))                  # per-node norm = 4
+>>> [round(v, 4) for v in norms.tolist()]
+[4.0, 4.0]
+>>> round(float(jnp.linalg.norm(clipped[0])), 4)
+1.0
 """
 from __future__ import annotations
 

@@ -10,6 +10,14 @@ Calibrations (Laplace):
   'coordinate' — beyond-paper per-coordinate sensitivity 2*alpha_t*L, the
                  deployable choice at transformer scale where the sqrt(n)
                  factor of the global bound drowns learning (DESIGN.md #3).
+
+>>> from repro.api import MECHANISMS
+>>> mech = MECHANISMS.build("laplace", eps=2.0, L=1.0,
+...                         calibration="coordinate")
+>>> float(mech.scale(0.5, n=100))               # 2 * alpha_t * L / eps
+0.5
+>>> MECHANISMS.build("none").is_private
+False
 """
 from __future__ import annotations
 

@@ -15,6 +15,22 @@ algebra: with ``noise_self=True`` (faithful Algorithm 1 line 10) the
 self-term uses theta~; with False the own-noise contribution
 ``diag(A) * (theta~ - theta)`` is removed, since a node's own state needs
 no network hop.
+
+Delayed (WAN) mixing: both engines keep a fixed-depth ring buffer of past
+theta~ broadcasts (see docs/delayed_gossip.md) and hand the whole ring to
+:meth:`Mixer.mix_history`; ``ring_write`` / ``ring_read`` below are the
+shared jit/scan-safe ring primitives. ``DelayedMixer`` applies one uniform
+staleness to every edge; ``HeterogeneousDelayMixer`` draws a per-edge delay
+from a seeded distribution (each WAN link has its own latency).
+
+>>> import jax.numpy as jnp
+>>> from repro.api.mixers import MIXERS, RingRollMixer
+>>> mixer = MIXERS.build("ring", m=4, self_weight=0.5)
+>>> x = jnp.arange(4.0).reshape(4, 1)
+>>> [round(v, 3) for v in mixer.apply(x, 0)[:, 0].tolist()]
+[1.0, 1.0, 2.0, 2.0]
+>>> MIXERS.build("delayed", m=4, inner="ring", delay=2).delay
+2
 """
 from __future__ import annotations
 
@@ -36,12 +52,44 @@ __all__ = [
     "DisconnectedMixer",
     "AlternatingRingMixer",
     "DelayedMixer",
+    "HeterogeneousDelayMixer",
+    "ring_write",
+    "ring_read",
+    "sample_edge_delays",
 ]
 
 
 def _bcast(diag: jax.Array, like: jax.Array) -> jax.Array:
     """Broadcast an (m,) diagonal against an (m, ...) leaf."""
     return diag.reshape((-1,) + (1,) * (like.ndim - 1)).astype(like.dtype)
+
+
+# -- history ring primitives (shared by both engines) ------------------------
+#
+# A history ring stores the last ``depth`` broadcast copies of one state leaf
+# as a stacked leading axis: hist (depth, m, ...). Round t (0-based) writes
+# slot t % depth, so the copy from d rounds ago (d < depth) lives at slot
+# (t - d) % depth. Both primitives are branch-free in traced values, so they
+# are safe inside jit / lax.scan (the round counter t is a traced int32).
+
+def ring_write(hist: jax.Array, t: jax.Array, value: jax.Array) -> jax.Array:
+    """Write this round's broadcast copy into its ring slot (t % depth)."""
+    return hist.at[t % hist.shape[0]].set(value)
+
+
+def ring_read(hist: jax.Array, t: jax.Array, d: int,
+              fallback: jax.Array) -> jax.Array:
+    """The broadcast copy from ``d`` rounds ago, AFTER this round's write.
+
+    During warm-up (t < d, nothing that old exists yet) returns ``fallback``
+    — the current theta~, i.e. the engine degrades to synchronous mixing
+    until the pipe is full. d == 0 reads back the slot ``ring_write`` just
+    filled, so a zero delay degenerates to the synchronous value bit-for-bit.
+    """
+    depth = hist.shape[0]
+    stale = jax.lax.dynamic_index_in_dim(hist, (t - d) % depth, 0,
+                                         keepdims=False)
+    return jnp.where(t >= d, stale, fallback)
 
 
 @runtime_checkable
@@ -69,6 +117,17 @@ class Mixer(Protocol):
         """Exchange where neighbor terms use the stale ``recv`` copies."""
         ...
 
+    def mix_history(self, clean: jax.Array, tilde: jax.Array,
+                    hist: jax.Array | None, noise_self: bool,
+                    t: jax.Array) -> jax.Array:
+        """Exchange against a (depth, m, ...) ring of past broadcasts.
+
+        ``hist`` is the post-``ring_write`` ring for this round (slot
+        t % depth holds the current theta~); None when the engine carries no
+        history (mixer.delay == 0), in which case this must equal mix().
+        """
+        ...
+
 
 class MixerBase:
     """Default noise-placement algebra shared by all concrete mixers.
@@ -76,9 +135,10 @@ class MixerBase:
     Subclasses implement :meth:`apply` and :meth:`diag`; the generic
     identities below then cover every topology:
 
-      mix        = A x~                      (noise_self)
-                 = A x~ - diag * (x~ - x)    (own-noise removed)
-      mix_delayed= A r - diag * r + diag * s where s = x~ or x
+      mix         = A x~                      (noise_self)
+                  = A x~ - diag * (x~ - x)    (own-noise removed)
+      mix_delayed = A r - diag * r + diag * s where s = x~ or x
+      mix_history = mix_delayed with r read from the ring at self.delay
     """
 
     m: int = 0
@@ -100,6 +160,18 @@ class MixerBase:
         d = _bcast(self.diag(t), recv)
         self_term = tilde if noise_self else clean
         return self.apply(recv, t) - d * recv + d * self_term
+
+    def mix_history(self, clean, tilde, hist, noise_self, t):
+        if not self.delay:
+            return self.mix(clean, tilde, noise_self, t)
+        if hist is None:
+            # a lenient fallback here would silently run the synchronous
+            # exchange while the caller believes it measured staleness
+            raise ValueError(
+                f"{type(self).__name__} declares delay={self.delay} but no "
+                "history ring was provided (engine state missing .history)")
+        recv = ring_read(hist, t, self.delay, tilde)
+        return self.mix_delayed(clean, tilde, recv, noise_self, t)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +277,9 @@ class DisconnectedMixer(MixerBase):
     def mix_delayed(self, clean, tilde, recv, noise_self, t):
         return clean
 
+    def mix_history(self, clean, tilde, hist, noise_self, t):
+        return clean
+
 
 @dataclasses.dataclass(frozen=True)
 class AlternatingRingMixer(MixerBase):
@@ -225,10 +300,11 @@ class AlternatingRingMixer(MixerBase):
 
 @dataclasses.dataclass(frozen=True)
 class DelayedMixer(MixerBase):
-    """Wrap any mixer with a WAN delay: neighbor terms arrive ``delay``
-    rounds late (paper §VI future work). The engines own the history ring
-    buffer; this wrapper only declares the staleness and delegates the
-    algebra to the inner mixer."""
+    """Wrap any mixer with a uniform WAN delay: neighbor terms arrive
+    ``delay`` rounds late (paper §VI future work). The engines own the
+    history ring buffer (see docs/delayed_gossip.md); this wrapper only
+    declares the staleness and delegates the algebra to the inner mixer
+    (mix_history comes from MixerBase and reads the ring at ``delay``)."""
 
     inner: Mixer
     delay: int = 1
@@ -252,6 +328,123 @@ class DelayedMixer(MixerBase):
 
     def mix_delayed(self, clean, tilde, recv, noise_self, t):
         return self.inner.mix_delayed(clean, tilde, recv, noise_self, t)
+
+
+def sample_edge_delays(m: int, max_delay: int, dist: str = "uniform",
+                       seed: int = 0,
+                       support: np.ndarray | None = None) -> np.ndarray:
+    """Draw an (m, m) int matrix of per-edge staleness values.
+
+    dist: 'constant'  — every edge lags exactly max_delay rounds;
+          'uniform'   — integer delays uniform on [0, max_delay];
+          'geometric' — mostly-fresh links with a heavy tail (p=0.5),
+                        clipped to max_delay.
+    The diagonal is always 0 (a node's own state needs no network hop) and
+    delays outside ``support`` (the union of edges with nonzero A weight)
+    are zeroed so they cannot inflate the ring depth.
+    """
+    rng = np.random.default_rng(seed)
+    if dist == "constant":
+        D = np.full((m, m), max_delay, np.int32)
+    elif dist == "uniform":
+        D = rng.integers(0, max_delay + 1, size=(m, m)).astype(np.int32)
+    elif dist == "geometric":
+        D = np.clip(rng.geometric(0.5, size=(m, m)) - 1, 0,
+                    max_delay).astype(np.int32)
+    else:
+        raise ValueError(
+            f"unknown delay_dist {dist!r}; expected "
+            "'constant' | 'uniform' | 'geometric'")
+    np.fill_diagonal(D, 0)
+    if support is not None:
+        D = np.where(support, D, 0).astype(np.int32)
+        np.fill_diagonal(D, 0)
+    return D
+
+
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousDelayMixer(MixerBase):
+    """Per-edge WAN delays: edge (i, j) delivers node j's broadcast to node
+    i ``delays[i, j]`` rounds late, with the per-edge lag drawn once at
+    construction from a seeded distribution (``sample_edge_delays``).
+
+    Needs the dense form of A(t) — the mix decomposes into one masked
+    matrix-apply per distinct delay class d:
+
+        out_i = A_ii * s_i + sum_d sum_{j != i, delays[i,j]=d} A_ij(t) * r_j(d)
+
+    where r(d) is the ring entry from d rounds ago and s is the current
+    theta~ (or clean theta when noise_self=False). The loop over delay
+    classes is a static Python loop of depth <= max_delay + 1 — fine under
+    jit/scan since the masks are construction-time constants.
+    """
+
+    inner: DenseMatrixMixer
+    delays: Any = None           # (m, m) np.int32; diagonal forced to 0
+    name: str = "het_delayed"
+
+    def __post_init__(self):
+        D = np.asarray(self.delays, np.int32)
+        if D.shape != (self.inner.m, self.inner.m):
+            raise ValueError(
+                f"delays must be ({self.inner.m}, {self.inner.m}), got {D.shape}")
+        if (D < 0).any():
+            raise ValueError("per-edge delays must be >= 0")
+        D = D.copy()
+        np.fill_diagonal(D, 0)
+        object.__setattr__(self, "delays", D)
+
+    @classmethod
+    def from_topology(cls, topology: str, m: int, delay: int = 1,
+                      delay_dist: str = "uniform", seed: int = 0,
+                      **kw) -> "HeterogeneousDelayMixer":
+        inner = DenseMatrixMixer.from_topology(topology, m, seed=seed, **kw)
+        support = (np.asarray(inner.stack) > 0).any(axis=0)
+        np.fill_diagonal(support, False)
+        return cls(inner=inner,
+                   delays=sample_edge_delays(m, delay, delay_dist, seed,
+                                             support=support))
+
+    @property
+    def m(self) -> int:
+        return self.inner.m
+
+    @property
+    def delay(self) -> int:
+        return int(self.delays.max())
+
+    def apply(self, x, t):
+        return self.inner.apply(x, t)
+
+    def diag(self, t):
+        return self.inner.diag(t)
+
+    def mix_delayed(self, clean, tilde, recv, noise_self, t):
+        raise NotImplementedError(
+            "HeterogeneousDelayMixer has no single stale view — MixerBase's "
+            "uniform-recv algebra would silently ignore the per-edge delays; "
+            "use mix_history with the engine's ring")
+
+    def mix_history(self, clean, tilde, hist, noise_self, t):
+        if hist is None:
+            if self.delay:
+                raise ValueError(
+                    "HeterogeneousDelayMixer needs the engine's history ring "
+                    "(GossipState/SimState.history); got None")
+            hist = tilde[None]
+        A = self.inner.stack[t % self.inner.stack.shape[0]]
+        self_term = tilde if noise_self else clean
+        out = _bcast(self.diag(t), tilde) * self_term
+        offdiag = ~np.eye(self.m, dtype=bool)
+        for d in range(self.delay + 1):
+            mask = (self.delays == d) & offdiag
+            if not mask.any():   # empty delay class: skip the dead tensordot
+                continue
+            Ad = A * jnp.asarray(mask, A.dtype)
+            recv = ring_read(hist, t, d, tilde)
+            out = out + jnp.tensordot(Ad, recv.astype(Ad.dtype),
+                                      axes=1).astype(tilde.dtype)
+        return out
 
 
 # -- registry entries --------------------------------------------------------
@@ -300,3 +493,11 @@ def _delayed(m: int, inner: str | Mixer = "ring", delay: int = 1,
              seed: int = 0, **kw) -> Mixer:
     return DelayedMixer(inner=MIXERS.build(inner, m=m, seed=seed, **kw),
                         delay=delay)
+
+
+@MIXERS.register("het_delayed")
+def _het_delayed(m: int, inner: str = "ring", delay: int = 1,
+                 delay_dist: str = "uniform", seed: int = 0, **kw) -> Mixer:
+    return HeterogeneousDelayMixer.from_topology(inner, m, delay=delay,
+                                                 delay_dist=delay_dist,
+                                                 seed=seed, **kw)

@@ -16,6 +16,17 @@ Factories receive the registry-specific build kwargs (documented on each
 registry instance below) plus any user options; extra kwargs a factory does
 not need are filtered out by signature inspection, so factories only declare
 what they use.
+
+>>> from repro.api import MIXERS
+>>> MIXERS.build("ring", m=4).m                 # declarative path
+4
+>>> mixer = MIXERS.build("ring", m=4)
+>>> MIXERS.build(mixer) is mixer                # instances pass through
+True
+>>> MIXERS.build("nope", m=4)
+Traceback (most recent call last):
+    ...
+repro.api.registry.UnknownEntryError: unknown mixer 'nope'...
 """
 from __future__ import annotations
 

@@ -12,6 +12,15 @@ Families (paper §I):
           gossip mixes w itself; w <- shrink(w_mixed - a g, a lam).
   'rda' — L1 regularized dual averaging (Xiao '10, ref [12]): gossip mixes
           the cumulative gradient G; w = -(sqrt(t)/gamma) shrink(G/t, lam).
+
+>>> import jax.numpy as jnp, numpy as np
+>>> from repro.api import LOCAL_RULES, StepContext
+>>> rule = LOCAL_RULES.build("omd", prox_kind="l1")
+>>> ctx = StepContext(t=jnp.asarray(1), alpha_t=jnp.asarray(1.0),
+...                   lam_t=jnp.asarray(1.0), lam=1.0)
+>>> theta = jnp.array([[0.5, -2.0, 0.1]])
+>>> np.asarray(rule.primal(theta, ctx)).tolist()     # Lasso soft-threshold
+[[0.0, -1.0, 0.0]]
 """
 from __future__ import annotations
 

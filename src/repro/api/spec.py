@@ -14,6 +14,18 @@ Fields accept registry names (declarative path: CLI flags, sweep configs,
 JSON) or constructed protocol instances (fully custom path); scenario
 plugins register under `repro.api` registries and become available to both
 engines without touching engine code.
+
+>>> from repro.api import RunSpec
+>>> spec = RunSpec(nodes=4, dim=8, mixer="ring", eps=float("inf"))
+>>> type(spec.build_simulator()).__name__
+'Algorithm1'
+>>> type(spec.build_distributed()).__name__
+'GossipDP'
+>>> spec.replace(delay=3).resolve_mixer().delay     # uniform WAN staleness
+3
+>>> het = spec.replace(delay=2, delay_dist="uniform").resolve_mixer()
+>>> type(het).__name__, 0 <= het.delay <= 2
+('HeterogeneousDelayMixer', True)
 """
 from __future__ import annotations
 
@@ -22,7 +34,8 @@ from typing import Any, Callable
 
 from repro.api.clippers import CLIPPERS, Clipper
 from repro.api.mechanisms import MECHANISMS, Mechanism
-from repro.api.mixers import MIXERS, DelayedMixer, Mixer
+from repro.api.mixers import (MIXERS, DelayedMixer, HeterogeneousDelayMixer,
+                              Mixer)
 from repro.api.rules import LOCAL_RULES, LocalRule
 from repro.core.omd import OMDConfig
 
@@ -45,7 +58,14 @@ class RunSpec:
              clipper factories (explicit *_options win).
     alpha0, schedule, lam, horizon, prox_kind:
              the OMD schedule (Theorem 2) shared by every local rule.
-    delay:   WAN staleness in rounds — wraps the mixer in DelayedMixer.
+    delay:   WAN staleness in rounds — wraps the mixer in DelayedMixer
+             (both engines allocate a delay-deep history ring).
+    delay_dist:
+             per-edge heterogeneous staleness: 'constant' | 'uniform' |
+             'geometric' builds a HeterogeneousDelayMixer over the dense
+             form of ``mixer`` with per-edge delays drawn from the seeded
+             distribution, capped at ``delay``. None (default) keeps the
+             uniform-delay behaviour.
     """
 
     nodes: int
@@ -69,12 +89,35 @@ class RunSpec:
     horizon: int | None = None
     prox_kind: str = "l1"
     delay: int = 0
+    delay_dist: str | None = None
     seed: int = 0
     loss_and_grad: Callable | None = None
 
     # -- protocol resolution -------------------------------------------------
 
     def resolve_mixer(self) -> Mixer:
+        if self.delay_dist is not None:
+            if not isinstance(self.mixer, str):
+                raise ValueError(
+                    "delay_dist needs a topology NAME for the dense per-edge "
+                    "decomposition (got a constructed mixer instance); build "
+                    "a HeterogeneousDelayMixer directly instead")
+            if self.delay < 1:
+                raise ValueError("delay_dist needs delay >= 1 (the cap on "
+                                 "per-edge staleness)")
+            try:
+                return HeterogeneousDelayMixer.from_topology(
+                    self.mixer, self.nodes, delay=self.delay,
+                    delay_dist=self.delay_dist, seed=self.seed,
+                    **self.mixer_options)
+            except ValueError as err:
+                # e.g. mixer='ring_alternating' is a valid MIXERS name but
+                # not a dense GossipGraph topology — say which knob is at
+                # fault instead of surfacing a bare 'unknown topology'
+                raise ValueError(
+                    f"delay_dist={self.delay_dist!r} (per-edge delays need "
+                    f"the dense GossipGraph form of mixer={self.mixer!r}): "
+                    f"{err}") from None
         mixer = MIXERS.build(self.mixer, self.mixer_options,
                              m=self.nodes, seed=self.seed)
         if getattr(mixer, "m", self.nodes) != self.nodes:

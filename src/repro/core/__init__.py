@@ -12,12 +12,13 @@ Modules:
 Both engines are thin compositions over the `repro.api` protocol layer
 (Mixer / Mechanism / LocalRule / Clipper); build them declaratively with
 `repro.api.RunSpec`. The legacy constructors (graph=/privacy=/method= and
-gossip=/privacy=) keep working for one release with a DeprecationWarning.
+gossip=/privacy=) were removed after their one-release deprecation window;
+see README §Migrating for the RunSpec equivalents.
 """
 from repro.core.graph import GossipGraph
 from repro.core.omd import OMDConfig, OnlineMirrorDescent
 from repro.core.privacy import PrivacyConfig, PrivacyAccountant
-from repro.core.gossip import GossipConfig, GossipDP
+from repro.core.gossip import GossipDP, GossipState
 from repro.core.algorithm1 import Algorithm1
 
 __all__ = [
@@ -26,7 +27,7 @@ __all__ = [
     "OnlineMirrorDescent",
     "PrivacyConfig",
     "PrivacyAccountant",
-    "GossipConfig",
     "GossipDP",
+    "GossipState",
     "Algorithm1",
 ]

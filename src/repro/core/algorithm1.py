@@ -11,30 +11,29 @@ method / mechanism branching of its own: new scenarios register in the
 `repro.api.RunSpec.build_simulator`) and plug in without touching this
 file. The distributed strategy (core/gossip.py) composes the SAME protocol
 instances over node-stacked pytrees, which is what the cross-engine
-equivalence tests rely on.
+equivalence tests rely on. The pre-registry constructor kwargs
+(graph=/privacy=/method=) were removed; see README §Migrating.
 
-The legacy constructor (graph= / privacy= / method= / rda_gamma= kwargs)
-still works for one release and maps onto the protocol stages with a
-DeprecationWarning.
+Delayed (WAN) gossip: a mixer with ``delay > 0`` makes :class:`SimState`
+carry a (delay+1, m, n) history ring of past theta~ broadcasts, rotated
+each round with the same jit/scan-safe ring primitives the distributed
+engine uses (`repro.api.mixers.ring_write` / `ring_read`); the equation-to-
+code mapping lives in docs/algorithm.md and docs/delayed_gossip.md.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.api.clippers import Clipper, PerNodeL2Clipper
-from repro.api.mechanisms import LaplaceMechanism, Mechanism
-from repro.api.mixers import DenseMatrixMixer, Mixer
-from repro.api.registry import LOCAL_RULES
+from repro.api.mechanisms import Mechanism
+from repro.api.mixers import DelayedMixer, Mixer, ring_write
 from repro.api.rules import LocalRule, OMDLassoRule, StepContext
 from repro.core import prox
-from repro.core.graph import GossipGraph
 from repro.core.omd import OMDConfig
-from repro.core.privacy import PrivacyConfig
 
 __all__ = ["Algorithm1", "SimState", "RoundOutput", "hinge_loss_and_grad"]
 
@@ -80,9 +79,10 @@ class Algorithm1:
     rules; n is the feature dimension; loss_and_grad defaults to the
     paper's hinge workload.
 
-    Deprecated (one release): graph= / privacy= / method= / rda_gamma=
-    build the matching protocol stages; delay= wraps the history buffer the
-    way `RunSpec(delay=...)` does via DelayedMixer.
+    delay: WAN staleness in rounds. Usually declared by the mixer itself
+    (`DelayedMixer` / `HeterogeneousDelayMixer` / any mixer with a delay=
+    option); the engine kwarg remains for direct construction and must
+    agree with a delay-carrying mixer.
     """
 
     omd: OMDConfig
@@ -93,48 +93,32 @@ class Algorithm1:
     clipper: Clipper | None = None
     loss_and_grad: Callable = staticmethod(hinge_loss_and_grad)
     delay: int = 0
-    # -- deprecated legacy surface ------------------------------------------
-    graph: GossipGraph | None = None
-    privacy: PrivacyConfig | None = None
-    method: str | None = None
-    rda_gamma: float = 1.0
 
     def __post_init__(self):
-        legacy = [k for k, v in (("graph", self.graph), ("privacy", self.privacy),
-                                 ("method", self.method)) if v is not None]
-        if legacy:
-            warnings.warn(
-                f"Algorithm1({', '.join(legacy)}=...) is deprecated; build "
-                "protocol stages via repro.api.RunSpec instead",
-                DeprecationWarning, stacklevel=3)
         if self.mixer is None:
-            if self.graph is None:
-                raise ValueError("Algorithm1 needs mixer= (or legacy graph=)")
-            self.mixer = DenseMatrixMixer.from_graph(self.graph)
+            raise ValueError("Algorithm1 needs mixer= (a repro.api Mixer)")
         if self.mechanism is None:
-            if self.privacy is None:
-                raise ValueError("Algorithm1 needs mechanism= (or legacy privacy=)")
-            self.mechanism = LaplaceMechanism(
-                eps=self.privacy.eps, L=self.privacy.L,
-                calibration=self.privacy.clip_style,
-                noise_self=self.privacy.noise_self)
+            raise ValueError("Algorithm1 needs mechanism= (a repro.api Mechanism)")
         if self.clipper is None:
             # default to the bound the mechanism's sensitivity is calibrated
             # against — a mismatch would silently void the DP guarantee
             self.clipper = PerNodeL2Clipper(
                 max_norm=getattr(self.mechanism, "L", 1.0))
         if self.local_rule is None:
-            self.local_rule = (
-                LOCAL_RULES.build(self.method, gamma=self.rda_gamma)
-                if self.method is not None else OMDLassoRule())
+            self.local_rule = OMDLassoRule(prox_kind=self.omd.prox_kind)
         if self.delay < 0:
             raise ValueError("delay must be >= 0")
-        # staleness can come from the engine kwarg or a DelayedMixer wrapper
-        mixer_delay = getattr(self.mixer, "delay", 0)
+        # staleness can come from the engine kwarg or a delay-carrying mixer
+        mixer_delay = int(getattr(self.mixer, "delay", 0))
         if self.delay and mixer_delay and self.delay != mixer_delay:
             raise ValueError(
                 f"conflicting delays: Algorithm1(delay={self.delay}) but the "
                 f"mixer already carries delay={mixer_delay}")
+        if self.delay and not mixer_delay:
+            # mix_history dispatches on the MIXER's delay, so a bare engine
+            # kwarg must wrap the mixer or the run would silently stay
+            # synchronous while paying for the ring
+            self.mixer = DelayedMixer(inner=self.mixer, delay=self.delay)
         self.delay = max(self.delay, mixer_delay)
 
     @property
@@ -186,14 +170,11 @@ class Algorithm1:
         # Step 10: gossip mixing with doubly-stochastic A(t).
         new_history = state.history
         if self.delay:
-            # WAN staleness: neighbors see theta~ from `delay` rounds ago
-            # (own state stays current). History is a ring buffer.
-            slot = state.t % (self.delay + 1)
-            new_history = state.history.at[slot].set(theta_tilde)
-            recv_slot = (state.t + 1) % (self.delay + 1)  # oldest = t - delay
-            theta_recv = jnp.where(state.t >= self.delay,
-                                   state.history[recv_slot], theta_tilde)
-            mixed = self.mixer.mix_delayed(state.theta, theta_tilde, theta_recv,
+            # WAN staleness: neighbor terms are read from the history ring
+            # (theta~ from `delay` rounds ago; own state stays current).
+            new_history = ring_write(state.history, state.t, theta_tilde)
+            mixed = self.mixer.mix_history(state.theta, theta_tilde,
+                                           new_history,
                                            self.mechanism.noise_self, state.t)
         else:
             mixed = self.mixer.mix(state.theta, theta_tilde,

@@ -10,27 +10,33 @@ within-pod data parallelism is ordinary all-reduce handled by GSPMD).
 The engine is a thin composition over the SAME `repro.api` protocol stages
 as the dense simulator — Clipper -> Mechanism -> Mixer -> LocalRule applied
 per node-stacked leaf — and contains no topology / mechanism / method
-branching of its own. Roll-based mixers (`RingRollMixer`,
-`AlternatingRingMixer`) express the exchange as ``jnp.roll`` along the node
-axis: under GSPMD a roll of a sharded axis lowers to ``collective-permute``
-— the neighbor exchange of the paper's communication graph mapped onto the
-physical ICI ring, with no all-reduce for theta (verifiable in the dry-run
-HLO, see EXPERIMENTS.md §Dry-run). Dense-matrix mixers also work (they
-tensordot the node axis) for arbitrary topologies, at all-gather cost.
+branching of its own. Stages are protocol instances built through the
+`repro.api` registries, usually via ``RunSpec.build_distributed()``; the
+pre-registry string/config constructor kwargs were removed (see README
+§Migrating). Roll-based mixers (`RingRollMixer`, `AlternatingRingMixer`)
+express the exchange as ``jnp.roll`` along the node axis: under GSPMD a roll
+of a sharded axis lowers to ``collective-permute`` — the neighbor exchange
+of the paper's communication graph mapped onto the physical ICI ring, with
+no all-reduce for theta (verifiable in the dry-run HLO, see EXPERIMENTS.md
+§Dry-run). Dense-matrix mixers also work (they tensordot the node axis) for
+arbitrary topologies, at all-gather cost.
+
+Delayed (WAN) gossip: when the installed mixer declares ``delay > 0``
+(`DelayedMixer`, `HeterogeneousDelayMixer`, or any mixer built with a
+``delay=`` option), :class:`GossipState` carries a fixed-depth parameter
+**history ring** — every theta leaf gains a stacked leading axis of
+``delay + 1`` past broadcast copies, rotated each round with jit/scan-safe
+dynamic indexing — and the update mixes against views from ``delay`` rounds
+ago. Memory cost is O(delay x params) per node; see docs/delayed_gossip.md.
 
 Memory note: node-parallel params cost the same per chip as replicated data
 parallelism (replication redundancy is repurposed as per-node state), but the
 technique precludes ZeRO-style optimizer-state sharding — each node owns its
 theta. Recorded as a finding in EXPERIMENTS.md.
-
-The legacy constructor (gossip=GossipConfig(...), privacy=PrivacyConfig(...))
-still works for one release and maps onto the protocol stages with a
-DeprecationWarning; build new code through `repro.api.RunSpec`.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, NamedTuple
 
 import jax
@@ -38,76 +44,65 @@ import jax.numpy as jnp
 
 from repro.api.clippers import Clipper, PerNodeL2Clipper
 from repro.api.mechanisms import LaplaceMechanism, Mechanism
-from repro.api.mixers import Mixer
-from repro.api.registry import MIXERS
+from repro.api.mixers import Mixer, ring_write
 from repro.api.rules import LocalRule, OMDLassoRule, StepContext
 from repro.core import prox
 from repro.core.omd import OMDConfig
-from repro.core.privacy import PrivacyConfig
 
-__all__ = ["GossipConfig", "GossipState", "GossipDP", "gossip_mix_tree",
-           "per_node_clip"]
-
-# Legacy names restricted to the shard-friendly (roll/mean based) mixers —
-# no dense matrix, so the node axis never needs an all-gather.
-DISTRIBUTED_TOPOLOGIES = ("ring", "complete", "disconnected", "ring_alternating")
-
-
-@dataclasses.dataclass(frozen=True)
-class GossipConfig:
-    """DEPRECATED distributed gossip knobs — use `repro.api.RunSpec` /
-    `MIXERS` registry names instead. Retained for one release.
-
-    topology:    one of DISTRIBUTED_TOPOLOGIES (legacy names; each maps to a
-                 `repro.api.mixers` class via ``to_mixer``).
-    self_weight: a_ii for the ring ((1-a_ii)/2 per neighbor).
-    nodes:       m — must equal the mesh axis size the node dim is sharded on.
-    """
-
-    topology: str = "ring"
-    self_weight: float = 0.5
-    nodes: int = 16
-
-    def __post_init__(self):
-        if self.topology not in DISTRIBUTED_TOPOLOGIES:
-            raise ValueError(f"topology {self.topology!r} not in {DISTRIBUTED_TOPOLOGIES}")
-
-    def to_mixer(self) -> Mixer:
-        return MIXERS.build(self.topology, m=self.nodes,
-                            self_weight=self.self_weight)  # injected: non-ring
-                                                           # mixers ignore it
+__all__ = ["GossipState", "GossipDP", "gossip_mix_tree", "per_node_clip"]
 
 
 class GossipState(NamedTuple):
     theta: Any          # pytree; every leaf (m, ...) float32
     t: jax.Array        # round counter
-    key: jax.Array      # PRNG key for the Laplace mechanism
+    key: jax.Array      # PRNG key for the privacy mechanism
+    history: Any = None  # pytree like theta with leaves (delay+1, m, ...)
+    #                      — ring of past theta~ broadcasts; None when the
+    #                      mixer is synchronous (delay == 0)
 
 
 def gossip_mix_tree(theta: Any, key: jax.Array, noise_scale: jax.Array,
-                    mixer: Mixer | GossipConfig, noise_self: bool = True,
-                    t: jax.Array = 0, mechanism: Mechanism | None = None) -> Any:
-    """Noise + mix every (m, ...) leaf. Returns the post-mixing theta pytree.
+                    mixer: Mixer, noise_self: bool = True,
+                    t: jax.Array = 0, mechanism: Mechanism | None = None,
+                    history: Any = None) -> Any:
+    """Noise + mix every (m, ...) leaf of a node-stacked pytree.
 
-    ``mixer`` may be a `repro.api` Mixer or a legacy GossipConfig. When a
-    ``mechanism`` is given, its own ``noise_self`` wins (the positional flag
-    exists for the legacy mechanism-less call style and must not contradict
-    an explicit mechanism); otherwise the Laplace sampler at ``noise_scale``
-    is used with the flag as passed.
+    When a ``mechanism`` is given, its own ``noise_self`` wins (the
+    positional flag exists for the mechanism-less call style and must not
+    contradict an explicit mechanism); otherwise the Laplace sampler at
+    ``noise_scale`` is used with the flag as passed.
+
+    ``history`` is the per-leaf ring of past broadcasts (leaves
+    (delay+1, m, ...)). When given, each leaf's current theta~ is written
+    into its ring slot and the mixer's :meth:`Mixer.mix_history` consumes
+    the updated ring; the return value is then ``(mixed, new_history)``.
+    Without it the mix is synchronous and only the mixed pytree is returned.
     """
-    if isinstance(mixer, GossipConfig):
-        mixer = mixer.to_mixer()
     if mechanism is not None:
         mech, noise_self = mechanism, mechanism.noise_self
     else:
         mech = LaplaceMechanism(noise_self=noise_self)
     leaves, treedef = jax.tree_util.tree_flatten(theta)
+    hist_leaves = (jax.tree_util.tree_leaves(history)
+                   if history is not None else [None] * len(leaves))
     keys = jax.random.split(key, len(leaves))
-    mixed = []
-    for k, leaf in zip(keys, leaves):
+    mixed, new_hist = [], []
+    for k, leaf, hist in zip(keys, leaves, hist_leaves):
         delta = mech.sample(k, leaf.shape, noise_scale, leaf.dtype)
-        mixed.append(mixer.mix(leaf, leaf + delta, noise_self, t))
-    return jax.tree_util.tree_unflatten(treedef, mixed)
+        tilde = leaf + delta
+        if hist is None:
+            # mix_history == mix for synchronous mixers, and raises for a
+            # delay-carrying mixer whose ring the caller forgot to pass —
+            # a bare mix() here would silently drop the declared staleness
+            mixed.append(mixer.mix_history(leaf, tilde, None, noise_self, t))
+        else:
+            hist = ring_write(hist, t, tilde)
+            new_hist.append(hist)
+            mixed.append(mixer.mix_history(leaf, tilde, hist, noise_self, t))
+    mixed = jax.tree_util.tree_unflatten(treedef, mixed)
+    if history is None:
+        return mixed
+    return mixed, jax.tree_util.tree_unflatten(treedef, new_hist)
 
 
 def per_node_clip(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
@@ -125,9 +120,8 @@ class GossipDP:
 
     Works on node-stacked pytrees; pure function of state so it jits/lowers
     under any mesh. The training driver computes per-node grads (vmapped
-    model) and calls :meth:`update`. Protocol stages come from `repro.api`
-    (usually via ``RunSpec.build_distributed()``); the legacy
-    gossip=/privacy= kwargs still resolve to them for one release.
+    model) and calls :meth:`update`. Protocol stages come from `repro.api`,
+    usually via ``RunSpec.build_distributed()``.
     """
 
     omd: OMDConfig
@@ -135,30 +129,13 @@ class GossipDP:
     mechanism: Mechanism | None = None
     local_rule: LocalRule | None = None
     clipper: Clipper | None = None
-    # -- deprecated legacy surface ------------------------------------------
-    gossip: GossipConfig | None = None
-    privacy: PrivacyConfig | None = None
 
     def __post_init__(self):
-        legacy = [k for k, v in (("gossip", self.gossip),
-                                 ("privacy", self.privacy)) if v is not None]
-        if legacy:
-            warnings.warn(
-                f"GossipDP({', '.join(legacy)}=...) is deprecated; build "
-                "protocol stages via repro.api.RunSpec instead",
-                DeprecationWarning, stacklevel=3)
-        set_ = lambda k, v: object.__setattr__(self, k, v)
         if self.mixer is None:
-            if self.gossip is None:
-                raise ValueError("GossipDP needs mixer= (or legacy gossip=)")
-            set_("mixer", self.gossip.to_mixer())
+            raise ValueError("GossipDP needs mixer= (a repro.api Mixer)")
         if self.mechanism is None:
-            if self.privacy is None:
-                raise ValueError("GossipDP needs mechanism= (or legacy privacy=)")
-            set_("mechanism", LaplaceMechanism(
-                eps=self.privacy.eps, L=self.privacy.L,
-                calibration=self.privacy.clip_style,
-                noise_self=self.privacy.noise_self))
+            raise ValueError("GossipDP needs mechanism= (a repro.api Mechanism)")
+        set_ = lambda k, v: object.__setattr__(self, k, v)
         if self.clipper is None:
             # default to the bound the mechanism's sensitivity is calibrated
             # against — a mismatch would silently void the DP guarantee
@@ -166,16 +143,23 @@ class GossipDP:
                 max_norm=getattr(self.mechanism, "L", 1.0)))
         if self.local_rule is None:
             set_("local_rule", OMDLassoRule(prox_kind=self.omd.prox_kind))
-        if getattr(self.mixer, "delay", 0):
-            raise ValueError(
-                "delayed mixing is simulator-only for now — GossipState has "
-                "no history buffer; use Algorithm1 / RunSpec.build_simulator")
+
+    @property
+    def delay(self) -> int:
+        """Staleness depth declared by the mixer (0 = synchronous)."""
+        return int(getattr(self.mixer, "delay", 0))
 
     def init(self, node_params: Any, key: jax.Array) -> GossipState:
         theta = jax.tree_util.tree_map(
             lambda p: self.local_rule.init_state(p.astype(jnp.float32)),
             node_params)
-        return GossipState(theta=theta, t=jnp.zeros((), jnp.int32), key=key)
+        history = None
+        if self.delay:
+            depth = self.delay + 1
+            history = jax.tree_util.tree_map(
+                lambda th: jnp.zeros((depth,) + th.shape, th.dtype), theta)
+        return GossipState(theta=theta, t=jnp.zeros((), jnp.int32), key=key,
+                           history=history)
 
     def param_count_per_node(self, theta: Any) -> int:
         return sum(
@@ -200,11 +184,18 @@ class GossipDP:
         scale = self.mechanism.scale(ctx.alpha_t, n)
 
         key, sub = jax.random.split(state.key)
-        mixed = gossip_mix_tree(state.theta, sub, scale, self.mixer,
-                                t=state.t, mechanism=self.mechanism)
+        new_history = state.history
+        if self.delay:
+            mixed, new_history = gossip_mix_tree(
+                state.theta, sub, scale, self.mixer, t=state.t,
+                mechanism=self.mechanism, history=state.history)
+        else:
+            mixed = gossip_mix_tree(state.theta, sub, scale, self.mixer,
+                                    t=state.t, mechanism=self.mechanism)
         theta_next = jax.tree_util.tree_map(
             lambda th, g: self.local_rule.dual_step(th, g, ctx), mixed, grads)
-        new_state = GossipState(theta=theta_next, t=state.t + 1, key=key)
+        new_state = GossipState(theta=theta_next, t=state.t + 1, key=key,
+                                history=new_history)
         metrics = {
             "alpha_t": ctx.alpha_t,
             "noise_scale": scale,

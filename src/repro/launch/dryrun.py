@@ -73,9 +73,12 @@ def pick_microbatches(cfg, shape, mesh) -> int:
 
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                strategy: str = "gossip", recipe: steps.TrainRecipe | None = None,
-               save: bool = True, verbose: bool = True, opt: str = "") -> dict:
+               save: bool = True, verbose: bool = True, opt: str = "",
+               delay: int = 0, delay_dist: str | None = None) -> dict:
     """opt: comma-separated perf-variant flags ('last_only', ...) — results
-    are saved under strategy+opt so baselines stay untouched."""
+    are saved under strategy+opt so baselines stay untouched. delay /
+    delay_dist install a history ring for WAN-stale gossip (ignored when an
+    explicit recipe is passed)."""
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_name = "2x16x16" if multi_pod else "16x16"
     opt_flags = set(f for f in opt.split(",") if f)
@@ -101,6 +104,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         recipe = steps.TrainRecipe(
             strategy=strategy,
             microbatches=pick_microbatches(cfg, shape, mesh) if shape.kind == "train" else 1,
+            delay=delay, delay_dist=delay_dist,
         )
     chips = int(np.prod(list(mesh.shape.values())))
     t0 = time.time()
@@ -144,10 +148,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                     theta_specs = jax.tree_util.tree_map(
                         _add_data, theta_specs, state_struct.gossip.theta,
                         is_leaf=lambda x: isinstance(x, P))
-                from jax.sharding import PartitionSpec as P
-                state_specs = steps.GossipTrainState(
-                    gossip=type(state_struct.gossip)(
-                        theta=theta_specs, t=P(), key=P()))
+                state_specs = steps.gossip_state_pspecs(state_struct,
+                                                        theta_specs)
             else:
                 step, init = steps.make_allreduce_train_step(model, recipe)
                 state_struct = jax.eval_shape(init)
@@ -175,9 +177,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 if strategy == "gossip":
                     theta_specs = jax.tree_util.tree_map_with_path(
                         _ep, theta_specs, is_leaf=lambda x: isinstance(x, P))
-                    state_specs = steps.GossipTrainState(
-                        gossip=type(state_struct.gossip)(
-                            theta=theta_specs, t=P(), key=P()))
+                    state_specs = steps.gossip_state_pspecs(state_struct,
+                                                            theta_specs)
             batch_struct, batch_specs = steps.train_batch_specs(cfg, shape, mesh, strategy)
             in_shardings = (steps.named(mesh, state_specs), steps.named(mesh, batch_specs))
             fn = jax.jit(step, in_shardings=in_shardings, donate_argnums=(0,))
@@ -313,6 +314,11 @@ def main() -> int:
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--strategy", default="gossip", choices=["gossip", "allreduce"])
     ap.add_argument("--opt", default="", help="perf-variant flags, comma separated")
+    ap.add_argument("--delay", type=int, default=0,
+                    help="WAN gossip staleness (rounds); adds the history "
+                         "ring to the lowered GossipState")
+    ap.add_argument("--delay-dist", default=None,
+                    choices=["constant", "uniform", "geometric"])
     args = ap.parse_args()
 
     runs = []
@@ -328,7 +334,8 @@ def main() -> int:
     failures = 0
     for arch, shape in runs:
         try:
-            dryrun_one(arch, shape, multi_pod=args.multi_pod, strategy=args.strategy, opt=args.opt)
+            dryrun_one(arch, shape, multi_pod=args.multi_pod, strategy=args.strategy,
+                       opt=args.opt, delay=args.delay, delay_dist=args.delay_dist)
         except Exception:
             failures += 1
             print(f"[FAIL] {arch} x {shape}:\n{traceback.format_exc()}")

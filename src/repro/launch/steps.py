@@ -53,6 +53,12 @@ class TrainRecipe:
     mechanism: str = "laplace"      # repro.api MECHANISMS registry name
     local_rule: str = "omd"         # repro.api LOCAL_RULES registry name
     clipper: str = "l2"             # repro.api CLIPPERS registry name
+    # WAN staleness (rounds): delay > 0 gives GossipState a (delay+1)-deep
+    # history ring; delay_dist ('constant'|'uniform'|'geometric') draws
+    # per-edge delays <= delay from a seeded distribution instead of one
+    # uniform lag (see docs/delayed_gossip.md for the memory trade-off).
+    delay: int = 0
+    delay_dist: str | None = None
 
     def to_runspec(self, nodes: int) -> RunSpec:
         return RunSpec(
@@ -68,6 +74,8 @@ class TrainRecipe:
             alpha0=self.alpha0,
             schedule="sqrt_t",
             lam=self.lam,
+            delay=self.delay,
+            delay_dist=self.delay_dist,
         )
 
 
@@ -174,6 +182,25 @@ def make_gossip_init(model: Model, gdp: GossipDP, nodes: int):
         node_params = shard_rules.with_node_axis(params, nodes)
         return GossipTrainState(gossip=gdp.init(node_params, k1))
     return init
+
+
+def gossip_state_pspecs(state_struct: GossipTrainState,
+                        theta_specs: Any) -> GossipTrainState:
+    """PartitionSpecs for a GossipTrainState, given the theta leaf specs.
+
+    The history ring (present when the mixer carries a delay) shards like
+    theta with an extra unsharded leading ring axis, so the stale copies
+    live on the same chips as the live ones and delayed mixing lowers to
+    the same collectives as the synchronous path.
+    """
+    gossip = state_struct.gossip
+    hist_specs = None
+    if gossip.history is not None:
+        hist_specs = jax.tree_util.tree_map(
+            lambda s: P(*((None,) + tuple(s))), theta_specs,
+            is_leaf=lambda x: isinstance(x, P))
+    return GossipTrainState(gossip=type(gossip)(
+        theta=theta_specs, t=P(), key=P(), history=hist_specs))
 
 
 class AllreduceTrainState(NamedTuple):

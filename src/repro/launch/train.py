@@ -29,7 +29,8 @@ def train(arch: str, *, strategy: str = "gossip", nodes: int = 4, steps_n: int =
           lam: float = 1e-4, smoke: bool = True, log_path: str | None = None,
           seed: int = 0, microbatches: int = 1, topology: str = "ring",
           local_rule: str = "omd", mechanism: str = "laplace",
-          clip_style: str = "coordinate") -> dict:
+          clip_style: str = "coordinate", delay: int = 0,
+          delay_dist: str | None = None) -> dict:
     cfg = get_config(arch)
     if smoke:
         cfg = cfg.reduced()
@@ -37,7 +38,8 @@ def train(arch: str, *, strategy: str = "gossip", nodes: int = 4, steps_n: int =
     recipe = steps.TrainRecipe(strategy=strategy, eps=eps, lam=lam,
                                microbatches=microbatches, topology=topology,
                                local_rule=local_rule, mechanism=mechanism,
-                               clip_style=clip_style)
+                               clip_style=clip_style, delay=delay,
+                               delay_dist=delay_dist)
 
     if strategy == "gossip":
         gdp = steps.make_gossip_dp(nodes, recipe)
@@ -109,6 +111,13 @@ def main():
     ap.add_argument("--clip-style", default="coordinate",
                     choices=["coordinate", "global"],
                     help="Laplace calibration (see TrainRecipe.clip_style)")
+    ap.add_argument("--delay", type=int, default=0,
+                    help="WAN gossip staleness in rounds; > 0 gives "
+                         "GossipState a (delay+1)-deep history ring")
+    ap.add_argument("--delay-dist", default=None,
+                    choices=["constant", "uniform", "geometric"],
+                    help="per-edge delay distribution (heterogeneous WAN "
+                         "links), capped at --delay; default: uniform lag")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--log", default=None)
     ap.add_argument("--smoke", action="store_true", default=True)
@@ -120,7 +129,8 @@ def main():
           lam=args.lam, smoke=args.smoke, log_path=args.log, seed=args.seed,
           microbatches=args.microbatches, topology=args.topology,
           local_rule=args.local_rule, mechanism=args.mechanism,
-          clip_style=args.clip_style)
+          clip_style=args.clip_style, delay=args.delay,
+          delay_dist=args.delay_dist)
 
 
 if __name__ == "__main__":

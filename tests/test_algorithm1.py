@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.core.regret import best_fixed_hinge, cumulative_regret, theorem2_bound
 from repro.data.social import SocialStream
 
@@ -16,14 +16,15 @@ def _stream(m=8, n=64, T=300, seed=0):
     return s.chunk(0, T)
 
 
+def _spec(eps, m=8, n=64, lam=1e-3, topology="ring"):
+    return RunSpec(nodes=m, dim=n, mixer=topology, mechanism="laplace",
+                   eps=eps, clip_norm=1.0, calibration="global",
+                   alpha0=1.0, schedule="sqrt_t", lam=lam)
+
+
 def _run(eps, m=8, n=64, T=300, lam=1e-3, topology="ring", seed=1):
     xs, ys = _stream(m, n, T)
-    alg = Algorithm1(
-        graph=GossipGraph.make(topology, m),
-        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=lam),
-        privacy=PrivacyConfig(eps=eps, L=1.0),
-        n=n,
-    )
+    alg = _spec(eps, m, n, lam, topology).build_simulator()
     outs = alg.run(jax.random.PRNGKey(seed), xs, ys)
     return xs, ys, outs
 
@@ -71,12 +72,7 @@ def test_consensus_under_mixing():
     """Ring-mixed nodes end closer together than disconnected ones."""
     xs, ys = _stream()
     def spread(topology):
-        alg = Algorithm1(
-            graph=GossipGraph.make(topology, 8),
-            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-3),
-            privacy=PrivacyConfig(eps=math.inf, L=1.0),
-            n=64,
-        )
+        alg = _spec(math.inf, topology=topology).build_simulator()
         w, _ = alg.final_params(jax.random.PRNGKey(0), xs, ys)
         return float(jnp.linalg.norm(w - w.mean(0, keepdims=True)))
     assert spread("ring") < spread("disconnected")
@@ -84,12 +80,7 @@ def test_consensus_under_mixing():
 
 def test_time_varying_topology_runs():
     xs, ys = _stream()
-    alg = Algorithm1(
-        graph=GossipGraph.make("time_varying", 8),
-        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=1e-3),
-        privacy=PrivacyConfig(eps=1.0, L=1.0),
-        n=64,
-    )
+    alg = _spec(1.0, topology="time_varying").build_simulator()
     outs = alg.run(jax.random.PRNGKey(0), xs, ys)
     assert np.isfinite(np.asarray(outs.loss)).all()
 

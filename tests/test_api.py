@@ -1,8 +1,7 @@
-"""repro.api strategy-layer tests: registry round-trips, old-constructor vs
+"""repro.api strategy-layer tests: registry round-trips, explicit-instance vs
 RunSpec seeded equivalence, and cross-engine (simulator vs distributed)
 agreement."""
 import math
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -14,8 +13,7 @@ from repro.api import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
                        DenseMatrixMixer, DisconnectedMixer, LaplaceMechanism,
                        NoNoise, PerNodeL2Clipper, RingRollMixer, RunSpec,
                        StepContext)
-from repro.core import (Algorithm1, GossipConfig, GossipDP, GossipGraph,
-                        OMDConfig, PrivacyConfig)
+from repro.core import Algorithm1, GossipDP, GossipGraph, OMDConfig
 from repro.core.algorithm1 import hinge_loss_and_grad
 from repro.core.graph import ring_matrix
 
@@ -140,27 +138,27 @@ def test_noise_self_false_removes_own_noise_generic():
 
 
 # ---------------------------------------------------------------------------
-# seeded equivalence: legacy constructors vs RunSpec
+# seeded equivalence: explicitly-constructed protocol instances vs RunSpec
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("rule", ["omd", "tg", "rda"])
-def test_simulator_runspec_matches_legacy_constructor(rule):
+def test_simulator_runspec_matches_explicit_instances(rule):
     m, n, T = 8, 32, 30
     xs, ys = _stream(m, n, T)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = Algorithm1(
-            graph=GossipGraph.make("ring", m),
-            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
-            privacy=PrivacyConfig(eps=1.0, L=1.0),
-            n=n, method=rule,
-        )
+    explicit = Algorithm1(
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+        n=n,
+        mixer=RingRollMixer(m=m, self_weight=0.5),
+        mechanism=LaplaceMechanism(eps=1.0, L=1.0, calibration="global"),
+        local_rule=LOCAL_RULES.build(rule),
+        clipper=PerNodeL2Clipper(max_norm=1.0),
+    )
     spec = RunSpec(nodes=m, dim=n, mixer="ring", mechanism="laplace",
                    local_rule=rule, clipper="l2", eps=1.0, clip_norm=1.0,
                    calibration="global", alpha0=1.0, schedule="sqrt_t",
                    lam=0.01)
     new = spec.build_simulator()
-    w_l, outs_l = legacy.final_params(jax.random.PRNGKey(7), xs, ys)
+    w_l, outs_l = explicit.final_params(jax.random.PRNGKey(7), xs, ys)
     w_n, outs_n = new.final_params(jax.random.PRNGKey(7), xs, ys)
     np.testing.assert_allclose(np.asarray(w_n), np.asarray(w_l),
                                rtol=1e-4, atol=1e-5)
@@ -170,15 +168,13 @@ def test_simulator_runspec_matches_legacy_constructor(rule):
 
 @pytest.mark.parametrize("topology", ["ring", "complete", "disconnected",
                                       "ring_alternating"])
-def test_distributed_runspec_matches_legacy_constructor(topology):
+def test_distributed_runspec_matches_explicit_instances(topology):
     m, n, T = 8, 16, 10
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = GossipDP(
-            gossip=GossipConfig(topology=topology, nodes=m),
-            omd=OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.01),
-            privacy=PrivacyConfig(eps=1.0, L=1.0),
-        )
+    explicit = GossipDP(
+        omd=OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.01),
+        mixer=MIXERS.build(topology, m=m),
+        mechanism=LaplaceMechanism(eps=1.0, L=1.0, calibration="global"),
+    )
     spec = RunSpec(nodes=m, mixer=topology, mechanism="laplace",
                    local_rule="omd", clipper="l2", eps=1.0, clip_norm=1.0,
                    calibration="global", alpha0=0.5, schedule="sqrt_t",
@@ -187,13 +183,13 @@ def test_distributed_runspec_matches_legacy_constructor(topology):
 
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, n)),
               "b": jax.random.normal(jax.random.PRNGKey(1), (m, 4))}
-    sl = legacy.init(params, jax.random.PRNGKey(2))
+    sl = explicit.init(params, jax.random.PRNGKey(2))
     sn = new.init(params, jax.random.PRNGKey(2))
     for t in range(T):
         g = {"w": jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(3), t),
                                     (m, n)),
              "b": jnp.ones((m, 4))}
-        sl, ml = legacy.update(sl, g)
+        sl, ml = explicit.update(sl, g)
         sn, mn = new.update(sn, g)
     np.testing.assert_allclose(np.asarray(sl.theta["w"]),
                                np.asarray(sn.theta["w"]), rtol=1e-6, atol=1e-7)
@@ -258,24 +254,24 @@ def test_cross_engine_rules_agree(rule):
 # RunSpec surface
 # ---------------------------------------------------------------------------
 
-def test_disconnected_dense_escape_hatch_matches_legacy():
-    """mixer='disconnected' now means clean local state in BOTH engines; the
-    README documents mixer='dense' + topology='disconnected' as the exact
-    legacy simulator behaviour (noised self-loop through identity A)."""
+def test_disconnected_dense_escape_hatch_matches_identity_graph():
+    """mixer='disconnected' means clean local state in BOTH engines; the
+    README documents mixer='dense' + topology='disconnected' as the
+    noised-self-loop-through-identity-A variant. Check the escape hatch is
+    exactly a dense identity mix (same graph-backed construction)."""
     m, n, T = 4, 16, 10
     xs, ys = _stream(m, n, T)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = Algorithm1(
-            graph=GossipGraph.make("disconnected", m),
-            omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
-            privacy=PrivacyConfig(eps=1.0, L=1.0), n=n,
-        )
+    explicit = Algorithm1(
+        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
+        n=n,
+        mixer=DenseMatrixMixer.from_graph(GossipGraph.make("disconnected", m)),
+        mechanism=LaplaceMechanism(eps=1.0, L=1.0, calibration="global"),
+    )
     spec = RunSpec(nodes=m, dim=n, mixer="dense",
                    mixer_options={"topology": "disconnected"},
                    eps=1.0, clip_norm=1.0, calibration="global",
                    alpha0=1.0, schedule="sqrt_t", lam=0.01)
-    w_l, _ = legacy.final_params(jax.random.PRNGKey(2), xs, ys)
+    w_l, _ = explicit.final_params(jax.random.PRNGKey(2), xs, ys)
     w_n, _ = spec.build_simulator().final_params(jax.random.PRNGKey(2), xs, ys)
     np.testing.assert_allclose(np.asarray(w_n), np.asarray(w_l),
                                rtol=1e-5, atol=1e-6)
@@ -327,15 +323,20 @@ def test_default_clipper_follows_mechanism_bound():
     assert alg.clipper.max_norm == 0.5
 
 
-def test_runspec_delay_wraps_mixer_and_is_simulator_only():
+def test_runspec_delay_wraps_mixer_in_both_engines():
     spec = RunSpec(nodes=8, dim=16, mixer="ring", eps=math.inf, delay=3)
     alg = spec.build_simulator()
     assert alg.delay == 3
     xs, ys = _stream(m=8, n=16, T=8)
     outs = alg.run(jax.random.PRNGKey(0), xs, ys)
     assert np.isfinite(np.asarray(outs.loss)).all()
-    with pytest.raises(ValueError):
-        spec.build_distributed()
+    # the distributed engine carries the same staleness via its history ring
+    gdp = spec.build_distributed()
+    assert gdp.delay == 3
+    state = gdp.init({"w": jnp.zeros((8, 16))}, jax.random.PRNGKey(1))
+    assert state.history["w"].shape == (4, 8, 16)
+    state, _ = gdp.update(state, {"w": jnp.ones((8, 16))})
+    assert int(state.t) == 1
 
 
 def test_runspec_requires_dim_for_simulator():
@@ -350,13 +351,17 @@ def test_engines_reject_partial_construction():
         GossipDP(omd=OMDConfig())
 
 
-def test_legacy_constructors_warn():
-    with pytest.warns(DeprecationWarning):
+def test_legacy_constructors_removed():
+    """graph=/privacy=/method= and gossip=/privacy= completed their
+    one-release deprecation window and now fail fast."""
+    with pytest.raises(TypeError):
         Algorithm1(graph=GossipGraph.make("ring", 4), omd=OMDConfig(),
-                   privacy=PrivacyConfig(), n=8)
-    with pytest.warns(DeprecationWarning):
-        GossipDP(gossip=GossipConfig(topology="ring", nodes=4),
-                 omd=OMDConfig(), privacy=PrivacyConfig())
+                   privacy=object(), n=8)
+    with pytest.raises(TypeError):
+        Algorithm1(omd=OMDConfig(), n=8, mixer=RingRollMixer(m=4),
+                   mechanism=LaplaceMechanism(), method="omd")
+    with pytest.raises(TypeError):
+        GossipDP(gossip=object(), omd=OMDConfig(), privacy=object())
 
 
 def test_mechanism_options_override_shared_knobs():

@@ -2,21 +2,21 @@
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.data.social import SocialStream
 
 
+def _spec(delay, m=8, n=64):
+    return RunSpec(nodes=m, dim=n, mixer="ring", mechanism="laplace",
+                   eps=math.inf, clip_norm=1.0, calibration="global",
+                   alpha0=1.0, schedule="sqrt_t", lam=0.01, delay=delay)
+
+
 def _alg(delay, m=8, n=64):
-    return Algorithm1(
-        graph=GossipGraph.make("ring", m),
-        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
-        privacy=PrivacyConfig(eps=math.inf, L=1.0),
-        n=n, delay=delay,
-    )
+    return _spec(delay, m, n).build_simulator()
 
 
 def _stream(m=8, n=64, T=250):
@@ -27,10 +27,7 @@ def _stream(m=8, n=64, T=250):
 def test_delay_zero_unchanged():
     """delay=0 must be bit-identical to the original algorithm."""
     xs, ys = _stream()
-    base = Algorithm1(graph=GossipGraph.make("ring", 8),
-                      omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.01),
-                      privacy=PrivacyConfig(eps=math.inf, L=1.0), n=64)
-    a = base.run(jax.random.PRNGKey(0), xs, ys)
+    a = _spec(0).build_simulator().run(jax.random.PRNGKey(0), xs, ys)
     b = _alg(0).run(jax.random.PRNGKey(0), xs, ys)
     np.testing.assert_array_equal(np.asarray(a.loss), np.asarray(b.loss))
 
@@ -49,6 +46,18 @@ def test_large_delay_degrades_but_no_divergence():
     assert float(slow.correct[-80:].mean()) <= float(fast.correct[-80:].mean()) + 0.05
 
 
+def test_heterogeneous_delay_still_learns():
+    """Per-edge delays (seeded distribution) keep the learner convergent."""
+    xs, ys = _stream()
+    alg = _spec(4).replace(delay_dist="uniform").build_simulator()
+    outs = alg.run(jax.random.PRNGKey(0), xs, ys)
+    assert float(outs.correct[-80:].mean()) > 0.7
+
+
 def test_negative_delay_rejected():
+    from repro.api import LaplaceMechanism, RingRollMixer
+    from repro.core import Algorithm1, OMDConfig
+
     with pytest.raises(ValueError):
-        _alg(-1)
+        Algorithm1(omd=OMDConfig(), n=64, mixer=RingRollMixer(m=8),
+                   mechanism=LaplaceMechanism(), delay=-1)

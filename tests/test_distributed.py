@@ -25,17 +25,42 @@ def test_gossip_ring_lowers_to_collective_permute():
     out = _run(r"""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.launch.mesh import make_mesh
 mesh = make_mesh((8,), ("data",))
 theta = {"w": jnp.ones((8, 256))}
-gdp = GossipDP(gossip=GossipConfig(topology="ring", nodes=8),
-               omd=OMDConfig(alpha0=0.1, lam=0.01),
-               privacy=PrivacyConfig(eps=1.0, L=1.0))
+gdp = RunSpec(nodes=8, mixer="ring", mechanism="laplace", eps=1.0,
+              clip_norm=1.0, calibration="global", alpha0=0.1,
+              lam=0.01).build_distributed()
 state = gdp.init(jax.device_put(theta, NamedSharding(mesh, P("data", None))), jax.random.PRNGKey(0))
 hlo = jax.jit(gdp.update).lower(state, theta).compile().as_text()
 print("PERMUTE" if "collective-permute" in hlo else "NOPERMUTE")
 # theta mixing must NOT require an all-gather of the full node dim
+print("OK")
+""")
+    assert "PERMUTE" in out
+
+
+@pytest.mark.slow
+def test_delayed_gossip_lowers_sharded_with_history_ring():
+    """The history ring shards like theta (ring axis unsharded) and the
+    delayed exchange still lowers without an all-gather of the node dim."""
+    out = _run(r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.api import RunSpec
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((8,), ("data",))
+theta = {"w": jnp.ones((8, 256))}
+gdp = RunSpec(nodes=8, mixer="ring", mechanism="laplace", eps=1.0,
+              clip_norm=1.0, calibration="global", alpha0=0.1,
+              lam=0.01, delay=2).build_distributed()
+state = gdp.init(jax.device_put(theta, NamedSharding(mesh, P("data", None))), jax.random.PRNGKey(0))
+assert state.history["w"].shape == (3, 8, 256)
+state2, _ = jax.jit(gdp.update)(state, theta)
+assert state2.history["w"].shape == (3, 8, 256)
+hlo = jax.jit(gdp.update).lower(state, theta).compile().as_text()
+print("PERMUTE" if "collective-permute" in hlo else "NOPERMUTE")
 print("OK")
 """)
     assert "PERMUTE" in out
@@ -47,8 +72,7 @@ def test_distributed_gossip_equals_simulator():
     out = _run(r"""
 import jax, jax.numpy as jnp, numpy as np, math, json
 from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core import (Algorithm1, GossipConfig, GossipDP, GossipGraph,
-                        OMDConfig, PrivacyConfig)
+from repro.api import RunSpec
 from repro.core.algorithm1 import hinge_loss_and_grad
 
 from repro.launch.mesh import make_mesh
@@ -58,15 +82,16 @@ key = jax.random.PRNGKey(0)
 xs = jax.random.normal(key, (T, m, n)) / np.sqrt(n)
 ys = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (T, m)))
 
-omd = OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.01)
-priv = PrivacyConfig(eps=math.inf, L=1.0)
+spec = RunSpec(nodes=m, dim=n, mixer="ring", mechanism="laplace",
+               eps=math.inf, clip_norm=1.0, calibration="global",
+               alpha0=0.5, schedule="sqrt_t", lam=0.01)
 
 # simulator
-alg = Algorithm1(graph=GossipGraph.make("ring", m), omd=omd, privacy=priv, n=n)
+alg = spec.build_simulator()
 w_sim, outs = alg.final_params(jax.random.PRNGKey(9), xs, ys)
 
 # distributed: same math via GossipDP on a sharded node axis
-gdp = GossipDP(gossip=GossipConfig(topology="ring", nodes=m), omd=omd, privacy=priv)
+gdp = spec.build_distributed()
 sharding = NamedSharding(mesh, P("data", None))
 state = gdp.init({"w": jax.device_put(jnp.zeros((m, n)), sharding)}, jax.random.PRNGKey(9))
 
@@ -77,7 +102,7 @@ def round_fn(state, batch):
     loss, grad = hinge_loss_and_grad(w, x, y)
     # clip exactly like the simulator
     gnorm = jnp.linalg.norm(grad, axis=1, keepdims=True)
-    grad = grad * jnp.minimum(1.0, priv.L / jnp.maximum(gnorm, 1e-12))
+    grad = grad * jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-12))
     new_state, _ = gdp.update(state, {"w": grad})
     return new_state
 
@@ -116,7 +141,7 @@ for arch in ("qwen3-32b", "mixtral-8x7b", "rwkv6-3b", "recurrentgemma-2b", "seam
         init = steps.make_gossip_init(model, gdp, 4)
         state_struct = jax.eval_shape(init)
         tsp = shard_rules.param_pspecs(state_struct.gossip.theta, node_axes=("data",), mesh=mesh)
-        ssp = steps.GossipTrainState(gossip=type(state_struct.gossip)(theta=tsp, t=P(), key=P()))
+        ssp = steps.gossip_state_pspecs(state_struct, tsp)
         bs, bsp = steps.train_batch_specs(cfg, shape, mesh, "gossip")
         fn = jax.jit(step, in_shardings=(steps.named(mesh, ssp), steps.named(mesh, bsp)),
                      donate_argnums=(0,))

@@ -1,0 +1,65 @@
+"""Docs health: the `>>>` examples in docs/*.md and the repro.api module
+docstrings must run green, and README links must resolve. CI runs this file
+in a dedicated docs job (.github/workflows/ci.yml)."""
+import doctest
+import importlib
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md")
+API_MODULES = (
+    "repro.api",
+    "repro.api.registry",
+    "repro.api.spec",
+    "repro.api.mixers",
+    "repro.api.mechanisms",
+    "repro.api.rules",
+    "repro.api.clippers",
+)
+FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
+
+
+@pytest.mark.parametrize("page", DOCS)
+def test_docs_page_doctests(page):
+    path = os.path.join(ROOT, page)
+    result = doctest.testfile(path, module_relative=False, optionflags=FLAGS,
+                              verbose=False)
+    assert result.attempted > 0, f"{page} has no runnable >>> examples"
+    assert result.failed == 0, f"{page}: {result.failed} doctest failures"
+
+
+@pytest.mark.parametrize("mod", API_MODULES)
+def test_api_module_doctests(mod):
+    result = doctest.testmod(importlib.import_module(mod), optionflags=FLAGS,
+                             verbose=False)
+    assert result.attempted > 0, f"{mod} docstrings have no >>> examples"
+    assert result.failed == 0, f"{mod}: {result.failed} doctest failures"
+
+
+_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def _relative_links(md_path):
+    text = open(md_path).read()
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        yield target
+
+
+@pytest.mark.parametrize("page", ("README.md",) + DOCS)
+def test_markdown_links_resolve(page):
+    path = os.path.join(ROOT, page)
+    base = os.path.dirname(path)
+    missing = [t for t in _relative_links(path)
+               if not os.path.exists(os.path.join(base, t))]
+    assert not missing, f"{page}: broken relative links {missing}"
+
+
+def test_readme_links_the_docs_pages():
+    text = open(os.path.join(ROOT, "README.md")).read()
+    for page in DOCS:
+        assert page in text, f"README does not link {page}"

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import GossipConfig, GossipDP, OMDConfig, PrivacyConfig
+from repro.api import MIXERS, RunSpec
+from repro.core import GossipDP, OMDConfig
 from repro.core.gossip import gossip_mix_tree, per_node_clip
 from repro.core.graph import complete_matrix, ring_matrix
 
@@ -17,6 +18,13 @@ def _theta(m=8, n=32, key=0):
     return {"w": jax.random.normal(k, (m, n)), "b": jax.random.normal(k, (m, 4))}
 
 
+def _gdp(topology="ring", m=8, eps=1.0, alpha0=0.5, lam=0.05, **spec_kw):
+    return RunSpec(nodes=m, mixer=topology, mechanism="laplace",
+                   eps=eps, clip_norm=1.0, calibration="global",
+                   alpha0=alpha0, schedule="sqrt_t", lam=lam,
+                   **spec_kw).build_distributed()
+
+
 @pytest.mark.parametrize("topology,matrix_fn", [
     ("ring", lambda m: ring_matrix(m, 0.5)),
     ("complete", complete_matrix),
@@ -24,8 +32,8 @@ def _theta(m=8, n=32, key=0):
 def test_mix_equals_dense_matrix(topology, matrix_fn):
     m = 8
     theta = _theta(m)
-    cfg = GossipConfig(topology=topology, self_weight=0.5, nodes=m)
-    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+    mixer = MIXERS.build(topology, m=m, self_weight=0.5)
+    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), mixer,
                             True, jnp.zeros((), jnp.int32))
     A = matrix_fn(m)
     for leafname in ("w", "b"):
@@ -36,18 +44,18 @@ def test_mix_equals_dense_matrix(topology, matrix_fn):
 
 def test_disconnected_is_identity():
     theta = _theta()
-    cfg = GossipConfig(topology="disconnected", nodes=8)
-    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.asarray(5.0), cfg,
-                            True, jnp.zeros((), jnp.int32))
+    mixer = MIXERS.build("disconnected", m=8)
+    mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.asarray(5.0),
+                            mixer, True, jnp.zeros((), jnp.int32))
     np.testing.assert_array_equal(np.asarray(mixed["w"]), np.asarray(theta["w"]))
 
 
 def test_mix_preserves_mean_noise_free():
     theta = _theta()
     for topo in ("ring", "complete", "ring_alternating"):
-        cfg = GossipConfig(topology=topo, nodes=8)
-        mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
-                                True, jnp.zeros((), jnp.int32))
+        mixer = MIXERS.build(topo, m=8)
+        mixed = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()),
+                                mixer, True, jnp.zeros((), jnp.int32))
         np.testing.assert_allclose(
             np.asarray(mixed["w"].mean(0)), np.asarray(theta["w"].mean(0)),
             rtol=1e-4, atol=1e-5)
@@ -55,25 +63,23 @@ def test_mix_preserves_mean_noise_free():
 
 def test_ring_alternating_switches_direction():
     theta = _theta()
-    cfg = GossipConfig(topology="ring_alternating", nodes=8)
-    even = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+    mixer = MIXERS.build("ring_alternating", m=8)
+    even = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), mixer,
                            True, jnp.zeros((), jnp.int32))
-    odd = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), cfg,
+    odd = gossip_mix_tree(theta, jax.random.PRNGKey(1), jnp.zeros(()), mixer,
                           True, jnp.ones((), jnp.int32))
     assert not np.allclose(np.asarray(even["w"]), np.asarray(odd["w"]))
 
 
 def test_noise_self_false_removes_own_noise():
-    """With huge noise but noise_self=False + disconnected... use ring and
-    check the self-weight portion is clean: complete graph, m=1 edge case."""
+    """Noise-free equivalence of the noise_self variants (complete graph)."""
     m, n = 4, 16
     theta = {"w": jnp.ones((m, n))}
-    cfg = GossipConfig(topology="complete", nodes=m)
-    # noise-free equivalence of the noise_self variants
-    a = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), cfg, True,
-                        jnp.zeros((), jnp.int32))
-    b = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), cfg, False,
-                        jnp.zeros((), jnp.int32))
+    mixer = MIXERS.build("complete", m=m)
+    a = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), mixer,
+                        True, jnp.zeros((), jnp.int32))
+    b = gossip_mix_tree(theta, jax.random.PRNGKey(0), jnp.zeros(()), mixer,
+                        False, jnp.zeros((), jnp.int32))
     np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]), rtol=1e-6)
 
 
@@ -88,11 +94,7 @@ def test_per_node_clip(L):
 
 def test_gossip_dp_update_end_to_end():
     m, n = 8, 64
-    gdp = GossipDP(
-        gossip=GossipConfig(topology="ring", nodes=m),
-        omd=OMDConfig(alpha0=0.5, schedule="sqrt_t", lam=0.05),
-        privacy=PrivacyConfig(eps=1.0, L=1.0),
-    )
+    gdp = _gdp(eps=1.0, m=m)
     params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, n))}
     state = gdp.init(params, jax.random.PRNGKey(1))
     grads = {"w": jnp.ones((m, n))}
@@ -104,9 +106,7 @@ def test_gossip_dp_update_end_to_end():
     w = gdp.primal(state2)
     assert float(jnp.mean((w["w"] == 0).astype(jnp.float32))) >= 0.0
     # nonprivate path: noise scale exactly 0
-    gdp_np = GossipDP(gossip=GossipConfig(topology="ring", nodes=m),
-                      omd=OMDConfig(alpha0=0.5, lam=0.05),
-                      privacy=PrivacyConfig(eps=math.inf, L=1.0))
+    gdp_np = _gdp(eps=math.inf, m=m)
     st_np = gdp_np.init(params, jax.random.PRNGKey(1))
     _, m_np = gdp_np.update(st_np, grads)
     assert float(m_np["noise_scale"]) == 0.0
@@ -114,18 +114,15 @@ def test_gossip_dp_update_end_to_end():
 
 def test_gossip_matches_simulator_one_round():
     """Distributed-tree update == dense-A simulator update (noise-free)."""
-    from repro.core.algorithm1 import Algorithm1
-    from repro.core.graph import GossipGraph
-
     m, n = 8, 32
     key = jax.random.PRNGKey(3)
     theta0 = jax.random.normal(key, (m, n))
     grads = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
     alpha = 1.0  # sqrt_t at t=1
 
-    gdp = GossipDP(gossip=GossipConfig(topology="ring", nodes=m),
-                   omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=0.0),
-                   privacy=PrivacyConfig(eps=math.inf, L=1e9))
+    gdp = RunSpec(nodes=m, mixer="ring", mechanism="laplace", eps=math.inf,
+                  clip_norm=1e9, calibration="global", alpha0=1.0,
+                  schedule="sqrt_t", lam=0.0).build_distributed()
     state = gdp.init({"w": theta0}, key)
     state2, _ = gdp.update(state, {"w": grads})
 
@@ -133,3 +130,9 @@ def test_gossip_matches_simulator_one_round():
     expected = A @ np.asarray(theta0) - alpha * np.asarray(grads)
     np.testing.assert_allclose(np.asarray(state2.theta["w"]), expected,
                                rtol=1e-4, atol=1e-5)
+
+
+def test_legacy_constructor_kwargs_removed():
+    """The one-release deprecation window is over: gossip=/privacy= are gone."""
+    with pytest.raises(TypeError):
+        GossipDP(omd=OMDConfig(), gossip=object(), privacy=object())

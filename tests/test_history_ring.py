@@ -1,0 +1,283 @@
+"""History-ring buffer tests: GossipState staleness support, delay=0
+degeneration, per-edge heterogeneous delays, and the seeded cross-engine
+equivalence suite (simulator == distributed for every supported delay)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (MIXERS, DelayedMixer, HeterogeneousDelayMixer,
+                       RingRollMixer, RunSpec, ring_read, ring_write,
+                       sample_edge_delays)
+from repro.core.algorithm1 import hinge_loss_and_grad
+
+
+def _spec(delay=0, m=8, n=16, eps=math.inf, **kw):
+    return RunSpec(nodes=m, dim=n, mixer="ring", mechanism="laplace",
+                   eps=eps, clip_norm=1.0, calibration="global",
+                   alpha0=0.5, schedule="sqrt_t", lam=0.01, delay=delay, **kw)
+
+
+def _stream(m=8, n=16, T=12, seed=3):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(key, (T, m, n)) / np.sqrt(n)
+    ys = jnp.sign(jax.random.normal(jax.random.fold_in(key, 1), (T, m)))
+    return xs, ys
+
+
+# ---------------------------------------------------------------------------
+# ring primitives
+# ---------------------------------------------------------------------------
+
+def test_ring_write_read_roundtrip():
+    depth, m, n = 4, 2, 3
+    hist = jnp.zeros((depth, m, n))
+    vals = [jnp.full((m, n), float(t + 1)) for t in range(7)]
+    for t, v in enumerate(vals):
+        hist = ring_write(hist, t, v)
+        # d = 0 reads back the slot just written, bit-for-bit
+        np.testing.assert_array_equal(
+            np.asarray(ring_read(hist, t, 0, jnp.zeros((m, n)))),
+            np.asarray(v))
+    t = 6
+    for d in range(depth):
+        got = ring_read(hist, t, d, jnp.full((m, n), -1.0))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(vals[t - d]))
+
+
+def test_ring_read_warmup_falls_back_to_current():
+    hist = jnp.zeros((3, 2, 2))
+    fallback = jnp.full((2, 2), 9.0)
+    got = ring_read(hist, jnp.asarray(1, jnp.int32), 2, fallback)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(fallback))
+
+
+# ---------------------------------------------------------------------------
+# GossipState history buffer
+# ---------------------------------------------------------------------------
+
+def test_history_buffer_contents_after_k_rounds():
+    """After k rounds the ring holds the theta broadcast of the last
+    depth rounds, slot r % depth <- theta from round r (noise-free, so
+    theta~ == theta exactly)."""
+    m, n, delay, k = 4, 8, 3, 6
+    gdp = _spec(delay=delay, m=m, n=n).build_distributed()
+    state = gdp.init({"w": jax.random.normal(jax.random.PRNGKey(0), (m, n))},
+                     jax.random.PRNGKey(1))
+    depth = delay + 1
+    assert state.history["w"].shape == (depth, m, n)
+    thetas = []
+    for t in range(k):
+        thetas.append(np.asarray(state.theta["w"]))
+        g = jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), t),
+                              (m, n))
+        state, _ = gdp.update(state, {"w": g})
+    for slot in range(depth):
+        # last round r < k with r % depth == slot
+        r = max(r for r in range(k) if r % depth == slot)
+        np.testing.assert_array_equal(np.asarray(state.history["w"][slot]),
+                                      thetas[r])
+
+
+def test_delay_zero_bitwise_identical_to_sync_path():
+    """delay=0 must not allocate history and must reproduce the synchronous
+    engine bit-for-bit, including under a private (noised) mechanism."""
+    m, n, T = 4, 8, 6
+    base = _spec(m=m, n=n, eps=1.0).build_distributed()
+    zero = _spec(delay=0, m=m, n=n, eps=1.0).build_distributed()
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m, n))}
+    sa = base.init(params, jax.random.PRNGKey(1))
+    sb = zero.init(params, jax.random.PRNGKey(1))
+    assert sa.history is None and sb.history is None
+    for t in range(T):
+        g = {"w": jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(2), t),
+                                    (m, n))}
+        sa, _ = base.update(sa, g)
+        sb, _ = zero.update(sb, g)
+    np.testing.assert_array_equal(np.asarray(sa.theta["w"]),
+                                  np.asarray(sb.theta["w"]))
+
+
+def test_delayed_mixer_in_gossip_dp_no_longer_raises():
+    """Regression: PR-1 GossipDP rejected any mixer with delay > 0."""
+    gdp = _spec(delay=2).build_distributed()   # must not raise
+    assert isinstance(gdp.mixer, DelayedMixer) and gdp.delay == 2
+    state = gdp.init({"w": jnp.zeros((8, 16))}, jax.random.PRNGKey(0))
+    state, metrics = gdp.update(state, {"w": jnp.ones((8, 16))})
+    assert int(state.t) == 1 and np.isfinite(float(metrics["alpha_t"]))
+
+
+def test_gossip_dp_delayed_update_is_scan_and_jit_safe():
+    gdp = _spec(delay=2).build_distributed()
+    state = gdp.init({"w": jnp.zeros((8, 16))}, jax.random.PRNGKey(0))
+    grads = jnp.ones((5, 8, 16))
+
+    @jax.jit
+    def run(state, grads):
+        def body(st, g):
+            st, m = gdp.update(st, {"w": g})
+            return st, m["alpha_t"]
+        return jax.lax.scan(body, state, grads)
+
+    state, alphas = run(state, grads)
+    assert int(state.t) == 5
+    assert np.isfinite(np.asarray(alphas)).all()
+
+
+# ---------------------------------------------------------------------------
+# seeded cross-engine equivalence (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delay", [0, 1, 3])
+def test_cross_engine_equivalence_per_delay(delay):
+    """For every supported delay the dense simulator and the distributed
+    engine produce IDENTICAL iterates on the ring topology (noise-free)."""
+    m, n, T = 8, 16, 12
+    xs, ys = _stream(m, n, T)
+    spec = _spec(delay=delay, m=m, n=n)
+
+    alg = spec.build_simulator()
+    state_s = alg.init(jax.random.PRNGKey(9))
+
+    gdp = spec.build_distributed()
+    state_d = gdp.init({"w": jnp.zeros((m, n))}, jax.random.PRNGKey(9))
+    for t in range(T):
+        state_s, _ = alg.round(state_s, (xs[t], ys[t]))
+        w = gdp.primal(state_d)["w"]
+        _, grad = hinge_loss_and_grad(w, xs[t], ys[t])
+        state_d, _ = gdp.update(state_d, {"w": grad})
+    np.testing.assert_array_equal(np.asarray(state_d.theta["w"]),
+                                  np.asarray(state_s.theta))
+    if delay:
+        np.testing.assert_array_equal(np.asarray(state_d.history["w"]),
+                                      np.asarray(state_s.history))
+
+
+@pytest.mark.parametrize("delay_dist", ["constant", "uniform", "geometric"])
+def test_cross_engine_equivalence_heterogeneous(delay_dist):
+    """Per-edge delays agree across engines too (same seeded mixer)."""
+    m, n, T = 8, 16, 10
+    xs, ys = _stream(m, n, T)
+    spec = _spec(delay=3, m=m, n=n, delay_dist=delay_dist)
+
+    alg = spec.build_simulator()
+    state_s = alg.init(jax.random.PRNGKey(9))
+    gdp = spec.build_distributed()
+    state_d = gdp.init({"w": jnp.zeros((m, n))}, jax.random.PRNGKey(9))
+    for t in range(T):
+        state_s, _ = alg.round(state_s, (xs[t], ys[t]))
+        w = gdp.primal(state_d)["w"]
+        _, grad = hinge_loss_and_grad(w, xs[t], ys[t])
+        state_d, _ = gdp.update(state_d, {"w": grad})
+    np.testing.assert_array_equal(np.asarray(state_d.theta["w"]),
+                                  np.asarray(state_s.theta))
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous delay mixer semantics
+# ---------------------------------------------------------------------------
+
+def test_sample_edge_delays_seeded_and_bounded():
+    a = sample_edge_delays(8, 5, "uniform", seed=7)
+    b = sample_edge_delays(8, 5, "uniform", seed=7)
+    c = sample_edge_delays(8, 5, "uniform", seed=8)
+    np.testing.assert_array_equal(a, b)          # same seed -> same draw
+    assert not np.array_equal(a, c)              # different seed differs
+    assert a.min() >= 0 and a.max() <= 5
+    assert (np.diag(a) == 0).all()               # own state is never stale
+    with pytest.raises(ValueError):
+        sample_edge_delays(4, 2, "nope")
+
+
+def test_het_constant_matches_uniform_delayed_mixer():
+    """delay_dist='constant' is exactly DelayedMixer over the dense form."""
+    m, n, d = 6, 12, 2
+    het = HeterogeneousDelayMixer.from_topology("ring", m, delay=d,
+                                                delay_dist="constant")
+    assert het.delay == d and het.m == m
+    uni = MIXERS.build("delayed", m=m, inner="dense", delay=d,
+                       topology="ring")
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, n))
+    hist = jnp.zeros((d + 1, m, n))
+    for t in range(d + 1):
+        hist = ring_write(hist, t, x * (t + 1))
+    t = jnp.asarray(d, jnp.int32)
+    tilde = x * (d + 1)
+    got = het.mix_history(x, tilde, hist, True, t)
+    want = uni.mix_history(x, tilde, hist, True, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_het_all_zero_delays_degenerate_to_synchronous():
+    m, n = 6, 12
+    het = HeterogeneousDelayMixer.from_topology("ring", m, delay=1,
+                                                delay_dist="uniform", seed=0)
+    zero = HeterogeneousDelayMixer(inner=het.inner,
+                                   delays=np.zeros((m, m), np.int32))
+    assert zero.delay == 0
+    x = jax.random.normal(jax.random.PRNGKey(1), (m, n))
+    t = jnp.asarray(0, jnp.int32)
+    got = zero.mix_history(x, x, None, True, t)
+    want = zero.inner.mix(x, x, True, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_het_mixer_requires_history_when_stale():
+    het = HeterogeneousDelayMixer.from_topology("ring", 4, delay=2,
+                                                delay_dist="constant")
+    x = jnp.ones((4, 3))
+    with pytest.raises(ValueError):
+        het.mix_history(x, x, None, True, jnp.asarray(0, jnp.int32))
+
+
+def test_uniform_delayed_mixer_requires_history_when_stale():
+    """A missing ring must raise, not silently mix synchronously."""
+    mixer = DelayedMixer(inner=RingRollMixer(m=4), delay=2)
+    x = jnp.ones((4, 3))
+    with pytest.raises(ValueError, match="history"):
+        mixer.mix_history(x, x, None, True, jnp.asarray(0, jnp.int32))
+
+
+def test_runspec_delay_dist_validation():
+    with pytest.raises(ValueError):
+        _spec(delay=0, delay_dist="uniform").resolve_mixer()
+    with pytest.raises(ValueError):
+        RunSpec(nodes=4, mixer=RingRollMixer(m=4), delay=2,
+                delay_dist="uniform").resolve_mixer()
+    # a valid MIXERS name that is not a dense GossipGraph topology must
+    # name delay_dist in the error, not a bare 'unknown topology'
+    with pytest.raises(ValueError, match="delay_dist"):
+        RunSpec(nodes=4, mixer="ring_alternating", delay=2,
+                delay_dist="uniform").resolve_mixer()
+
+
+def test_engine_delay_kwarg_actually_delays():
+    """Regression: Algorithm1(delay=d) with a plain (delay-less) mixer must
+    wrap it in DelayedMixer — not silently run the synchronous exchange
+    while allocating the ring."""
+    from repro.api import LaplaceMechanism
+    from repro.core import Algorithm1, OMDConfig
+
+    m, n, T = 8, 16, 10
+    xs, ys = _stream(m, n, T)
+
+    def build(**kw):
+        return Algorithm1(omd=OMDConfig(alpha0=0.5, schedule="sqrt_t",
+                                        lam=0.01),
+                          n=n, mixer=RingRollMixer(m=m),
+                          mechanism=LaplaceMechanism(eps=math.inf), **kw)
+
+    alg = build(delay=3)
+    assert isinstance(alg.mixer, DelayedMixer) and alg.delay == 3
+    stale = alg.run(jax.random.PRNGKey(0), xs, ys)
+    sync = build().run(jax.random.PRNGKey(0), xs, ys)
+    assert not np.array_equal(np.asarray(stale.loss), np.asarray(sync.loss))
+    # and it matches the RunSpec(delay=...) spelling exactly
+    spec = _spec(delay=3, m=m, n=n).build_simulator()
+    np.testing.assert_array_equal(
+        np.asarray(stale.loss),
+        np.asarray(spec.run(jax.random.PRNGKey(0), xs, ys).loss))

@@ -6,19 +6,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Algorithm1, GossipGraph, OMDConfig, PrivacyConfig
+from repro.api import RunSpec
 from repro.data.social import SocialStream
 
 
 def _run(method, lam, T=300, m=8, n=128, gamma=1.0):
     s = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.1, seed=2)
     xs, ys = s.chunk(0, T)
-    alg = Algorithm1(
-        graph=GossipGraph.make("ring", m),
-        omd=OMDConfig(alpha0=1.0, schedule="sqrt_t", lam=lam),
-        privacy=PrivacyConfig(eps=math.inf, L=1.0),
-        n=n, method=method, rda_gamma=gamma,
-    )
+    alg = RunSpec(
+        nodes=m, dim=n, mixer="ring", mechanism="laplace", eps=math.inf,
+        clip_norm=1.0, calibration="global", alpha0=1.0, schedule="sqrt_t",
+        lam=lam, local_rule=method,
+        local_rule_options={"gamma": gamma} if method == "rda" else {},
+    ).build_simulator()
     return alg.run(jax.random.PRNGKey(0), xs, ys)
 
 
@@ -42,6 +42,4 @@ def test_tg_truncation_sparsifies_vs_no_reg():
 
 def test_unknown_method_rejected():
     with pytest.raises(ValueError):
-        Algorithm1(graph=GossipGraph.make("ring", 4),
-                   omd=OMDConfig(), privacy=PrivacyConfig(), n=8,
-                   method="nope")
+        RunSpec(nodes=4, dim=8, local_rule="nope").build_simulator()
