@@ -2,10 +2,13 @@
 ("there must exist delay in social networks, which we did not consider").
 
 Neighbors' theta~ arrive `delay` rounds late via the engines' history ring
-(see docs/delayed_gossip.md). Since PR 2 the sweep exercises BOTH engines:
-the dense simulator measures accuracy/regret vs delay, and the distributed
-`GossipDP` engine (driven with the same hinge stream) proves the history
-ring works end-to-end outside the simulator and contributes its wall-clock.
+(see docs/delayed_gossip.md). The sweep exercises BOTH engines through ONE
+`repro.api.run` call each — the dense simulator measures accuracy/regret vs
+delay, and the distributed `GossipDP` engine (same stream, same seed)
+proves the history ring works end-to-end outside the simulator and
+contributes its wall-clock.
+
+    PYTHONPATH=src python -m benchmarks.ablation_delay [--smoke]
 
 Emits two artifacts:
   experiments/figures/ablation_delay.json — the legacy accuracy rows
@@ -14,89 +17,36 @@ Emits two artifacts:
 """
 from __future__ import annotations
 
+import argparse
 import json
 import math
 import os
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from benchmarks.common import Scale, final_accuracy, make_spec, regret_curve
-from repro.core.algorithm1 import hinge_loss_and_grad
-from repro.data.social import SocialStream
+from benchmarks.common import Scale, run_algorithm1
 
 DELAYS = (0, 1, 4, 16, 64)
-
-
-def _run_distributed(spec, xs, ys) -> tuple[float, float]:
-    """Drive GossipDP over the same stream; returns (accuracy, seconds).
-
-    The whole horizon runs under one jitted lax.scan — same execution shape
-    as the simulator's run() — so the two wall-clock columns in
-    BENCH_delay.json compare engine cost, not host dispatch overhead.
-    """
-    gdp = spec.build_distributed()
-    m, n = xs.shape[1], xs.shape[2]
-
-    @jax.jit
-    def run_scan(state, xs, ys):
-        def body(st, batch):
-            x, y = batch
-            w = gdp.primal(st)["w"]
-            _, grad = hinge_loss_and_grad(w, x, y)
-            correct = (jnp.sign(jnp.einsum("mn,mn->m", w, x)) == y)
-            st, _ = gdp.update(st, {"w": grad})
-            return st, correct.astype(jnp.float32)
-        return jax.lax.scan(body, state, (xs, ys))
-
-    def fresh():
-        return gdp.init({"w": jnp.zeros((m, n))}, jax.random.PRNGKey(1))
-
-    # warm-up compile outside the timed region
-    jax.block_until_ready(run_scan(fresh(), xs, ys)[0].theta["w"])
-    t0 = time.time()
-    state, corrects = run_scan(fresh(), xs, ys)
-    jax.block_until_ready(state.theta["w"])
-    secs = time.time() - t0
-    tail = max(1, int(corrects.shape[0] * 0.2))
-    acc = float(corrects[-tail:].mean())
-    return acc, secs
+SMOKE_DELAYS = (0, 2)
 
 
 def run(scale: Scale | None = None, eps: float = math.inf,
         out_dir: str = "experiments/figures",
-        bench_path: str = "BENCH_delay.json") -> dict:
+        bench_path: str = "BENCH_delay.json",
+        delays: tuple = DELAYS) -> dict:
     scale = scale or Scale()
-    stream = SocialStream(n=scale.n, nodes=scale.m, rounds=scale.T,
-                          sparsity_true=0.05, seed=0)
-    xs, ys = stream.chunk(0, scale.T)
     rows, bench_rows = [], []
-    for d in DELAYS:
-        spec = make_spec(scale, eps=eps, lam=0.01, delay=d)
-        alg = spec.build_simulator()
-        # jit + warm up so the timed run measures steady-state execution
-        # (a bare alg.run re-traces its scan body on every call), matching
-        # the warmed jitted loop in _run_distributed
-        run_fn = jax.jit(alg.run)
-        jax.block_until_ready(run_fn(jax.random.PRNGKey(1), xs, ys).loss)
-        t0 = time.time()
-        outs = run_fn(jax.random.PRNGKey(1), xs, ys)
-        jax.block_until_ready(outs.loss)
-        sim_secs = time.time() - t0
-        reg = regret_curve(outs, xs, ys, scale.m)
-        dist_acc, dist_secs = _run_distributed(spec, xs, ys)
-        acc = final_accuracy(outs)
-        rows.append({"delay": d, "accuracy": acc,
-                     "accuracy_distributed": dist_acc})
+    for d in delays:
+        sim = run_algorithm1(scale, eps=eps, lam=0.01, delay=d, engine="sim")
+        dist = run_algorithm1(scale, eps=eps, lam=0.01, delay=d,
+                              engine="dist", compute_regret=False)
+        rows.append({"delay": d, "accuracy": sim.accuracy,
+                     "accuracy_distributed": dist.accuracy})
         bench_rows.append({
             "delay": d,
-            "accuracy": acc,
-            "regret_final": float(reg[-1]),
-            "regret_per_round": float(reg[-1] / scale.T),
-            "simulator_seconds": round(sim_secs, 3),
-            "distributed_seconds": round(dist_secs, 3),
+            "accuracy": sim.accuracy,
+            "regret_final": float(sim.regret[-1]),
+            "regret_per_round": float(sim.regret[-1] / scale.T),
+            "simulator_seconds": round(sim.wall_clock, 3),
+            "distributed_seconds": round(dist.wall_clock, 3),
         })
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "ablation_delay.json"), "w") as f:
@@ -113,11 +63,23 @@ def run(scale: Scale | None = None, eps: float = math.inf,
             "graceful": rows[-1]["accuracy"] > 0.5 * rows[0]["accuracy"]}
 
 
-if __name__ == "__main__":
-    res = run()
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale + delays (0, 2) for the CI bench-smoke "
+                         "job (seconds, not minutes)")
+    ap.add_argument("--bench-path", default="BENCH_delay.json")
+    args = ap.parse_args()
+    scale = Scale.smoke() if args.smoke else None
+    delays = SMOKE_DELAYS if args.smoke else DELAYS
+    res = run(scale, bench_path=args.bench_path, delays=delays)
     for r in res["bench"]["rows"]:
         print(f"delay={r['delay']:3d}: acc={r['accuracy']:.3f} "
               f"regret/T={r['regret_per_round']:.4f} "
               f"sim={r['simulator_seconds']:.1f}s "
               f"dist={r['distributed_seconds']:.1f}s")
     print("graceful degradation:", res["graceful"])
+
+
+if __name__ == "__main__":
+    main()

@@ -9,11 +9,9 @@ import json
 import math
 import os
 
-import jax
 import numpy as np
 
-from benchmarks.common import Scale, final_accuracy, make_spec
-from repro.data.social import SocialStream
+from benchmarks.common import Scale, run_algorithm1
 
 # lambdas tuned per local rule (they threshold different quantities: w for
 # tg, the running mean gradient for rda, theta for omd)
@@ -27,16 +25,12 @@ METHODS = {
 def run(scale: Scale | None = None, eps: float = math.inf,
         out_dir: str = "experiments/figures") -> dict:
     scale = scale or Scale()
-    stream = SocialStream(n=scale.n, nodes=scale.m, rounds=scale.T,
-                          sparsity_true=0.05, seed=0)
-    xs, ys = stream.chunk(0, scale.T)
     rows = {}
     for name, kw in METHODS.items():
-        alg = make_spec(scale, eps=eps, **kw).build_simulator()
-        outs = alg.run(jax.random.PRNGKey(1), xs, ys)
+        res = run_algorithm1(scale, eps=eps, compute_regret=False, **kw)
         rows[name] = {
-            "accuracy": final_accuracy(outs),
-            "sparsity": float(np.asarray(outs.sparsity)[-50:].mean()),
+            "accuracy": res.accuracy,
+            "sparsity": float(np.asarray(res.sparsity)[-50:].mean()),
         }
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "ablation_sparse_methods.json"), "w") as f:

@@ -1,0 +1,70 @@
+"""Stream-scenario throughput bench: `repro.api.run` end-to-end on a
+STREAMS scenario, sim vs dist engine, rounds/sec + quality.
+
+    PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] \
+        [--stream drift] [--engines sim dist]
+
+Writes BENCH_stream.json — the bench-trajectory point the CI bench-smoke
+job uploads: per engine, steady-state rounds/sec (compile excluded via
+run()'s warmup), tail accuracy, final regret, and the eps ledger endpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.common import Scale, make_spec
+from repro.api import run as api_run
+
+
+def run(scale: Scale | None = None, *, stream: str = "drift",
+        stream_options: dict | None = None, eps: float = 1.0,
+        engines: tuple = ("sim", "dist"),
+        bench_path: str = "BENCH_stream.json") -> dict:
+    scale = scale or Scale()
+    spec = make_spec(scale, eps=eps, lam=0.01, stream=stream,
+                     stream_options=stream_options or {})
+    rows = {}
+    for engine in engines:
+        res = api_run(spec, engine=engine, chunk_rounds=min(scale.T, 256))
+        rows[engine] = {
+            "rounds_per_sec": round(res.rounds_per_sec, 2),
+            "wall_clock_s": round(res.wall_clock, 3),
+            "accuracy": res.accuracy,
+            "regret_final": (None if res.regret is None
+                             else float(res.regret[-1])),
+            "eps_total": res.privacy["eps_total"],
+        }
+    bench = {
+        "bench": "stream_runner",
+        "stream": stream,
+        "scale": {"n": scale.n, "m": scale.m, "T": scale.T},
+        "eps": eps,
+        "rows": rows,
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny drift stream (seconds) for the CI "
+                         "bench-smoke job")
+    ap.add_argument("--stream", default="drift")
+    ap.add_argument("--engines", nargs="+", default=["sim", "dist"],
+                    choices=["sim", "dist"])
+    ap.add_argument("--eps", type=float, default=1.0)
+    ap.add_argument("--bench-path", default="BENCH_stream.json")
+    args = ap.parse_args()
+    scale = Scale.smoke() if args.smoke else None
+    bench = run(scale, stream=args.stream, eps=args.eps,
+                engines=tuple(args.engines), bench_path=args.bench_path)
+    for engine, r in bench["rows"].items():
+        print(f"{engine:4s}: {r['rounds_per_sec']:8.1f} rounds/s "
+              f"acc={r['accuracy']:.3f} regret={r['regret_final']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,9 @@
 """Shared harness for the paper-figure benchmarks.
 
+Every sweep is one `repro.api.run` call — the benchmarks own WHAT to sweep,
+never HOW to drive a run (no hand-rolled loops; metrics, regret, privacy
+ledger and wall-clock all come back in the RunResult).
+
 Two scales:
   CI    (default)  n=512, m=16, T=500   — minutes on this 1-core container
   paper (--full)   n=10_000, m=64, T=1562 (100k samples) — the paper's §V scale
@@ -7,16 +11,10 @@ Two scales:
 from __future__ import annotations
 
 import dataclasses
-import math
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.api import RunSpec
-from repro.core.regret import best_fixed_hinge, cumulative_regret
-from repro.data.social import SocialStream
+from repro.api import RunResult, RunSpec
+from repro.api import run as api_run
 
 
 @dataclasses.dataclass
@@ -31,63 +29,38 @@ class Scale:
     def paper(cls) -> "Scale":
         return cls(n=10_000, m=64, T=100_000 // 64)
 
+    @classmethod
+    def smoke(cls) -> "Scale":
+        """Tiny CI-smoke scale (seconds): exercises every code path."""
+        return cls(n=64, m=8, T=120)
+
 
 def make_spec(scale: Scale, *, eps: float, lam: float = 1e-3,
               topology: str = "ring", seed: int = 0,
-              clip_style: str = "coordinate", **kw) -> RunSpec:
+              clip_style: str = "coordinate", stream: str = "social_sparse",
+              stream_options: dict | None = None, **kw) -> RunSpec:
     """The shared declarative description all figure sweeps build from."""
     return RunSpec(
         nodes=scale.m, dim=scale.n, mixer=topology, seed=seed,
         eps=eps, clip_norm=scale.L, calibration=clip_style,
-        alpha0=scale.alpha0, schedule="sqrt_t", lam=lam, **kw)
+        alpha0=scale.alpha0, schedule="sqrt_t", lam=lam, horizon=scale.T,
+        stream=stream, stream_options=stream_options or {}, **kw)
 
 
 def run_algorithm1(scale: Scale, *, eps: float, lam: float = 1e-3,
                    topology: str = "ring", seed: int = 0,
-                   clip_style: str = "coordinate", **spec_kw):
-    """One full Algorithm-1 run; returns (outs, xs, ys, seconds).
+                   clip_style: str = "coordinate", engine: str = "sim",
+                   compute_regret: bool = True, **spec_kw) -> RunResult:
+    """One full run via `repro.api.run`; returns the RunResult.
 
     clip_style='coordinate' is the tighter per-coordinate Laplace calibration
     (DESIGN.md deviation #3); 'global' is the paper's exact Lemma-1 scale
     (sqrt(n) larger — with n=10^4 it drowns learning entirely, which is why
     the paper's own Fig. 2 cannot have used it; we report both).
-    Extra keywords (local_rule=, delay=, mechanism=, ...) pass through to
-    `repro.api.RunSpec`.
+    Extra keywords (local_rule=, delay=, mechanism=, stream=, ...) pass
+    through to `repro.api.RunSpec`.
     """
-    stream = SocialStream(n=scale.n, nodes=scale.m, rounds=scale.T,
-                          sparsity_true=0.05, seed=seed)
-    xs, ys = stream.chunk(0, scale.T)
-    alg = make_spec(scale, eps=eps, lam=lam, topology=topology, seed=seed,
-                    clip_style=clip_style, **spec_kw).build_simulator()
-    t0 = time.time()
-    outs = alg.run(jax.random.PRNGKey(seed + 1), xs, ys)
-    jax.block_until_ready(outs.loss)
-    return outs, xs, ys, time.time() - t0
-
-
-def accuracy_curve(outs, window: int = 50) -> np.ndarray:
-    correct = np.asarray(outs.correct.mean(axis=1))
-    c = np.cumsum(np.insert(correct, 0, 0.0))
-    return (c[window:] - c[:-window]) / window
-
-
-def final_accuracy(outs, frac: float = 0.2) -> float:
-    correct = np.asarray(outs.correct)
-    k = max(1, int(len(correct) * frac))
-    return float(correct[-k:].mean())
-
-
-_WSTAR_CACHE: dict = {}
-
-
-def regret_curve(outs, xs, ys, m: int) -> np.ndarray:
-    """Comparator w* is cached per stream identity — fig sweeps reuse the
-    same stream across eps/topology, and best_fixed_hinge is the expensive
-    part at paper scale (full-batch GD over 100k x 10k)."""
-    import hashlib
-    probe = np.asarray(xs[0, : min(2, xs.shape[1]), : min(16, xs.shape[2])]).tobytes()
-    key = (hashlib.md5(probe).hexdigest(), xs.shape, ys.shape)
-    if key not in _WSTAR_CACHE:
-        _WSTAR_CACHE[key] = best_fixed_hinge(xs, ys)
-    return cumulative_regret(outs.w_bar_loss, xs, ys, m,
-                             w_star=_WSTAR_CACHE[key])
+    spec = make_spec(scale, eps=eps, lam=lam, topology=topology, seed=seed,
+                     clip_style=clip_style, **spec_kw)
+    return api_run(spec, engine=engine, chunk_rounds=scale.T,
+                   compute_regret=compute_regret)

@@ -9,9 +9,8 @@ import json
 import math
 import os
 
-import numpy as np
 
-from benchmarks.common import Scale, final_accuracy, regret_curve, run_algorithm1
+from benchmarks.common import Scale, run_algorithm1
 
 EPS_SWEEP = (0.1, 1.0, 10.0, math.inf)
 
@@ -21,13 +20,15 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
     scale = scale or Scale()
     rows = {}
     for eps in EPS_SWEEP:
-        outs, xs, ys, secs = run_algorithm1(scale, eps=eps, clip_style=clip_style)
-        reg = regret_curve(outs, xs, ys, scale.m)
+        res = run_algorithm1(scale, eps=eps, clip_style=clip_style)
+        reg = res.regret
         rows[str(eps)] = {
             "regret_final": float(reg[-1]),
             "regret_curve": reg[:: max(1, len(reg) // 200)].tolist(),
-            "accuracy": final_accuracy(outs),
-            "seconds": secs,
+            "accuracy": res.accuracy,
+            "eps_total": (None if math.isinf(res.privacy["eps_total"])
+                          else res.privacy["eps_total"]),
+            "seconds": res.wall_clock,
         }
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"fig2_privacy_{clip_style}.json"), "w") as f:

@@ -5,9 +5,8 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
-from benchmarks.common import Scale, final_accuracy, regret_curve, run_algorithm1
+from benchmarks.common import Scale, run_algorithm1
 
 TOPOLOGIES = ("ring", "complete", "hypercube", "random", "time_varying")
 
@@ -17,10 +16,9 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
     scale = scale or Scale()
     rows = {}
     for topo in TOPOLOGIES:
-        outs, xs, ys, secs = run_algorithm1(scale, eps=eps, topology=topo)
-        reg = regret_curve(outs, xs, ys, scale.m)
-        rows[topo] = {"regret_final": float(reg[-1]),
-                      "accuracy": final_accuracy(outs), "seconds": secs}
+        res = run_algorithm1(scale, eps=eps, topology=topo)
+        rows[topo] = {"regret_final": float(res.regret[-1]),
+                      "accuracy": res.accuracy, "seconds": res.wall_clock}
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig3_topology.json"), "w") as f:
         json.dump(rows, f, indent=1)

@@ -12,7 +12,7 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Scale, final_accuracy, run_algorithm1
+from benchmarks.common import Scale, run_algorithm1
 
 LAMBDAS = (0.0, 1e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, 30.0)
 
@@ -22,12 +22,12 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
     scale = scale or Scale()
     rows = []
     for lam in LAMBDAS:
-        outs, xs, ys, secs = run_algorithm1(scale, eps=eps, lam=lam)
+        res = run_algorithm1(scale, eps=eps, lam=lam, compute_regret=False)
         rows.append({
             "lambda": lam,
-            "sparsity": float(np.asarray(outs.sparsity)[-50:].mean()),
-            "accuracy": final_accuracy(outs),
-            "seconds": secs,
+            "sparsity": float(np.asarray(res.sparsity)[-50:].mean()),
+            "accuracy": res.accuracy,
+            "seconds": res.wall_clock,
         })
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig4_sparsity.json"), "w") as f:

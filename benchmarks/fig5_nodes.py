@@ -9,9 +9,8 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
 
-from benchmarks.common import Scale, final_accuracy, run_algorithm1
+from benchmarks.common import Scale, run_algorithm1
 
 NODE_SWEEP = (4, 8, 16, 32)
 
@@ -22,8 +21,9 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
     rows = []
     for m in NODE_SWEEP:
         s = Scale(n=base.n, m=m, T=base.T * base.m // m)  # same total samples
-        outs, xs, ys, secs = run_algorithm1(s, eps=eps)
-        rows.append({"nodes": m, "accuracy": final_accuracy(outs), "seconds": secs})
+        res = run_algorithm1(s, eps=eps, compute_regret=False)
+        rows.append({"nodes": m, "accuracy": res.accuracy,
+                     "seconds": res.wall_clock})
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig5_nodes.json"), "w") as f:
         json.dump(rows, f, indent=1)

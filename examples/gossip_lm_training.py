@@ -35,7 +35,7 @@ def main():
     results = {}
     for name, kw in runs.items():
         print(f"\n=== {name} ===")
-        res = train(args.arch, nodes=args.nodes, steps_n=args.steps,
+        res = train(args.arch, nodes=args.nodes, steps=args.steps,
                     batch_per_node=2, seq_len=128, lam=1e-5, smoke=True, **kw)
         ce = [h["ce"] for h in res["history"]]
         results[name] = ce

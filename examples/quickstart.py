@@ -3,27 +3,24 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Runs private distributed online learning (8 simulated data centers, ring
-gossip, Laplace DP, Lasso sparsity) on a synthetic social-data stream and
-prints the regret/accuracy trajectory — then shows the SAME declarative
-`RunSpec` building the algorithm as a framework distribution strategy
-(GossipDP) doing one distributed round.
+gossip, Laplace DP, Lasso sparsity) on a synthetic social-data stream with
+ONE `repro.api.run` call — regret trajectory, accuracy, sparsity and the
+privacy ledger all come back in the RunResult — then shows the SAME
+declarative `RunSpec` driving the distributed engine (`GossipDP`)
+bit-identically, and doing one raw framework round on an arbitrary pytree.
 """
 import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import RunSpec
-from repro.core.regret import cumulative_regret
-from repro.data.social import SocialStream
+from repro.api import RunSpec, run
 
 # --- 1. the paper's simulation -------------------------------------------
 m, n, T = 8, 256, 800
-stream = SocialStream(n=n, nodes=m, rounds=T, sparsity_true=0.05, seed=0)
-xs, ys = stream.chunk(0, T)
-
 spec = RunSpec(
-    nodes=m, dim=n,
+    nodes=m, dim=n, horizon=T,
+    stream="social_sparse",             # data scenario (STREAMS registry)
     mixer="ring",                       # data-center network (MIXERS registry)
     mechanism="laplace", eps=1.0,       # eps-DP broadcast (MECHANISMS registry)
     calibration="coordinate",
@@ -31,22 +28,28 @@ spec = RunSpec(
     clipper="l2", clip_norm=1.0,        # Assumption 2.3 (CLIPPERS registry)
     alpha0=1.0, schedule="sqrt_t",
 )
-alg = spec.build_simulator()
-outs = alg.run(jax.random.PRNGKey(0), xs, ys)
-reg = cumulative_regret(outs.w_bar_loss, xs, ys, m)
+res = run(spec, engine="sim")
 
 print("Private distributed online learning (paper Algorithm 1)")
-print(f"  nodes={m} dim={n} rounds={T} eps={spec.eps} topology={spec.mixer}")
+print(f"  nodes={m} dim={n} rounds={T} eps={spec.eps} topology={spec.mixer} "
+      f"stream={spec.stream}")
 for t in (100, 400, T - 1):
-    acc = float(outs.correct[max(0, t - 100): t].mean())
-    print(f"  t={t:4d}: cumulative regret={reg[t]:10.1f}  acc(last100)={acc:.3f}  "
-          f"sparsity={float(outs.sparsity[t]):.3f}")
+    acc = float(res.correct[max(0, t - 100): t].mean())
+    print(f"  t={t:4d}: cumulative regret={res.regret[t]:10.1f}  "
+          f"acc(last100)={acc:.3f}  sparsity={float(res.sparsity[t]):.3f}")
+print(f"  privacy ledger: {res.privacy['eps_total']} eps total over "
+      f"{res.privacy['rounds']} rounds ({res.privacy['composition']})")
 
-outs_np = spec.replace(eps=math.inf).build_simulator().run(jax.random.PRNGKey(0), xs, ys)
-print(f"  non-private final acc: {float(outs_np.correct[-100:].mean()):.3f} "
-      f"(privacy cost = {float(outs_np.correct[-100:].mean() - outs.correct[-100:].mean()):.3f})")
+res_np = run(spec.replace(eps=math.inf), engine="sim")
+print(f"  non-private final acc: {res_np.accuracy:.3f} "
+      f"(privacy cost = {res_np.accuracy - res.accuracy:.3f})")
 
-# --- 2. the SAME RunSpec as a framework distribution strategy -------------
+# --- 2. the SAME RunSpec on the distributed engine ------------------------
+dist = run(spec, engine="dist")
+print(f"\nDistributed engine, same seed: final acc {dist.accuracy:.3f}, "
+      f"iterates bit-identical: {(dist.final_w == res.final_w).all()}")
+
+# --- 3. GossipDP as a raw framework strategy ------------------------------
 gdp = spec.replace(alpha0=0.5, lam=1e-3).build_distributed()
 params = {"w": jnp.zeros((m, n))}          # any pytree works — here a linear model
 state = gdp.init(params, jax.random.PRNGKey(1))

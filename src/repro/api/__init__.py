@@ -28,9 +28,19 @@ True
 4
 >>> round(float(spec.resolve_mechanism().scale(1.0, n=8)), 4)  # Lemma-1 mu
 5.6569
+
+Data scenarios are a fifth protocol: `Stream` instances resolve through the
+STREAMS registry and `run()` drives either engine over them end-to-end
+(regret trajectory, eps ledger, wall-clock — see `repro.api.runner`):
+
+>>> from repro.api import STREAMS, run
+>>> {"social_sparse", "drift", "heterogeneous", "bursty"} <= set(STREAMS.names())
+True
+>>> spec.replace(horizon=4).resolve_stream().__class__.__name__
+'SocialStream'
 """
 from repro.api.registry import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
-                                Registry)
+                                STREAMS, Registry)
 from repro.api.mixers import (AlternatingRingMixer, CompleteMixer,
                               DelayedMixer, DenseMatrixMixer,
                               DisconnectedMixer, HeterogeneousDelayMixer,
@@ -42,10 +52,13 @@ from repro.api.rules import (LocalRule, OMDLassoRule, RDARule, StepContext,
                              TruncatedGradientRule)
 from repro.api.clippers import (Clipper, NoClipper, PerNodeL2Clipper,
                                 ValueClipper, per_node_norms)
+from repro.api.streams import (BurstyStream, DriftStream,
+                               HeterogeneousStream, SocialStream, Stream)
 from repro.api.spec import RunSpec
+from repro.api.runner import RunResult, run
 
 __all__ = [
-    "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS",
+    "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS", "STREAMS",
     "Mixer", "MixerBase", "DenseMatrixMixer", "RingRollMixer",
     "CompleteMixer", "DisconnectedMixer", "AlternatingRingMixer",
     "DelayedMixer", "HeterogeneousDelayMixer",
@@ -55,5 +68,7 @@ __all__ = [
     "RDARule",
     "Clipper", "PerNodeL2Clipper", "ValueClipper", "NoClipper",
     "per_node_norms",
-    "RunSpec",
+    "Stream", "SocialStream", "DriftStream", "HeterogeneousStream",
+    "BurstyStream",
+    "RunSpec", "RunResult", "run",
 ]

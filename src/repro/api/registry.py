@@ -34,7 +34,7 @@ import inspect
 from typing import Any, Callable, Generic, TypeVar
 
 __all__ = ["Registry", "UnknownEntryError", "MIXERS", "MECHANISMS",
-           "LOCAL_RULES", "CLIPPERS"]
+           "LOCAL_RULES", "CLIPPERS", "STREAMS"]
 
 T = TypeVar("T")
 
@@ -116,7 +116,10 @@ class Registry(Generic[T]):
 #   MECHANISMS  — eps, L (clip bound), noise_self, + user mechanism_options
 #   LOCAL_RULES — prox_kind, + user local_rule_options
 #   CLIPPERS    — max_norm, + user clipper_options
+#   STREAMS     — n (feature dim), nodes, rounds (horizon), seed,
+#                 + user stream_options
 MIXERS: Registry = Registry("mixer")
 MECHANISMS: Registry = Registry("mechanism")
 LOCAL_RULES: Registry = Registry("local rule")
 CLIPPERS: Registry = Registry("clipper")
+STREAMS: Registry = Registry("stream")

@@ -1,0 +1,379 @@
+"""`repro.api.run` — one call from RunSpec to RunResult, for either engine.
+
+Before this module existed every benchmark and example hand-rolled its own
+driving loop (and none of them did privacy accounting). `run` closes the
+loop: it resolves the spec's Stream (STREAMS registry), drives the whole
+horizon under a jitted `lax.scan` per chunk on EITHER engine — the dense
+simulator (`engine="sim"`) or the node-stacked distributed strategy
+(`engine="dist"`) — threads a `PrivacyAccountant` into a per-round eps
+ledger, records the regret/accuracy trajectories, and supports periodic
+checkpointing with bit-identical resume through `repro.checkpoint`.
+
+Both engines consume the same per-absolute-round stream chunks and the same
+PRNG key, so a seeded run produces bit-identical iterates under either
+engine (including the Laplace noise — see the single-leaf key note in
+`core.gossip.gossip_mix_tree`).
+
+>>> from repro.api import RunSpec, run
+>>> spec = RunSpec(nodes=2, dim=8, horizon=6, eps=1.0, alpha0=0.5,
+...                lam=0.01, stream="drift", stream_options={"period": 2})
+>>> res = run(spec, engine="sim", chunk_rounds=3, compute_regret=False,
+...           warmup=False)
+>>> res.rounds, res.correct.shape, float(res.eps_ledger[-1])
+(6, (6, 2), 1.0)
+>>> dist = run(spec, engine="dist", chunk_rounds=3, compute_regret=False,
+...            warmup=False)
+>>> bool((res.final_w == dist.final_w).all())     # seeded, bit-identical
+True
+
+`run` also drives arbitrary step functions (`step_fn=`) so the train CLI's
+LM loops share this exact loop — metrics, logging, accounting, checkpoints
+— instead of reimplementing it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import RunSpec
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.privacy import PrivacyAccountant
+from repro.metrics import CSVLogger, MetricTracker
+
+__all__ = ["run", "RunResult", "make_chunk_fn"]
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Everything a finished run knows about itself.
+
+    Stream runs fill the trajectory arrays (per-round, horizon-length,
+    covering [start_round, rounds)); custom step_fn runs fill ``history``
+    (one metrics dict per step) instead. ``eps_ledger[t]`` is the cumulative
+    privacy guarantee after round start_round + t + 1.
+    """
+
+    engine: str
+    rounds: int
+    wall_clock: float            # seconds, post-compile (see warmup=)
+    rounds_per_sec: float
+    stream: str | None = None
+    start_round: int = 0         # > 0 when resumed from a checkpoint
+    eps_ledger: np.ndarray | None = None
+    privacy: dict = dataclasses.field(default_factory=dict)
+    loss: np.ndarray | None = None        # (T, m) per-node hinge losses
+    w_bar_loss: np.ndarray | None = None  # (T,) loss of the averaged w
+    correct: np.ndarray | None = None     # (T, m) prediction correctness
+    sparsity: np.ndarray | None = None    # (T,) zero-fraction of w
+    regret: np.ndarray | None = None      # (T,) cumulative (Definition 3)
+    accuracy: float | None = None         # mean correctness, last 20%
+    final_w: np.ndarray | None = None     # (m, n) final primal parameters
+    final_state: Any = None               # engine state (checkpointable)
+    history: list | None = None           # custom-mode per-step metrics
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+    def accuracy_curve(self, window: int = 50) -> np.ndarray:
+        """Moving-window mean accuracy over the horizon."""
+        correct = self.correct.mean(axis=1)
+        c = np.cumsum(np.insert(correct, 0, 0.0))
+        return (c[window:] - c[:-window]) / window
+
+    def summary(self) -> dict:
+        return {
+            "engine": self.engine,
+            "stream": self.stream,
+            "rounds": self.rounds,
+            "wall_clock_s": round(self.wall_clock, 3),
+            "rounds_per_sec": round(self.rounds_per_sec, 2),
+            "accuracy": self.accuracy,
+            "regret_final": (None if self.regret is None
+                             else float(self.regret[-1])),
+            "eps_total": self.privacy.get("eps_total"),
+        }
+
+
+def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
+    """(chunk_fn, initial_state) for one engine.
+
+    chunk_fn(state, xs, ys) scans the engine over a chunk of rounds and
+    returns (state, RoundOutput-stacked trajectories). Exposed so
+    `launch.dryrun` can lower/compile the exact program `run` executes.
+    """
+    from repro.core.algorithm1 import RoundOutput, hinge_loss_and_grad
+    from repro.core import prox
+
+    m = spec.nodes
+    n = spec.dim
+    if n is None:
+        raise ValueError("RunSpec.dim is required by repro.api.run")
+    key = jax.random.PRNGKey(spec.seed)
+    loss_and_grad = spec.loss_and_grad or hinge_loss_and_grad
+
+    if engine == "sim":
+        alg = spec.build_simulator()
+
+        def chunk_fn(state, xs, ys):
+            return jax.lax.scan(alg.round, state, (xs, ys))
+
+        return chunk_fn, alg.init(key)
+
+    if engine == "dist":
+        gdp = spec.build_distributed()
+
+        def chunk_fn(state, xs, ys):
+            def body(st, batch):
+                x, y = batch
+                w = gdp.primal(st)["w"]
+                loss, grad = loss_and_grad(w, x, y)
+                correct = (jnp.sign(jnp.einsum("mn,mn->m", w, x)) == y
+                           ).astype(jnp.float32)
+                st, _ = gdp.update(st, {"w": grad})
+                # identical metric algebra to Algorithm1.round, so the two
+                # engines' trajectories compare element-for-element
+                w_bar = jnp.mean(w, axis=0, keepdims=True)
+                wb_loss = jnp.mean(jnp.maximum(
+                    1.0 - y * jnp.einsum("n,mn->m", w_bar[0], x), 0.0))
+                out = RoundOutput(loss=loss, w_bar_loss=wb_loss,
+                                  sparsity=prox.sparsity(w), correct=correct)
+                return st, out
+            return jax.lax.scan(body, state, (xs, ys))
+
+        state = gdp.init({"w": jnp.zeros((m, n), jnp.float32)}, key)
+        return chunk_fn, state
+
+    raise ValueError(f"unknown engine {engine!r}; expected 'sim' or 'dist'")
+
+
+def _final_primal(spec: RunSpec, engine: str, state) -> np.ndarray:
+    """(m, n) primal parameters from the final engine state — the same
+    schedule context for both engines (Algorithm1.final_params convention)."""
+    rule = spec.resolve_local_rule()
+    ctx = spec.omd_config().step_context(state.t)
+    theta = state.theta if engine == "sim" else state.theta["w"]
+    return np.asarray(rule.primal(theta, ctx))
+
+
+def _boundaries(start: int, T: int, chunk_rounds: int,
+                checkpoint_every: int | None) -> list[int]:
+    """Chunk split points: every chunk_rounds, also landing on every
+    checkpoint_every multiple so checkpoints capture exact round states."""
+    ts = [start]
+    t = start
+    while t < T:
+        nxt = t + chunk_rounds
+        if checkpoint_every:
+            nxt = min(nxt, ((t // checkpoint_every) + 1) * checkpoint_every)
+        ts.append(min(nxt, T))
+        t = ts[-1]
+    return ts
+
+
+_WSTAR_CACHE: dict = {}
+
+
+def _regret(stream, w_bar_loss: np.ndarray, xs: np.ndarray, ys: np.ndarray,
+            m: int) -> np.ndarray:
+    from repro.core.regret import best_fixed_hinge, cumulative_regret
+    cache_key = (stream, xs.shape)
+    try:
+        w_star = _WSTAR_CACHE.get(cache_key)
+    except TypeError:                      # unhashable custom stream
+        cache_key, w_star = None, None
+    if w_star is None:
+        w_star = best_fixed_hinge(jnp.asarray(xs), jnp.asarray(ys))
+        if cache_key is not None:
+            _WSTAR_CACHE[cache_key] = w_star
+    return cumulative_regret(jnp.asarray(w_bar_loss), jnp.asarray(xs),
+                             jnp.asarray(ys), m, w_star=w_star)
+
+
+def run(spec: RunSpec | None, engine: str = "sim", *,
+        chunk_rounds: int = 512,
+        checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
+        resume: bool = False,
+        log_path: str | None = None,
+        compute_regret: bool = True,
+        warmup: bool = True,
+        horizon: int | None = None,
+        step_fn: Callable | None = None,
+        state: Any = None,
+        batches: Iterator | None = None,
+        print_every: int | None = None) -> RunResult:
+    """Drive one run end-to-end and return a RunResult.
+
+    Stream mode (default): resolves ``spec.stream`` and scans the chosen
+    engine over the horizon in jitted chunks. ``checkpoint_every`` saves the
+    engine state every N rounds into ``checkpoint_dir``; ``resume=True``
+    restores the latest checkpoint and continues bit-identically (streams
+    are keyed per absolute round, so the data after resume is unchanged).
+    ``warmup=True`` compiles the first chunk outside the timed region so
+    rounds_per_sec measures steady-state execution.
+
+    Custom mode (``step_fn=``): drives ``state, metrics = step_fn(state,
+    next(batches))`` for ``horizon`` steps with the same tracking /
+    logging / accounting / checkpointing — the loop `launch.train` uses, so
+    the train CLI and the benchmarks cannot diverge.
+    """
+    if step_fn is not None:
+        return _run_custom(spec, engine, step_fn=step_fn, state=state,
+                           batches=batches, horizon=horizon,
+                           log_path=log_path, print_every=print_every,
+                           checkpoint_every=checkpoint_every,
+                           checkpoint_dir=checkpoint_dir)
+    if spec is None:
+        raise ValueError("run() needs a RunSpec (or step_fn= for custom mode)")
+
+    stream = spec.resolve_stream()
+    T = horizon or spec.horizon or stream.rounds
+    m = spec.nodes
+
+    mech = spec.resolve_mechanism()
+    # a custom stream that does not DECLARE disjoint rounds gets the
+    # pessimistic sequential composition — never overstate a DP guarantee
+    accountant = PrivacyAccountant(
+        eps_per_round=spec.eps if mech.is_private else math.inf,
+        disjoint_streams=getattr(stream, "disjoint", False))
+
+    chunk_fn, init_state = make_chunk_fn(spec, engine)
+    chunk_jit = jax.jit(chunk_fn)
+
+    start = 0
+    eng_state = init_state
+    if resume:
+        if not checkpoint_dir:
+            raise ValueError("resume=True needs checkpoint_dir=")
+        found = latest_step(checkpoint_dir)
+        if found is not None:
+            eng_state = restore_checkpoint(checkpoint_dir, init_state,
+                                           step=found)
+            start = found
+    accountant.rounds = start
+
+    bounds = _boundaries(start, T, chunk_rounds, checkpoint_every)
+    logger = CSVLogger(log_path) if log_path else None
+
+    first_chunk = None
+    if warmup and len(bounds) > 1:
+        first_chunk = stream.chunk(bounds[0], bounds[1])
+        jax.block_until_ready(chunk_jit(eng_state, *first_chunk)[0].theta)
+
+    losses, wb_losses, sparsities, corrects = [], [], [], []
+    xs_all, ys_all = [], []
+    t0 = time.time()
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        if a == bounds[0] and first_chunk is not None:
+            xs, ys = first_chunk       # don't regenerate the warmup chunk
+        else:
+            xs, ys = stream.chunk(a, b)
+        eng_state, outs = chunk_jit(eng_state, xs, ys)
+        jax.block_until_ready(outs.loss)
+        accountant.step(b - a)
+        losses.append(np.asarray(outs.loss))
+        wb_losses.append(np.asarray(outs.w_bar_loss))
+        sparsities.append(np.asarray(outs.sparsity))
+        corrects.append(np.asarray(outs.correct))
+        if compute_regret:
+            xs_all.append(np.asarray(xs))
+            ys_all.append(np.asarray(ys))
+        if logger:
+            for i, t in enumerate(range(a, b)):
+                logger.log(t, {
+                    "loss": float(losses[-1][i].mean()),
+                    "w_bar_loss": float(wb_losses[-1][i]),
+                    "sparsity": float(sparsities[-1][i]),
+                    "accuracy": float(corrects[-1][i].mean()),
+                    "eps": accountant.guarantee_at(t + 1),
+                })
+        if (checkpoint_every and checkpoint_dir
+                and b % checkpoint_every == 0):
+            save_checkpoint(checkpoint_dir, b, eng_state)
+    wall = time.time() - t0
+    if logger:
+        logger.close()
+
+    correct = np.concatenate(corrects) if corrects else np.zeros((0, m))
+    w_bar_loss = np.concatenate(wb_losses) if wb_losses else np.zeros((0,))
+    tail = max(1, int(correct.shape[0] * 0.2)) if correct.size else 1
+    regret = None
+    if compute_regret and start == 0 and xs_all:
+        regret = _regret(stream, w_bar_loss, np.concatenate(xs_all),
+                         np.concatenate(ys_all), m)
+
+    done = T - start
+    result = RunResult(
+        engine=engine,
+        rounds=T,
+        start_round=start,
+        wall_clock=wall,
+        rounds_per_sec=(done / wall) if wall > 0 else float("inf"),
+        stream=(spec.stream if isinstance(spec.stream, str)
+                else type(stream).__name__),
+        eps_ledger=np.asarray(accountant.ledger(T)[start:]),
+        privacy=accountant.summary(),
+        loss=np.concatenate(losses) if losses else None,
+        w_bar_loss=w_bar_loss if len(w_bar_loss) else None,
+        correct=correct if correct.size else None,
+        sparsity=np.concatenate(sparsities) if sparsities else None,
+        regret=None if regret is None else np.asarray(regret),
+        accuracy=float(correct[-tail:].mean()) if correct.size else None,
+        final_w=_final_primal(spec, engine, eng_state),
+        final_state=eng_state,
+    )
+    result.metrics = result.summary()
+    return result
+
+
+def _run_custom(spec, engine, *, step_fn, state, batches, horizon,
+                log_path, print_every, checkpoint_every,
+                checkpoint_dir) -> RunResult:
+    if horizon is None:
+        raise ValueError("custom mode needs horizon= (number of steps)")
+    accountant = None
+    if spec is not None:
+        mech = spec.resolve_mechanism()
+        accountant = PrivacyAccountant(
+            eps_per_round=spec.eps if mech.is_private else math.inf)
+    tracker = MetricTracker()
+    logger = CSVLogger(log_path) if log_path else None
+    history = []
+    t0 = time.time()
+    for i in range(horizon):
+        batch = next(batches)
+        state, metrics = step_fn(state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        tracker.update(metrics)
+        history.append(metrics)
+        if accountant is not None:
+            accountant.step()
+        if logger:
+            logger.log(i, metrics)
+        if checkpoint_every and checkpoint_dir and (i + 1) % checkpoint_every == 0:
+            save_checkpoint(checkpoint_dir, i + 1, state)
+        if print_every and (i % print_every == 0 or i == horizon - 1):
+            means = tracker.means()
+            print(f"step {i:4d} loss={means.get('loss', 0):.4f} "
+                  f"ce={means.get('ce', 0):.4f} "
+                  f"sparsity={means.get('theta_sparsity', 0):.3f} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+    wall = time.time() - t0
+    if logger:
+        logger.close()
+    return RunResult(
+        engine=engine,
+        rounds=horizon,
+        wall_clock=wall,
+        rounds_per_sec=(horizon / wall) if wall > 0 else float("inf"),
+        eps_ledger=(None if accountant is None
+                    else np.asarray(accountant.ledger())),
+        privacy={} if accountant is None else accountant.summary(),
+        final_state=state,
+        history=history,
+        metrics=tracker.means(),
+    )

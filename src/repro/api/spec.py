@@ -37,6 +37,7 @@ from repro.api.mechanisms import MECHANISMS, Mechanism
 from repro.api.mixers import (MIXERS, DelayedMixer, HeterogeneousDelayMixer,
                               Mixer)
 from repro.api.rules import LOCAL_RULES, LocalRule
+from repro.api.streams import STREAMS, Stream
 from repro.core.omd import OMDConfig
 
 __all__ = ["RunSpec"]
@@ -58,6 +59,10 @@ class RunSpec:
              clipper factories (explicit *_options win).
     alpha0, schedule, lam, horizon, prox_kind:
              the OMD schedule (Theorem 2) shared by every local rule.
+    stream / stream_options:
+             data scenario for `repro.api.run` (STREAMS registry name or a
+             Stream instance); the stream is built with n=dim, nodes,
+             rounds=horizon, seed.
     delay:   WAN staleness in rounds — wraps the mixer in DelayedMixer
              (both engines allocate a delay-deep history ring).
     delay_dist:
@@ -92,6 +97,10 @@ class RunSpec:
     delay_dist: str | None = None
     seed: int = 0
     loss_and_grad: Callable | None = None
+    # data scenario driven by `repro.api.run`: registry name (STREAMS) or a
+    # constructed Stream instance; stream_options forward to the factory
+    stream: str | Stream = "social_sparse"
+    stream_options: dict = dataclasses.field(default_factory=dict)
 
     # -- protocol resolution -------------------------------------------------
 
@@ -146,6 +155,28 @@ class RunSpec:
     def resolve_clipper(self) -> Clipper:
         return CLIPPERS.build(self.clipper, self.clipper_options,
                               max_norm=self.clip_norm)
+
+    def resolve_stream(self) -> Stream:
+        """The data scenario `repro.api.run` drives (STREAMS registry)."""
+        if isinstance(self.stream, str):
+            if self.dim is None:
+                raise ValueError("RunSpec.dim is required to build a stream "
+                                 "by name")
+            if self.horizon is None:
+                raise ValueError("RunSpec.horizon is required to build a "
+                                 "stream by name (the stream length)")
+            return STREAMS.build(self.stream, self.stream_options,
+                                 n=self.dim, nodes=self.nodes,
+                                 rounds=self.horizon, seed=self.seed)
+        stream = self.stream
+        if getattr(stream, "nodes", self.nodes) != self.nodes:
+            raise ValueError(
+                f"stream is built for {stream.nodes} nodes but RunSpec.nodes="
+                f"{self.nodes}")
+        if self.dim is not None and getattr(stream, "n", self.dim) != self.dim:
+            raise ValueError(
+                f"stream has n={stream.n} features but RunSpec.dim={self.dim}")
+        return stream
 
     def omd_config(self) -> OMDConfig:
         return OMDConfig(alpha0=self.alpha0, schedule=self.schedule,

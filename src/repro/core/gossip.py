@@ -85,7 +85,11 @@ def gossip_mix_tree(theta: Any, key: jax.Array, noise_scale: jax.Array,
     leaves, treedef = jax.tree_util.tree_flatten(theta)
     hist_leaves = (jax.tree_util.tree_leaves(history)
                    if history is not None else [None] * len(leaves))
-    keys = jax.random.split(key, len(leaves))
+    # single-leaf trees consume `key` directly (split(key, 1)[0] != key):
+    # the dense simulator samples its one (m, n) matrix straight from the
+    # per-round key, so this keeps the two engines' noise streams — and
+    # therefore their iterates — bit-identical for the linear workload
+    keys = jax.random.split(key, len(leaves)) if len(leaves) > 1 else [key]
     mixed, new_hist = [], []
     for k, leaf, hist in zip(keys, leaves, hist_leaves):
         delta = mech.sample(k, leaf.shape, noise_scale, leaf.dtype)

@@ -115,20 +115,50 @@ class PrivacyAccountant:
     the stream entries that arrive at round t (disjoint across rounds), the
     T-round algorithm is eps-DP overall, NOT T*eps. We additionally track the
     pessimistic sequential-composition number for transparency.
+
+    `repro.api.run` threads one accountant through every run: ``step(k)``
+    after each chunk of k rounds, ``ledger(T)`` for the per-round eps
+    trajectory in the RunResult, ``summary()`` for the final record.
     """
 
     eps_per_round: float
     rounds: int = 0
     disjoint_streams: bool = True
 
+    def __post_init__(self):
+        if self.eps_per_round < 0:
+            raise ValueError("eps_per_round must be >= 0")
+        if self.rounds < 0:
+            raise ValueError("rounds must be >= 0")
+
     def step(self, k: int = 1) -> None:
+        if k < 0:
+            raise ValueError("cannot step a negative number of rounds")
         self.rounds += k
+
+    def guarantee_at(self, rounds: int) -> float:
+        """Cumulative eps after ``rounds`` rounds.
+
+        0 rounds => 0.0 (nothing has been released yet — the pre-fix code
+        claimed eps_per_round before the first broadcast). Under Theorem 1
+        the guarantee is flat at eps_per_round for every rounds >= 1; the
+        sequential fallback composes linearly.
+        """
+        if rounds == 0:
+            return 0.0
+        if self.disjoint_streams:
+            return self.eps_per_round  # Thm 1
+        return self.eps_per_round * rounds  # sequential fallback
 
     @property
     def guarantee(self) -> float:
-        if self.disjoint_streams:
-            return self.eps_per_round  # Thm 1
-        return self.eps_per_round * self.rounds  # sequential fallback
+        return self.guarantee_at(self.rounds)
+
+    def ledger(self, rounds: int | None = None) -> list[float]:
+        """Per-round cumulative eps trajectory [guarantee_at(1) ..
+        guarantee_at(T)] — what `repro.api.run` records in RunResult."""
+        T = self.rounds if rounds is None else rounds
+        return [self.guarantee_at(t) for t in range(1, T + 1)]
 
     def summary(self) -> dict:
         return {

@@ -299,6 +299,44 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def dryrun_stream(stream: str, *, engine: str = "sim", nodes: int = 8,
+                  dim: int = 256, chunk_rounds: int = 64,
+                  stream_options: dict | None = None, save: bool = True,
+                  verbose: bool = True) -> dict:
+    """Lower + compile the exact chunk program `repro.api.run` scans for a
+    STREAMS scenario (no real horizon executed) and record its HLO cost —
+    proves a declared scenario compiles on either engine before you pay for
+    the run."""
+    from repro.api import RunSpec
+    from repro.api.runner import make_chunk_fn
+
+    spec = RunSpec(nodes=nodes, dim=dim, horizon=chunk_rounds, eps=1.0,
+                   alpha0=0.5, lam=0.01, stream=stream,
+                   stream_options=stream_options or {})
+    fn, state = make_chunk_fn(spec, engine)
+    xs = jax.ShapeDtypeStruct((chunk_rounds, nodes, dim), np.float32)
+    ys = jax.ShapeDtypeStruct((chunk_rounds, nodes), np.float32)
+    t0 = time.time()
+    compiled = jax.jit(fn).lower(state, xs, ys).compile()
+    compile_s = time.time() - t0
+    rollup = hlo_cost.analyze(compiled.as_text())
+    rec = {
+        "arch": f"stream-{stream}", "shape": f"chunk{chunk_rounds}",
+        "mesh": "host", "strategy": engine, "status": "ok",
+        "stream": stream, "engine": engine, "nodes": nodes, "dim": dim,
+        "chunk_rounds": chunk_rounds, "compile_s": round(compile_s, 1),
+        "hlo_flops": rollup.flops, "hlo_bytes": rollup.hbm_bytes,
+        "collectives": rollup.summary(),
+    }
+    if save:
+        _save(rec)
+    if verbose:
+        print(f"[ok] stream={stream} engine={engine} m={nodes} n={dim} "
+              f"chunk={chunk_rounds}: compile {compile_s:.1f}s "
+              f"flops={rollup.flops:.3g} bytes={rollup.hbm_bytes:.3g}")
+    return rec
+
+
 def _save(rec: dict) -> None:
     os.makedirs(OUT_DIR, exist_ok=True)
     fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}__{rec['strategy']}.json"
@@ -319,7 +357,23 @@ def main() -> int:
                          "ring to the lowered GossipState")
     ap.add_argument("--delay-dist", default=None,
                     choices=["constant", "uniform", "geometric"])
+    ap.add_argument("--stream", default=None,
+                    help="repro.api STREAMS name: lower/compile the "
+                         "repro.api.run chunk program instead of an arch")
+    ap.add_argument("--stream-opt", action="append", default=[],
+                    metavar="KEY=VALUE")
+    ap.add_argument("--engine", default="sim", choices=["sim", "dist"])
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--chunk-rounds", type=int, default=64)
     args = ap.parse_args()
+
+    if args.stream:
+        from repro.launch.train import parse_stream_options
+        dryrun_stream(args.stream, engine=args.engine, nodes=args.nodes,
+                      dim=args.dim, chunk_rounds=args.chunk_rounds,
+                      stream_options=parse_stream_options(args.stream_opt))
+        return 0
 
     runs = []
     if args.all:

@@ -1,8 +1,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.api import RunSpec, run
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.core.algorithm1 import hinge_loss_and_grad
 
 
 def test_checkpoint_roundtrip(tmp_path):
@@ -25,3 +28,68 @@ def test_checkpoint_roundtrip(tmp_path):
 
 def test_checkpoint_latest_of_empty(tmp_path):
     assert latest_step(str(tmp_path / "nope")) is None
+
+
+def _delay_spec(delay: int) -> RunSpec:
+    return RunSpec(nodes=4, dim=32, horizon=24, eps=1.0, alpha0=0.5,
+                   lam=0.01, delay=delay, stream="social_sparse")
+
+
+@pytest.mark.parametrize("delay", [0, 2])
+def test_gossip_state_roundtrip_bit_identical_continuation(tmp_path, delay):
+    """Save GossipState mid-run (incl. the PR-2 history ring), restore, and
+    the continuation is bit-identical to the uninterrupted run."""
+    spec = _delay_spec(delay)
+    gdp = spec.build_distributed()
+    stream = spec.resolve_stream()
+    xs, ys = stream.chunk(0, 24)
+
+    def rounds(state, t0, t1):
+        for t in range(t0, t1):
+            w = gdp.primal(state)["w"]
+            _, grad = hinge_loss_and_grad(w, xs[t], ys[t])
+            state, _ = gdp.update(state, {"w": grad})
+        return state
+
+    init = gdp.init({"w": jnp.zeros((4, 32))}, jax.random.PRNGKey(0))
+    if delay:
+        assert init.history["w"].shape == (delay + 1, 4, 32)
+    full = rounds(init, 0, 24)
+
+    mid = rounds(init, 0, 12)
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 12, mid)
+    restored = jax.tree_util.tree_map(jnp.asarray,
+                                      restore_checkpoint(d, mid, step=12))
+    # the whole state round-trips exactly: theta, round counter, PRNG key,
+    # and (delay > 0) every slot of the history ring
+    np.testing.assert_array_equal(np.asarray(restored.theta["w"]),
+                                  np.asarray(mid.theta["w"]))
+    np.testing.assert_array_equal(np.asarray(restored.key),
+                                  np.asarray(mid.key))
+    assert int(restored.t) == int(mid.t) == 12
+    if delay:
+        np.testing.assert_array_equal(np.asarray(restored.history["w"]),
+                                      np.asarray(mid.history["w"]))
+    resumed = rounds(restored, 12, 24)
+    np.testing.assert_array_equal(np.asarray(resumed.theta["w"]),
+                                  np.asarray(full.theta["w"]))
+
+
+@pytest.mark.parametrize("delay", [0, 2])
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+def test_run_resume_bit_identical(tmp_path, delay, engine):
+    """run(checkpoint_every=)/run(resume=True) continues bit-identically
+    for both engines, with and without the history ring."""
+    spec = _delay_spec(delay)
+    full = run(spec, engine=engine, chunk_rounds=8, warmup=False,
+               compute_regret=False)
+    d = str(tmp_path / "ckpt")
+    run(spec, engine=engine, chunk_rounds=8, warmup=False,
+        compute_regret=False, horizon=12, checkpoint_every=12,
+        checkpoint_dir=d)
+    res = run(spec, engine=engine, chunk_rounds=8, warmup=False,
+              compute_regret=False, checkpoint_dir=d, resume=True)
+    assert res.start_round == 12
+    np.testing.assert_array_equal(res.final_w, full.final_w)
+    np.testing.assert_array_equal(res.correct, np.asarray(full.correct)[12:])

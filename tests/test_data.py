@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.lm import TokenStream, lm_batches
-from repro.data.social import SocialStream
+from repro.data.social import SocialStream, labels_from_logits
 
 
 def test_social_stream_deterministic_and_chunked():
@@ -20,7 +20,8 @@ def test_social_labels_match_ground_truth():
     xs, ys = s.chunk(0, 10)
     w = s.w_true()
     np.testing.assert_array_equal(
-        np.asarray(jnp.sign(jnp.einsum("n,tmn->tm", w, xs) + 1e-12)), np.asarray(ys))
+        np.asarray(labels_from_logits(jnp.einsum("n,tmn->tm", w, xs))),
+        np.asarray(ys))
     # ground truth is sparse
     frac = float((w != 0).mean())
     assert 0.01 < frac < 0.15

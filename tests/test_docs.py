@@ -9,7 +9,8 @@ import re
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md")
+DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
+        "docs/streams.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -18,6 +19,8 @@ API_MODULES = (
     "repro.api.mechanisms",
     "repro.api.rules",
     "repro.api.clippers",
+    "repro.api.streams",
+    "repro.api.runner",
 )
 FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 

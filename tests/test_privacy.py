@@ -70,3 +70,40 @@ def test_accountant_parallel_composition():
     seq = PrivacyAccountant(eps_per_round=0.5, disjoint_streams=False)
     seq.step(100)
     assert seq.guarantee == pytest.approx(50.0)
+
+
+def test_accountant_zero_rounds_guarantees_zero():
+    """Fix: before the first broadcast NOTHING has been released, so the
+    guarantee is 0 — the old code claimed eps_per_round at rounds == 0."""
+    assert PrivacyAccountant(eps_per_round=0.5).guarantee == 0.0
+    assert PrivacyAccountant(eps_per_round=0.5,
+                             disjoint_streams=False).guarantee == 0.0
+
+
+def test_accountant_guarantee_at_trajectory():
+    par = PrivacyAccountant(eps_per_round=0.25)
+    assert [par.guarantee_at(t) for t in (0, 1, 7, 10_000)] == \
+        [0.0, 0.25, 0.25, 0.25]
+    seq = PrivacyAccountant(eps_per_round=0.25, disjoint_streams=False)
+    assert [seq.guarantee_at(t) for t in (0, 1, 4)] == [0.0, 0.25, 1.0]
+
+
+def test_accountant_ledger():
+    par = PrivacyAccountant(eps_per_round=2.0)
+    par.step(3)
+    assert par.ledger() == [2.0, 2.0, 2.0]
+    seq = PrivacyAccountant(eps_per_round=2.0, disjoint_streams=False)
+    seq.step(2)
+    assert seq.ledger() == [2.0, 4.0]
+    assert seq.ledger(rounds=4) == [2.0, 4.0, 6.0, 8.0]
+
+
+def test_accountant_rejects_invalid_input():
+    with pytest.raises(ValueError):
+        PrivacyAccountant(eps_per_round=-1.0)
+    with pytest.raises(ValueError):
+        PrivacyAccountant(eps_per_round=1.0, rounds=-3)
+    acc = PrivacyAccountant(eps_per_round=1.0)
+    with pytest.raises(ValueError):
+        acc.step(-1)
+    assert acc.rounds == 0  # the failed step must not half-apply

@@ -1,0 +1,123 @@
+"""`repro.api.run` — RunSpec -> RunResult on either engine."""
+import dataclasses
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, SocialStream, run
+
+
+def _spec(**kw):
+    base = dict(nodes=4, dim=64, horizon=256, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift")
+    base.update(kw)
+    return RunSpec(**base)
+
+
+@pytest.mark.parametrize("stream", ["social_sparse", "drift"])
+def test_sim_and_dist_bit_identical(stream):
+    """The acceptance contract: seeded sim-vs-dist iterates are
+    bit-identical — including the Laplace noise stream (eps=1)."""
+    spec = _spec(stream=stream)
+    sim = run(spec, engine="sim", chunk_rounds=128, warmup=False)
+    dist = run(spec, engine="dist", chunk_rounds=128, warmup=False)
+    for r in (sim, dist):
+        assert r.rounds == 256
+        assert r.regret is not None and len(r.regret) == 256
+        assert r.eps_ledger is not None and len(r.eps_ledger) == 256
+        assert r.wall_clock > 0 and r.rounds_per_sec > 0
+    np.testing.assert_array_equal(sim.final_w, dist.final_w)
+    np.testing.assert_array_equal(sim.correct, dist.correct)
+    np.testing.assert_array_equal(sim.w_bar_loss, dist.w_bar_loss)
+    np.testing.assert_array_equal(sim.regret, dist.regret)
+
+
+def test_run_chunking_does_not_change_results():
+    spec = _spec(stream="social_sparse", horizon=96)
+    a = run(spec, engine="sim", chunk_rounds=96, warmup=False,
+            compute_regret=False)
+    b = run(spec, engine="sim", chunk_rounds=17, warmup=False,
+            compute_regret=False)
+    np.testing.assert_array_equal(a.final_w, b.final_w)
+    np.testing.assert_array_equal(a.correct, b.correct)
+
+
+def test_eps_ledger_parallel_composition():
+    res = run(_spec(horizon=64), engine="sim", warmup=False,
+              compute_regret=False)
+    np.testing.assert_array_equal(res.eps_ledger, np.full(64, 1.0))
+    assert res.privacy["eps_total"] == 1.0
+    assert res.privacy["composition"] == "parallel (disjoint)"
+
+
+def test_eps_ledger_sequential_fallback():
+    stream = dataclasses.replace(
+        SocialStream(n=64, nodes=4, rounds=32), disjoint=False)
+    res = run(_spec(stream=stream, horizon=32), engine="sim", warmup=False,
+              compute_regret=False)
+    np.testing.assert_allclose(res.eps_ledger, np.arange(1, 33) * 1.0)
+    assert res.privacy["composition"] == "sequential"
+
+
+def test_non_private_run_has_infinite_ledger():
+    res = run(_spec(eps=math.inf, horizon=16), engine="sim", warmup=False,
+              compute_regret=False)
+    assert np.isinf(res.eps_ledger).all()
+
+
+def test_run_learns_on_social_sparse():
+    spec = _spec(stream="social_sparse", eps=math.inf, horizon=400,
+                 alpha0=1.0, calibration="coordinate")
+    res = run(spec, engine="sim", warmup=False, compute_regret=False)
+    assert res.accuracy > 0.7
+    # regret off but trajectories on
+    assert res.sparsity is not None and res.loss.shape == (400, 4)
+
+
+def test_run_csv_log(tmp_path):
+    path = str(tmp_path / "run.csv")
+    run(_spec(horizon=8), engine="sim", warmup=False, compute_regret=False,
+        log_path=path)
+    lines = open(path).read().strip().splitlines()
+    assert len(lines) == 9  # header + one row per round
+    assert "eps" in lines[0] and "accuracy" in lines[0]
+
+
+def test_run_unknown_engine_raises():
+    with pytest.raises(ValueError):
+        run(_spec(horizon=8), engine="tpu-cluster", warmup=False)
+
+
+def test_run_custom_step_fn_loop(tmp_path):
+    """The loop launch.train drives LM training through."""
+    calls = []
+
+    def step_fn(state, batch):
+        calls.append(batch)
+        return state + batch, {"loss": float(state)}
+
+    def batches():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    res = run(None, engine="custom", step_fn=step_fn, state=0,
+              batches=batches(), horizon=5, print_every=None,
+              log_path=str(tmp_path / "steps.csv"))
+    assert res.final_state == 0 + 1 + 2 + 3 + 4
+    assert len(res.history) == 5 and calls == [0, 1, 2, 3, 4]
+    assert res.history[-1] == {"loss": 6.0}
+    assert os.path.exists(tmp_path / "steps.csv")
+
+
+def test_run_custom_mode_requires_horizon():
+    with pytest.raises(ValueError):
+        run(None, step_fn=lambda s, b: (s, {}), batches=iter([]), state=0)
+
+
+def test_run_without_spec_or_step_fn_raises():
+    with pytest.raises(ValueError):
+        run(None)

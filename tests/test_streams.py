@@ -1,0 +1,153 @@
+"""STREAMS registry + the four built-in data scenarios."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import STREAMS, RunSpec
+from repro.api.registry import UnknownEntryError
+from repro.api.streams import (BurstyStream, DriftStream,
+                               HeterogeneousStream, SocialStream, Stream)
+from repro.data.social import labels_from_logits
+
+
+ALL = ("social_sparse", "drift", "heterogeneous", "bursty")
+
+
+def test_all_four_scenarios_registered():
+    assert set(ALL) <= set(STREAMS.names())
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_stream_protocol_shapes_and_labels(name):
+    s = STREAMS.build(name, n=32, nodes=4, rounds=20, seed=5)
+    assert isinstance(s, Stream)
+    assert s.disjoint  # Theorem-1 parallel composition condition
+    xs, ys = s.chunk(0, 20)
+    assert xs.shape == (20, 4, 32) and ys.shape == (20, 4)
+    assert xs.dtype == jnp.float32 and ys.dtype == jnp.float32
+    # labels are strictly ±1 — never the invalid 0
+    assert set(np.unique(np.asarray(ys))) <= {-1.0, 1.0}
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_stream_chunk_boundary_invariance(name):
+    """Round t's data never depends on how the horizon is chunked — the
+    property checkpoint resume and run()'s chunking rely on."""
+    s = STREAMS.build(name, n=16, nodes=3, rounds=30, seed=2)
+    xs_whole, ys_whole = s.chunk(0, 30)
+    xs_a, ys_a = s.chunk(0, 7)
+    xs_b, ys_b = s.chunk(7, 30)
+    np.testing.assert_array_equal(np.asarray(xs_whole),
+                                  np.concatenate([xs_a, xs_b]))
+    np.testing.assert_array_equal(np.asarray(ys_whole),
+                                  np.concatenate([ys_a, ys_b]))
+
+
+def test_labels_from_logits_zero_maps_to_plus_one():
+    """Regression: jnp.sign(logits + 1e-12) returned y == 0 for logits of
+    exactly -1e-12; the label rule is now y = +1 iff logit >= 0."""
+    logits = jnp.asarray([0.0, -0.0, 1e-30, -1e-12, 2.0, -3.0])
+    y = labels_from_logits(logits)
+    np.testing.assert_array_equal(np.asarray(y), [1, 1, 1, -1, 1, -1])
+    assert not np.any(np.asarray(y) == 0.0)
+
+
+def test_social_all_zero_ground_truth_still_emits_valid_labels():
+    # sparsity_true=0 gives w* = 0 => every logit is exactly 0
+    s = SocialStream(n=16, nodes=2, rounds=4, sparsity_true=0.0, seed=0)
+    _, ys = s.chunk(0, 4)
+    np.testing.assert_array_equal(np.asarray(ys), 1.0)
+
+
+def test_social_w_true_cached_across_chunks():
+    """Satellite fix: w* used to be recomputed per chunk() call."""
+    a = SocialStream(n=64, nodes=4, rounds=100, seed=3)
+    b = SocialStream(n=64, nodes=4, rounds=50, seed=3)  # rounds irrelevant
+    assert a.w_true() is a.w_true()
+    assert a.w_true() is b.w_true()
+    assert a.w_true() is not SocialStream(n=64, nodes=4, rounds=100,
+                                          seed=4).w_true()
+
+
+def test_drift_ground_truth_changes_across_phases():
+    s = DriftStream(n=64, nodes=2, rounds=128, period=16, seed=0)
+    w0 = np.asarray(s.w_true_at(0))
+    w_same = np.asarray(s.w_true_at(15))   # same phase
+    w_next = np.asarray(s.w_true_at(16))   # next phase
+    np.testing.assert_array_equal(w0, w_same)
+    assert not np.array_equal(w0, w_next)
+    # labels in a chunk follow the CURRENT phase's w*
+    xs, ys = s.chunk(16, 20)
+    np.testing.assert_array_equal(
+        np.asarray(labels_from_logits(jnp.einsum("n,tmn->tm",
+                                                 jnp.asarray(w_next), xs))),
+        np.asarray(ys))
+
+
+def test_drift_rotate_mode_preserves_support_size():
+    s = DriftStream(n=64, nodes=2, rounds=64, period=8, mode="rotate", seed=1)
+    w0, w1 = np.asarray(s.w_true_at(0)), np.asarray(s.w_true_at(8))
+    assert not np.array_equal(w0, w1)
+    assert (w0 != 0).sum() == (w1 != 0).sum()        # rolled, not redrawn
+    np.testing.assert_allclose(np.sort(np.abs(w0)), np.sort(np.abs(w1)),
+                               rtol=1e-6)
+
+
+def test_heterogeneous_nodes_differ():
+    s = HeterogeneousStream(n=32, nodes=8, rounds=64, scale_spread=0.8,
+                            noise_max=0.3, seed=0)
+    scales = np.asarray(s.node_scales())
+    rates = np.asarray(s.node_noise_rates())
+    assert scales.shape == rates.shape == (8,)
+    assert scales.std() > 0 and (scales > 0).all()
+    assert (rates >= 0).all() and (rates < 0.3).all() and rates.std() > 0
+    # per-node feature magnitudes actually follow the drawn scales
+    xs, _ = s.chunk(0, 64)
+    emp = np.asarray(xs).std(axis=(0, 2)) * np.sqrt(32)
+    np.testing.assert_allclose(emp, scales, rtol=0.15)
+
+
+def test_bursty_counts_heavy_tailed_and_bounded():
+    s = BurstyStream(n=16, nodes=4, rounds=256, burst_max=8, tail=1.2, seed=0)
+    c = np.asarray(s.counts(0, 256))
+    assert c.min() >= 1 and c.max() <= 8
+    assert c.max() > 1                     # the tail actually fires
+    assert 1.0 < c.mean() < 4.0            # heavy-tailed, not degenerate
+    # busier rounds carry lower-variance (smaller-norm) mean samples
+    xs, _ = s.chunk(0, 256)
+    norms = np.linalg.norm(np.asarray(xs), axis=2)
+    lo, hi = norms[c == 1].mean(), norms[c >= 4].mean()
+    assert hi < lo
+
+
+def test_runspec_resolves_stream_by_name_and_instance():
+    spec = RunSpec(nodes=4, dim=32, horizon=16, stream="drift",
+                   stream_options={"period": 4})
+    s = spec.resolve_stream()
+    assert isinstance(s, DriftStream) and s.period == 4
+    assert (s.n, s.nodes, s.rounds) == (32, 4, 16)
+    inst = SocialStream(n=32, nodes=4, rounds=16)
+    assert spec.replace(stream=inst).resolve_stream() is inst
+
+
+def test_runspec_stream_validation():
+    with pytest.raises(UnknownEntryError):
+        RunSpec(nodes=4, dim=8, horizon=8, stream="nope").resolve_stream()
+    with pytest.raises(ValueError):  # horizon required for named streams
+        RunSpec(nodes=4, dim=8, stream="drift").resolve_stream()
+    with pytest.raises(TypeError):   # typo'd option must not pass silently
+        RunSpec(nodes=4, dim=8, horizon=8, stream="drift",
+                stream_options={"perriod": 4}).resolve_stream()
+    with pytest.raises(ValueError):  # instance/node-count mismatch
+        RunSpec(nodes=8, dim=32,
+                stream=SocialStream(n=32, nodes=4, rounds=8)).resolve_stream()
+
+
+def test_stream_instances_are_frozen_and_hashable():
+    # run()'s comparator cache keys on the stream instance itself
+    a = DriftStream(n=8, nodes=2, rounds=4)
+    assert hash(a) == hash(DriftStream(n=8, nodes=2, rounds=4))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.period = 3

@@ -8,7 +8,7 @@ from repro.launch.train import train
 
 
 def test_gossip_training_end_to_end_loss_decreases():
-    res = train("minicpm-2b", strategy="gossip", nodes=4, steps_n=12,
+    res = train("minicpm-2b", strategy="gossip", nodes=4, steps=12,
                 batch_per_node=2, seq_len=64, eps=float("inf"), lam=1e-5,
                 smoke=True)
     losses = [h["ce"] for h in res["history"]]
@@ -17,14 +17,14 @@ def test_gossip_training_end_to_end_loss_decreases():
 
 
 def test_private_gossip_training_runs_and_is_noisier():
-    res_p = train("minicpm-2b", strategy="gossip", nodes=4, steps_n=8,
+    res_p = train("minicpm-2b", strategy="gossip", nodes=4, steps=8,
                   batch_per_node=2, seq_len=64, eps=0.5, smoke=True, seed=1)
     assert all(np.isfinite(h["loss"]) for h in res_p["history"])
     assert res_p["history"][0]["noise_scale"] > 0
 
 
 def test_allreduce_baseline_end_to_end():
-    res = train("qwen2-7b", strategy="allreduce", steps_n=10, batch_per_node=4,
+    res = train("qwen2-7b", strategy="allreduce", steps=10, batch_per_node=4,
                 seq_len=64, smoke=True)
     losses = [h["ce"] for h in res["history"]]
     assert np.mean(losses[-3:]) < np.mean(losses[:3]), losses
