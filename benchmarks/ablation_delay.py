@@ -2,11 +2,12 @@
 ("there must exist delay in social networks, which we did not consider").
 
 Neighbors' theta~ arrive `delay` rounds late via the engines' history ring
-(see docs/delayed_gossip.md). The sweep exercises BOTH engines through ONE
-`repro.api.run` call each — the dense simulator measures accuracy/regret vs
-delay, and the distributed `GossipDP` engine (same stream, same seed)
-proves the history ring works end-to-end outside the simulator and
-contributes its wall-clock.
+(see docs/delayed_gossip.md). The delay axis drives BOTH engines through
+`repro.sweep` — the dense simulator measures accuracy/regret vs delay
+(multi-seed, mean±std), and the distributed `GossipDP` engine (same
+streams, same seeds) proves the history ring works end-to-end outside the
+simulator and contributes its wall-clock. All records persist in the sweep
+store; ``from_store=True`` regenerates both artifacts without re-running.
 
     PYTHONPATH=src python -m benchmarks.ablation_delay [--smoke]
 
@@ -22,7 +23,9 @@ import json
 import math
 import os
 
-from benchmarks.common import Scale, run_algorithm1
+import numpy as np
+
+from benchmarks.common import SEEDS, Scale, figure_sweep
 
 DELAYS = (0, 1, 4, 16, 64)
 SMOKE_DELAYS = (0, 2)
@@ -31,22 +34,36 @@ SMOKE_DELAYS = (0, 2)
 def run(scale: Scale | None = None, eps: float = math.inf,
         out_dir: str = "experiments/figures",
         bench_path: str = "BENCH_delay.json",
-        delays: tuple = DELAYS) -> dict:
+        delays: tuple = DELAYS, seeds: tuple = SEEDS,
+        from_store: bool = False) -> dict:
     scale = scale or Scale()
+    sim = figure_sweep("ablation_delay_sim", scale, {"delay": delays},
+                       seeds=seeds, from_store=from_store,
+                       eps=eps, lam=0.01)
+    dist = figure_sweep("ablation_delay_dist", scale, {"delay": delays},
+                        seeds=seeds, engine="dist", from_store=from_store,
+                        compute_regret=False, eps=eps, lam=0.01)
     rows, bench_rows = [], []
-    for d in delays:
-        sim = run_algorithm1(scale, eps=eps, lam=0.01, delay=d, engine="sim")
-        dist = run_algorithm1(scale, eps=eps, lam=0.01, delay=d,
-                              engine="dist", compute_regret=False)
-        rows.append({"delay": d, "accuracy": sim.accuracy,
-                     "accuracy_distributed": dist.accuracy})
+    for point, sim_rs, dist_rs in zip(sim.points, sim.results, dist.results):
+        d = point.coords["delay"]
+        sim_acc = np.asarray([r.accuracy for r in sim_rs])
+        dist_acc = np.asarray([r.accuracy for r in dist_rs])
+        regs = np.asarray([float(r.regret[-1]) for r in sim_rs])
+        rows.append({"delay": d,
+                     "accuracy": float(sim_acc.mean()),
+                     "accuracy_std": float(sim_acc.std()),
+                     "accuracy_distributed": float(dist_acc.mean()),
+                     "seeds": list(seeds)})
         bench_rows.append({
             "delay": d,
-            "accuracy": sim.accuracy,
-            "regret_final": float(sim.regret[-1]),
-            "regret_per_round": float(sim.regret[-1] / scale.T),
-            "simulator_seconds": round(sim.wall_clock, 3),
-            "distributed_seconds": round(dist.wall_clock, 3),
+            "accuracy": float(sim_acc.mean()),
+            "regret_final": float(regs.mean()),
+            "regret_final_std": float(regs.std()),
+            "regret_per_round": float(regs.mean() / scale.T),
+            "simulator_seconds": round(
+                float(sum(r.wall_clock for r in sim_rs)), 3),
+            "distributed_seconds": round(
+                float(sum(r.wall_clock for r in dist_rs)), 3),
         })
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "ablation_delay.json"), "w") as f:
@@ -55,6 +72,7 @@ def run(scale: Scale | None = None, eps: float = math.inf,
         "bench": "ablation_delay",
         "scale": {"n": scale.n, "m": scale.m, "T": scale.T},
         "eps": None if math.isinf(eps) else eps,
+        "seeds": list(seeds),
         "rows": bench_rows,
     }
     with open(bench_path, "w") as f:
@@ -69,10 +87,12 @@ def main() -> None:
                     help="tiny scale + delays (0, 2) for the CI bench-smoke "
                          "job (seconds, not minutes)")
     ap.add_argument("--bench-path", default="BENCH_delay.json")
+    ap.add_argument("--from-store", action="store_true")
     args = ap.parse_args()
     scale = Scale.smoke() if args.smoke else None
     delays = SMOKE_DELAYS if args.smoke else DELAYS
-    res = run(scale, bench_path=args.bench_path, delays=delays)
+    res = run(scale, bench_path=args.bench_path, delays=delays,
+              from_store=args.from_store)
     for r in res["bench"]["rows"]:
         print(f"delay={r['delay']:3d}: acc={r['accuracy']:.3f} "
               f"regret/T={r['regret_per_round']:.4f} "

@@ -1,6 +1,11 @@
 """Ablation: the paper's OMD+Lasso vs the two prior sparse-online-learning
 families it cites (§I refs [11], [12]) under identical gossip + DP setting.
 
+One zipped sweep axis pairs each local rule with its tuned lambda (they
+threshold different quantities: w for tg, the running mean gradient for
+rda, theta for omd); `repro.sweep` drives the seeds and persists the
+records (``from_store=True`` regenerates without re-running).
+
     PYTHONPATH=src python -m benchmarks.ablation_sparse_methods
 """
 from __future__ import annotations
@@ -11,26 +16,36 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Scale, run_algorithm1
+from benchmarks.common import SEEDS, Scale, figure_sweep
 
-# lambdas tuned per local rule (they threshold different quantities: w for
-# tg, the running mean gradient for rda, theta for omd)
-METHODS = {
-    "omd (paper)": dict(local_rule="omd", lam=1.0),
-    "truncated-gradient [11]": dict(local_rule="tg", lam=0.003),
-    "rda [12]": dict(local_rule="rda", lam=0.001),
-}
+# (registry name, tuned lambda, display label)
+METHODS = (
+    ("omd", 1.0, "omd (paper)"),
+    ("tg", 0.003, "truncated-gradient [11]"),
+    ("rda", 0.001, "rda [12]"),
+)
 
 
 def run(scale: Scale | None = None, eps: float = math.inf,
-        out_dir: str = "experiments/figures") -> dict:
+        out_dir: str = "experiments/figures", seeds: tuple = SEEDS,
+        from_store: bool = False) -> dict:
     scale = scale or Scale()
+    axis = tuple((rule, lam) for rule, lam, _ in METHODS)
+    out = figure_sweep("ablation_sparse_methods", scale,
+                       {"local_rule,lam": axis}, seeds=seeds,
+                       from_store=from_store, compute_regret=False, eps=eps)
+    labels = {rule: label for rule, _, label in METHODS}
     rows = {}
-    for name, kw in METHODS.items():
-        res = run_algorithm1(scale, eps=eps, compute_regret=False, **kw)
-        rows[name] = {
-            "accuracy": res.accuracy,
-            "sparsity": float(np.asarray(res.sparsity)[-50:].mean()),
+    for point, results in zip(out.points, out.results):
+        accs = np.asarray([r.accuracy for r in results])
+        spars = np.asarray([float(np.asarray(r.sparsity)[-50:].mean())
+                            for r in results])
+        rows[labels[point.coords["local_rule"]]] = {
+            "accuracy": float(accs.mean()),
+            "accuracy_std": float(accs.std()),
+            "sparsity": float(spars.mean()),
+            "sparsity_std": float(spars.std()),
+            "seeds": list(seeds),
         }
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "ablation_sparse_methods.json"), "w") as f:
@@ -40,4 +55,5 @@ def run(scale: Scale | None = None, eps: float = math.inf,
 
 if __name__ == "__main__":
     for name, r in run().items():
-        print(f"{name:26s} acc={r['accuracy']:.3f} sparsity={r['sparsity']:.3f}")
+        print(f"{name:26s} acc={r['accuracy']:.3f}±{r['accuracy_std']:.3f} "
+              f"sparsity={r['sparsity']:.3f}")

@@ -1,12 +1,14 @@
 """Stream-scenario throughput bench: `repro.api.run` end-to-end on a
-STREAMS scenario, sim vs dist engine, rounds/sec + quality.
+STREAMS scenario, sim vs dist engine, rounds/sec + quality — driven through
+`repro.sweep` (one single-point sweep per engine) so even the throughput
+bench persists its records in the sweep store.
 
     PYTHONPATH=src python -m benchmarks.bench_stream [--smoke] \
         [--stream drift] [--engines sim dist]
 
 Writes BENCH_stream.json — the bench-trajectory point the CI bench-smoke
-job uploads: per engine, steady-state rounds/sec (compile excluded via
-run()'s warmup), tail accuracy, final regret, and the eps ledger endpoint.
+job uploads: per engine, steady-state rounds/sec (compile excluded via the
+runner's warmup), tail accuracy, final regret, and the eps ledger endpoint.
 """
 from __future__ import annotations
 
@@ -14,19 +16,24 @@ import argparse
 import json
 
 from benchmarks.common import Scale, make_spec
-from repro.api import run as api_run
+from repro.sweep import DEFAULT_STORE, SweepSpec, sweep
 
 
 def run(scale: Scale | None = None, *, stream: str = "drift",
         stream_options: dict | None = None, eps: float = 1.0,
         engines: tuple = ("sim", "dist"),
-        bench_path: str = "BENCH_stream.json") -> dict:
+        bench_path: str = "BENCH_stream.json",
+        store: str | None = DEFAULT_STORE) -> dict:
     scale = scale or Scale()
-    spec = make_spec(scale, eps=eps, lam=0.01, stream=stream,
+    base = make_spec(scale, eps=eps, lam=0.01, stream=stream,
                      stream_options=stream_options or {})
     rows = {}
     for engine in engines:
-        res = api_run(spec, engine=engine, chunk_rounds=min(scale.T, 256))
+        out = sweep(SweepSpec(base=base, axes={}, seeds=(0,), engine=engine,
+                              name=f"bench_stream_{engine}",
+                              chunk_rounds=min(scale.T, 256)),
+                    store=store)
+        res = out.results[0][0]
         rows[engine] = {
             "rounds_per_sec": round(res.rounds_per_sec, 2),
             "wall_clock_s": round(res.wall_clock, 3),

@@ -1,0 +1,96 @@
+"""Seed-axis vectorization bench: vmapped `run_batch` vs the sequential
+per-seed `run()` loop it replaces, same config, >= 8 seeds.
+
+The vmapped path compiles ONE program (vmap over the seed axis inside the
+runner's jitted per-chunk lax.scan) and drives all S trajectories in ~one
+memory-bound pass; the sequential loop pays S compiles and S dispatch
+streams. Both paths must agree to NUMERICAL IDENTITY per seed (the same
+guarantee tests/test_sweep.py holds to the bit) — the bench asserts it.
+
+    PYTHONPATH=src python -m benchmarks.bench_sweep [--smoke] [--seeds 8]
+
+Writes BENCH_sweep.json: wall-clock for both paths, the speedup, and the
+identity verdict.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Scale, make_spec
+from repro.api import run, run_batch
+
+
+def _identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("final_w", "loss", "correct", "w_bar_loss",
+                         "sparsity"))
+
+
+def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
+              engine: str = "sim", eps: float = 1.0,
+              bench_path: str = "BENCH_sweep.json") -> dict:
+    scale = scale or Scale()
+    spec = make_spec(scale, eps=eps, lam=0.01)
+    seeds = list(range(n_seeds))
+    chunk = min(scale.T, 256)
+
+    # the loop every benchmark used to hand-roll: one run() per seed,
+    # each paying its own compile + per-chunk dispatch
+    t0 = time.time()
+    sequential = [run(spec.replace(seed=s), engine=engine, chunk_rounds=chunk,
+                      compute_regret=False, warmup=False) for s in seeds]
+    seq_wall = time.time() - t0
+
+    t0 = time.time()
+    vmapped = run_batch(spec, seeds, engine=engine, chunk_rounds=chunk,
+                        compute_regret=False, warmup=False)
+    vec_wall = time.time() - t0
+
+    identical = all(_identical(a, b) for a, b in zip(sequential, vmapped))
+    bench = {
+        "bench": "sweep_seed_vmap",
+        "engine": engine,
+        "scale": {"n": scale.n, "m": scale.m, "T": scale.T},
+        "eps": eps,
+        "seeds": n_seeds,
+        "sequential_s": round(seq_wall, 3),
+        "vmapped_s": round(vec_wall, 3),
+        "speedup": round(seq_wall / vec_wall, 2) if vec_wall > 0 else None,
+        "identical": identical,
+        "sequential_seed_rounds_per_sec": round(
+            n_seeds * scale.T / seq_wall, 1),
+        "vmapped_seed_rounds_per_sec": round(
+            n_seeds * scale.T / vec_wall, 1),
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    if not identical:
+        raise AssertionError(
+            "vmapped seed batch diverged from the sequential per-seed loop")
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds) for the CI bench-smoke job")
+    ap.add_argument("--seeds", type=int, default=8)
+    ap.add_argument("--engine", default="sim", choices=["sim", "dist"])
+    ap.add_argument("--bench-path", default="BENCH_sweep.json")
+    args = ap.parse_args()
+    scale = Scale.smoke() if args.smoke else None
+    bench = run_bench(scale, n_seeds=args.seeds, engine=args.engine,
+                      bench_path=args.bench_path)
+    print(f"{bench['seeds']} seeds, {bench['engine']}: "
+          f"sequential {bench['sequential_s']}s -> "
+          f"vmapped {bench['vmapped_s']}s "
+          f"({bench['speedup']}x, identical={bench['identical']})")
+
+
+if __name__ == "__main__":
+    main()

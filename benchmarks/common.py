@@ -1,8 +1,10 @@
 """Shared harness for the paper-figure benchmarks.
 
-Every sweep is one `repro.api.run` call — the benchmarks own WHAT to sweep,
-never HOW to drive a run (no hand-rolled loops; metrics, regret, privacy
-ledger and wall-clock all come back in the RunResult).
+Every figure is one `repro.sweep` call — the benchmarks own WHAT to sweep
+(the axes and the plot), never HOW to drive runs: the sweep engine vmaps
+the seed axis per point, and every (point, seed) record persists in the
+sweep store (experiments/store/) so `--from-store` regenerates a figure's
+JSON without re-running anything.
 
 Two scales:
   CI    (default)  n=512, m=16, T=500   — minutes on this 1-core container
@@ -12,9 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.api import RunSpec
+from repro.sweep import DEFAULT_STORE, SweepResult, SweepSpec, sweep
 
-from repro.api import RunResult, RunSpec
-from repro.api import run as api_run
+# every figure averages over these seeds (mean±std in its JSON rows)
+SEEDS = (0, 1, 2)
 
 
 @dataclasses.dataclass
@@ -39,7 +43,13 @@ def make_spec(scale: Scale, *, eps: float, lam: float = 1e-3,
               topology: str = "ring", seed: int = 0,
               clip_style: str = "coordinate", stream: str = "social_sparse",
               stream_options: dict | None = None, **kw) -> RunSpec:
-    """The shared declarative description all figure sweeps build from."""
+    """The shared declarative description all figure sweeps build from.
+
+    clip_style='coordinate' is the tighter per-coordinate Laplace calibration
+    (DESIGN.md deviation #3); 'global' is the paper's exact Lemma-1 scale
+    (sqrt(n) larger — with n=10^4 it drowns learning entirely, which is why
+    the paper's own Fig. 2 cannot have used it; we report both).
+    """
     return RunSpec(
         nodes=scale.m, dim=scale.n, mixer=topology, seed=seed,
         eps=eps, clip_norm=scale.L, calibration=clip_style,
@@ -47,20 +57,27 @@ def make_spec(scale: Scale, *, eps: float, lam: float = 1e-3,
         stream=stream, stream_options=stream_options or {}, **kw)
 
 
-def run_algorithm1(scale: Scale, *, eps: float, lam: float = 1e-3,
-                   topology: str = "ring", seed: int = 0,
-                   clip_style: str = "coordinate", engine: str = "sim",
-                   compute_regret: bool = True, **spec_kw) -> RunResult:
-    """One full run via `repro.api.run`; returns the RunResult.
+def figure_sweep(name: str, scale: Scale, axes: dict, *,
+                 seeds: tuple = SEEDS, engine: str = "sim",
+                 compute_regret: bool = True, from_store: bool = False,
+                 store: str | None = DEFAULT_STORE,
+                 **spec_kw) -> SweepResult:
+    """One figure = one sweep: axes over `make_spec`, seeds vmapped per
+    point, records persisted under the figure's name in the sweep store.
 
-    clip_style='coordinate' is the tighter per-coordinate Laplace calibration
-    (DESIGN.md deviation #3); 'global' is the paper's exact Lemma-1 scale
-    (sqrt(n) larger — with n=10^4 it drowns learning entirely, which is why
-    the paper's own Fig. 2 cannot have used it; we report both).
-    Extra keywords (local_rule=, delay=, mechanism=, stream=, ...) pass
-    through to `repro.api.RunSpec`.
+    ``from_store=True`` reuses matching stored records instead of running —
+    the figure JSON regenerates without a single engine call.
     """
-    spec = make_spec(scale, eps=eps, lam=lam, topology=topology, seed=seed,
-                     clip_style=clip_style, **spec_kw)
-    return api_run(spec, engine=engine, chunk_rounds=scale.T,
-                   compute_regret=compute_regret)
+    base = make_spec(scale, **spec_kw)
+    spec = SweepSpec(base=base, axes=axes, seeds=tuple(seeds), engine=engine,
+                     name=name, chunk_rounds=scale.T,
+                     compute_regret=compute_regret)
+    out = sweep(spec, store=store, reuse=from_store)
+    if from_store and out.ran_points:
+        # --from-store promises regeneration WITHOUT re-running; a silent
+        # fallback here would let a broken store-reuse path pass CI unseen
+        raise RuntimeError(
+            f"--from-store: {out.ran_points}/{len(out.points)} points of "
+            f"{name!r} missed the store and re-ran (stale or missing "
+            f"records for this spec — run once without --from-store first)")
+    return out

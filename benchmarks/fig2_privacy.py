@@ -1,7 +1,10 @@
 """Fig. 2 reproduction: privacy level (eps) vs regret.
 
 Paper claim: non-private has the lowest regret; regret approaches it as
-eps grows (weaker privacy). We sweep eps in {0.1, 1, 10, inf}.
+eps grows (weaker privacy). We sweep eps in {0.1, 1, 10, inf} — the figure
+owns ONLY the axis and the JSON shape; the multi-seed driving loop lives in
+`repro.sweep` (seed axis vmapped, records persisted in the sweep store, so
+``from_store=True`` regenerates this JSON without re-running).
 """
 from __future__ import annotations
 
@@ -9,26 +12,35 @@ import json
 import math
 import os
 
+import numpy as np
 
-from benchmarks.common import Scale, run_algorithm1
+from benchmarks.common import SEEDS, Scale, figure_sweep
 
 EPS_SWEEP = (0.1, 1.0, 10.0, math.inf)
 
 
 def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
-        clip_style: str = "coordinate") -> dict:
+        clip_style: str = "coordinate", seeds: tuple = SEEDS,
+        from_store: bool = False) -> dict:
     scale = scale or Scale()
+    out = figure_sweep(f"fig2_privacy_{clip_style}", scale,
+                       {"eps": EPS_SWEEP}, seeds=seeds,
+                       from_store=from_store, eps=1.0, clip_style=clip_style)
     rows = {}
-    for eps in EPS_SWEEP:
-        res = run_algorithm1(scale, eps=eps, clip_style=clip_style)
-        reg = res.regret
-        rows[str(eps)] = {
-            "regret_final": float(reg[-1]),
-            "regret_curve": reg[:: max(1, len(reg) // 200)].tolist(),
-            "accuracy": res.accuracy,
-            "eps_total": (None if math.isinf(res.privacy["eps_total"])
-                          else res.privacy["eps_total"]),
-            "seconds": res.wall_clock,
+    for point, results in zip(out.points, out.results):
+        regs = np.stack([np.asarray(r.regret) for r in results])   # (S, T)
+        accs = np.asarray([r.accuracy for r in results])
+        curve = regs.mean(axis=0)
+        eps_total = results[0].privacy["eps_total"]
+        rows[str(point.coords["eps"])] = {
+            "regret_final": float(curve[-1]),
+            "regret_final_std": float(regs[:, -1].std()),
+            "regret_curve": curve[:: max(1, len(curve) // 200)].tolist(),
+            "accuracy": float(accs.mean()),
+            "accuracy_std": float(accs.std()),
+            "seeds": list(seeds),
+            "eps_total": None if math.isinf(eps_total) else eps_total,
+            "seconds": float(sum(r.wall_clock for r in results)),
         }
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, f"fig2_privacy_{clip_style}.json"), "w") as f:
@@ -47,5 +59,7 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
 if __name__ == "__main__":
     res = run()
     for eps, r in res["rows"].items():
-        print(f"eps={eps:>5s}: regret={r['regret_final']:12.1f} acc={r['accuracy']:.3f}")
+        print(f"eps={eps:>5s}: regret={r['regret_final']:12.1f}"
+              f"±{r['regret_final_std']:.1f} acc={r['accuracy']:.3f}"
+              f"±{r['accuracy_std']:.3f}")
     print("paper Fig.2 ordering holds:", res["ordering_holds"])

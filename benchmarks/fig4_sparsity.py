@@ -2,7 +2,9 @@
 
 Paper claim: an appropriate sparsity gives the best accuracy (~18% better
 than non-sparse); too much or too little hurts. We sweep the Lasso strength
-lambda and report (sparsity, accuracy) pairs.
+lambda and report (sparsity, accuracy) pairs, mean±std over seeds —
+`repro.sweep` owns the driving loop and the persistent records
+(``from_store=True`` regenerates the JSON without re-running).
 """
 from __future__ import annotations
 
@@ -12,22 +14,30 @@ import os
 
 import numpy as np
 
-from benchmarks.common import Scale, run_algorithm1
+from benchmarks.common import SEEDS, Scale, figure_sweep
 
 LAMBDAS = (0.0, 1e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, 30.0)
 
 
 def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
-        eps: float = math.inf) -> dict:
+        eps: float = math.inf, seeds: tuple = SEEDS,
+        from_store: bool = False) -> dict:
     scale = scale or Scale()
+    out = figure_sweep("fig4_sparsity", scale, {"lam": LAMBDAS}, seeds=seeds,
+                       from_store=from_store, compute_regret=False, eps=eps)
     rows = []
-    for lam in LAMBDAS:
-        res = run_algorithm1(scale, eps=eps, lam=lam, compute_regret=False)
+    for point, results in zip(out.points, out.results):
+        spars = np.asarray([float(np.asarray(r.sparsity)[-50:].mean())
+                            for r in results])
+        accs = np.asarray([r.accuracy for r in results])
         rows.append({
-            "lambda": lam,
-            "sparsity": float(np.asarray(res.sparsity)[-50:].mean()),
-            "accuracy": res.accuracy,
-            "seconds": res.wall_clock,
+            "lambda": point.coords["lam"],
+            "sparsity": float(spars.mean()),
+            "sparsity_std": float(spars.std()),
+            "accuracy": float(accs.mean()),
+            "accuracy_std": float(accs.std()),
+            "seeds": list(seeds),
+            "seconds": float(sum(r.wall_clock for r in results)),
         })
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig4_sparsity.json"), "w") as f:
@@ -40,6 +50,7 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
 if __name__ == "__main__":
     res = run()
     for r in res["rows"]:
-        print(f"lam={r['lambda']:7.3f} sparsity={r['sparsity']:.3f} acc={r['accuracy']:.3f}")
+        print(f"lam={r['lambda']:7.3f} sparsity={r['sparsity']:.3f} "
+              f"acc={r['accuracy']:.3f}±{r['accuracy_std']:.3f}")
     print("best:", res["best"], "| interior optimum (paper Fig.4):",
           res["interior_best"])

@@ -3,27 +3,42 @@
 Paper claim: more centers slightly reduce accuracy (~4% per +4 nodes at
 their scale) — each node sees proportionally less data per round and the
 noise compounds across edges.
+
+The node count and horizon co-vary (same total samples), which is exactly
+what a ZIPPED sweep axis expresses: one 'nodes,horizon' axis whose values
+are (m, T) pairs. Each point is its own compile (the node axis changes
+shapes); the seed axis inside each point is still vmapped.
 """
 from __future__ import annotations
 
 import json
 import os
 
+import numpy as np
 
-from benchmarks.common import Scale, run_algorithm1
+from benchmarks.common import SEEDS, Scale, figure_sweep
 
 NODE_SWEEP = (4, 8, 16, 32)
 
 
 def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
-        eps: float = 10.0) -> dict:
+        eps: float = 10.0, seeds: tuple = SEEDS,
+        from_store: bool = False) -> dict:
     base = scale or Scale()
+    # same total samples per point: T scales inversely with m
+    axis = tuple((m, base.T * base.m // m) for m in NODE_SWEEP)
+    out = figure_sweep("fig5_nodes", base, {"nodes,horizon": axis},
+                       seeds=seeds, from_store=from_store,
+                       compute_regret=False, eps=eps)
     rows = []
-    for m in NODE_SWEEP:
-        s = Scale(n=base.n, m=m, T=base.T * base.m // m)  # same total samples
-        res = run_algorithm1(s, eps=eps, compute_regret=False)
-        rows.append({"nodes": m, "accuracy": res.accuracy,
-                     "seconds": res.wall_clock})
+    for point, results in zip(out.points, out.results):
+        accs = np.asarray([r.accuracy for r in results])
+        rows.append({"nodes": point.coords["nodes"],
+                     "horizon": point.coords["horizon"],
+                     "accuracy": float(accs.mean()),
+                     "accuracy_std": float(accs.std()),
+                     "seeds": list(seeds),
+                     "seconds": float(sum(r.wall_clock for r in results))})
     os.makedirs(out_dir, exist_ok=True)
     with open(os.path.join(out_dir, "fig5_nodes.json"), "w") as f:
         json.dump(rows, f, indent=1)
@@ -34,5 +49,6 @@ def run(scale: Scale | None = None, out_dir: str = "experiments/figures",
 if __name__ == "__main__":
     res = run()
     for r in res["rows"]:
-        print(f"m={r['nodes']:3d}: acc={r['accuracy']:.3f}")
+        print(f"m={r['nodes']:3d}: acc={r['accuracy']:.3f}"
+              f"±{r['accuracy_std']:.3f}")
     print("accuracy declines with more nodes (paper Fig.5):", res["declines"])

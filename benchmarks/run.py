@@ -1,66 +1,89 @@
 """Benchmark entrypoint: one function per paper figure + kernel micro-bench +
 roofline aggregation. Prints ``name,us_per_call,derived`` CSV lines.
 
+Every figure routes through the `repro.sweep` store: multi-seed sweeps with
+the seed axis vmapped per point, one JSONL record per (point, seed) under
+experiments/store/. ``--from-store`` regenerates every figure JSON from
+those records without re-running a single point.
+
     PYTHONPATH=src python -m benchmarks.run            # CI scale (minutes)
+    PYTHONPATH=src python -m benchmarks.run --smoke    # tiny scale (seconds)
     PYTHONPATH=src python -m benchmarks.run --full     # paper scale (§V)
 """
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true", help="paper-scale (n=10k, m=64, 100k samples)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (n=10k, m=64, 100k samples)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds) — the CI bench-smoke entry")
+    ap.add_argument("--from-store", action="store_true",
+                    help="regenerate figure JSONs from the sweep store "
+                         "without re-running")
     ap.add_argument("--skip-figs", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import fig2_privacy, fig3_topology, fig4_sparsity, fig5_nodes
+    from benchmarks import (bench_sweep, fig2_privacy, fig3_topology,
+                            fig4_sparsity, fig5_nodes)
     from benchmarks import kernels_bench, roofline
     from benchmarks.common import Scale
 
-    scale = Scale.paper() if args.full else None
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
+    scale = (Scale.paper() if args.full
+             else Scale.smoke() if args.smoke else None)
+    fig_kw = dict(from_store=args.from_store)
     rows: list[tuple[str, float, str]] = []
 
     if not args.skip_figs:
         t0 = time.time()
-        r2 = fig2_privacy.run(scale)
+        r2 = fig2_privacy.run(scale, **fig_kw)
         rows.append(("fig2_privacy_regret", (time.time() - t0) * 1e6,
                      f"ordering_holds={r2['ordering_holds']};"
                      + ";".join(f"eps{eps}={v['regret_final']:.0f}"
                                 for eps, v in r2["rows"].items())))
 
         t0 = time.time()
-        r3 = fig3_topology.run(scale)
+        r3 = fig3_topology.run(scale, **fig_kw)
         rows.append(("fig3_topology_invariance", (time.time() - t0) * 1e6,
                      f"acc_spread={r3['spread']:.3f}"))
 
         t0 = time.time()
-        r4 = fig4_sparsity.run(scale)
+        r4 = fig4_sparsity.run(scale, **fig_kw)
         rows.append(("fig4_sparsity_sweep", (time.time() - t0) * 1e6,
                      f"best_lambda={r4['best']['lambda']};best_acc={r4['best']['accuracy']:.3f};"
                      f"interior={r4['interior_best']}"))
 
         t0 = time.time()
-        r5 = fig5_nodes.run(scale)
+        r5 = fig5_nodes.run(scale, **fig_kw)
         rows.append(("fig5_node_count", (time.time() - t0) * 1e6,
                      f"declines={r5['declines']};"
                      + ";".join(f"m{r['nodes']}={r['accuracy']:.3f}" for r in r5["rows"])))
 
-    if not args.skip_figs:
         from benchmarks import ablation_delay, ablation_sparse_methods
         t0 = time.time()
-        ra = ablation_sparse_methods.run(scale)
+        ra = ablation_sparse_methods.run(scale, **fig_kw)
         rows.append(("ablation_sparse_methods", (time.time() - t0) * 1e6,
                      ";".join(f"{k.split()[0]}={v['accuracy']:.3f}/{v['sparsity']:.2f}"
                               for k, v in ra.items())))
         t0 = time.time()
-        rd = ablation_delay.run(scale)
+        rd = ablation_delay.run(
+            scale, delays=(ablation_delay.SMOKE_DELAYS if args.smoke
+                           else ablation_delay.DELAYS), **fig_kw)
         rows.append(("ablation_delay", (time.time() - t0) * 1e6,
                      f"graceful={rd['graceful']};"
                      + ";".join(f"d{r['delay']}={r['accuracy']:.3f}" for r in rd["rows"])))
+
+        # the sweep engine's own bench: vmapped seed axis vs sequential loop
+        t0 = time.time()
+        rs = bench_sweep.run_bench(scale, n_seeds=8)
+        rows.append(("bench_sweep_seed_vmap", (time.time() - t0) * 1e6,
+                     f"speedup={rs['speedup']};identical={rs['identical']}"))
 
     rows += kernels_bench.run_all()
 

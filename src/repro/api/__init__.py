@@ -55,7 +55,7 @@ from repro.api.clippers import (Clipper, NoClipper, PerNodeL2Clipper,
 from repro.api.streams import (BurstyStream, DriftStream,
                                HeterogeneousStream, SocialStream, Stream)
 from repro.api.spec import RunSpec
-from repro.api.runner import RunResult, run
+from repro.api.runner import RunResult, run, run_batch, seed_vectorizable
 
 __all__ = [
     "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS", "STREAMS",
@@ -70,5 +70,21 @@ __all__ = [
     "per_node_norms",
     "Stream", "SocialStream", "DriftStream", "HeterogeneousStream",
     "BurstyStream",
-    "RunSpec", "RunResult", "run",
+    "RunSpec", "RunResult", "run", "run_batch", "seed_vectorizable",
+    "SweepSpec", "SweepResult", "sweep",
 ]
+
+# repro.sweep builds ON TOP of repro.api (its modules import repro.api.spec /
+# repro.api.runner), so re-exporting it here must be lazy — a plain import
+# would re-enter repro.sweep while it is still initializing whenever the
+# import chain STARTS at repro.sweep. PEP 562 module __getattr__ keeps
+# `repro.api.sweep(spec)` a first-class entry point next to `run(spec)`
+# without the cycle.
+_SWEEP_EXPORTS = ("SweepSpec", "SweepResult", "sweep")
+
+
+def __getattr__(name):
+    if name in _SWEEP_EXPORTS:
+        import repro.sweep as _sweep
+        return getattr(_sweep, name)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")

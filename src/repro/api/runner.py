@@ -46,7 +46,59 @@ from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core.privacy import PrivacyAccountant
 from repro.metrics import CSVLogger, MetricTracker
 
-__all__ = ["run", "RunResult", "make_chunk_fn"]
+__all__ = ["run", "run_batch", "RunResult", "make_chunk_fn",
+           "make_chunk_program"]
+
+
+# -- JSON round-trip ---------------------------------------------------------
+#
+# The sweep store (repro.sweep.store) persists one RunResult per record and
+# must reconstruct it EXACTLY: trajectories, eps ledger, final parameters and
+# (optionally) the raw engine state. float32 values survive the trip through
+# Python floats untouched (float32 ⊂ float64 and repr round-trips), so the
+# regression tests can assert bit equality, not closeness.
+
+def _encode_tree(obj: Any) -> Any:
+    """JSON-able encoding of a (possibly nested) engine state / array."""
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if isinstance(obj, (np.ndarray, jnp.ndarray, np.generic)):
+        arr = np.asarray(jax.device_get(obj))
+        return {"__ndarray__": arr.tolist(), "dtype": str(arr.dtype),
+                "shape": list(arr.shape)}
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):   # NamedTuple
+        return {"__namedtuple__": type(obj).__name__,
+                "fields": {f: _encode_tree(getattr(obj, f))
+                           for f in obj._fields}}
+    if isinstance(obj, dict):
+        return {"__dict__": {str(k): _encode_tree(v) for k, v in obj.items()}}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_encode_tree(v) for v in obj],
+                "tuple": isinstance(obj, tuple)}
+    raise TypeError(f"cannot encode {type(obj).__name__} for the JSON record")
+
+
+def _state_types() -> dict:
+    from repro.core.algorithm1 import SimState
+    from repro.core.gossip import GossipState
+    return {"SimState": SimState, "GossipState": GossipState}
+
+
+def _decode_tree(obj: Any) -> Any:
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if "__ndarray__" in obj:
+        return np.asarray(obj["__ndarray__"],
+                          dtype=obj["dtype"]).reshape(obj["shape"])
+    if "__namedtuple__" in obj:
+        cls = _state_types()[obj["__namedtuple__"]]
+        return cls(**{k: _decode_tree(v) for k, v in obj["fields"].items()})
+    if "__dict__" in obj:
+        return {k: _decode_tree(v) for k, v in obj["__dict__"].items()}
+    if "__list__" in obj:
+        seq = [_decode_tree(v) for v in obj["__list__"]]
+        return tuple(seq) if obj.get("tuple") else seq
+    raise TypeError(f"cannot decode record node {obj!r}")
 
 
 @dataclasses.dataclass
@@ -97,13 +149,63 @@ class RunResult:
             "eps_total": self.privacy.get("eps_total"),
         }
 
+    _ARRAY_FIELDS = ("eps_ledger", "loss", "w_bar_loss", "correct",
+                     "sparsity", "regret", "final_w")
 
-def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
-    """(chunk_fn, initial_state) for one engine.
+    def to_record(self, include_state: bool = False) -> dict:
+        """JSON-able dict that `from_record` reconstructs exactly.
+
+        Every trajectory array, the eps ledger and final_w round-trip
+        bit-for-bit (float32 values survive the trip through JSON floats
+        untouched). ``include_state=True`` additionally serializes the raw
+        engine state (`SimState` / `GossipState` pytree) so a stored record
+        can seed a resumed run; the sweep store leaves it off by default to
+        keep the JSONL lean.
+        """
+        rec: dict[str, Any] = {
+            "engine": self.engine,
+            "rounds": self.rounds,
+            "start_round": self.start_round,
+            "wall_clock": self.wall_clock,
+            "rounds_per_sec": self.rounds_per_sec,
+            "stream": self.stream,
+            "accuracy": self.accuracy,
+            "privacy": dict(self.privacy),
+            "metrics": dict(self.metrics),
+            "history": self.history,
+        }
+        for f in self._ARRAY_FIELDS:
+            v = getattr(self, f)
+            rec[f] = None if v is None else _encode_tree(np.asarray(v))
+        rec["final_state"] = (_encode_tree(jax.device_get(self.final_state))
+                             if include_state and self.final_state is not None
+                             else None)
+        return rec
+
+    @classmethod
+    def from_record(cls, rec: dict) -> "RunResult":
+        kw = {k: rec[k] for k in ("engine", "rounds", "start_round",
+                                  "wall_clock", "rounds_per_sec", "stream",
+                                  "accuracy")}
+        kw["privacy"] = dict(rec.get("privacy") or {})
+        kw["metrics"] = dict(rec.get("metrics") or {})
+        kw["history"] = rec.get("history")
+        for f in cls._ARRAY_FIELDS:
+            v = rec.get(f)
+            kw[f] = None if v is None else _decode_tree(v)
+        fs = rec.get("final_state")
+        kw["final_state"] = None if fs is None else _decode_tree(fs)
+        return cls(**kw)
+
+
+def make_chunk_program(spec: RunSpec, engine: str) -> tuple[Callable, Callable]:
+    """(chunk_fn, init_fn) for one engine.
 
     chunk_fn(state, xs, ys) scans the engine over a chunk of rounds and
-    returns (state, RoundOutput-stacked trajectories). Exposed so
-    `launch.dryrun` can lower/compile the exact program `run` executes.
+    returns (state, RoundOutput-stacked trajectories); init_fn(key) builds
+    the engine state for one PRNG key. The program is seed-independent —
+    only the key (and the stream data fed to chunk_fn) vary per seed, which
+    is what lets `run_batch` build ONE program and S init states.
     """
     from repro.core.algorithm1 import RoundOutput, hinge_loss_and_grad
     from repro.core import prox
@@ -112,7 +214,6 @@ def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
     n = spec.dim
     if n is None:
         raise ValueError("RunSpec.dim is required by repro.api.run")
-    key = jax.random.PRNGKey(spec.seed)
     loss_and_grad = spec.loss_and_grad or hinge_loss_and_grad
 
     if engine == "sim":
@@ -121,7 +222,7 @@ def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
         def chunk_fn(state, xs, ys):
             return jax.lax.scan(alg.round, state, (xs, ys))
 
-        return chunk_fn, alg.init(key)
+        return chunk_fn, alg.init
 
     if engine == "dist":
         gdp = spec.build_distributed()
@@ -135,19 +236,30 @@ def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
                            ).astype(jnp.float32)
                 st, _ = gdp.update(st, {"w": grad})
                 # identical metric algebra to Algorithm1.round, so the two
-                # engines' trajectories compare element-for-element
+                # engines' trajectories compare element-for-element (and the
+                # multiply+reduce margin lowers the same under a seed vmap)
                 w_bar = jnp.mean(w, axis=0, keepdims=True)
                 wb_loss = jnp.mean(jnp.maximum(
-                    1.0 - y * jnp.einsum("n,mn->m", w_bar[0], x), 0.0))
+                    1.0 - y * jnp.sum(w_bar * x, axis=-1), 0.0))
                 out = RoundOutput(loss=loss, w_bar_loss=wb_loss,
                                   sparsity=prox.sparsity(w), correct=correct)
                 return st, out
             return jax.lax.scan(body, state, (xs, ys))
 
-        state = gdp.init({"w": jnp.zeros((m, n), jnp.float32)}, key)
-        return chunk_fn, state
+        def init_fn(key):
+            return gdp.init({"w": jnp.zeros((m, n), jnp.float32)}, key)
+
+        return chunk_fn, init_fn
 
     raise ValueError(f"unknown engine {engine!r}; expected 'sim' or 'dist'")
+
+
+def make_chunk_fn(spec: RunSpec, engine: str) -> tuple[Callable, Any]:
+    """(chunk_fn, initial_state) for one engine — `make_chunk_program` with
+    the state built from ``spec.seed``. Exposed so `launch.dryrun` can
+    lower/compile the exact program `run` executes."""
+    chunk_fn, init_fn = make_chunk_program(spec, engine)
+    return chunk_fn, init_fn(jax.random.PRNGKey(spec.seed))
 
 
 def _final_primal(spec: RunSpec, engine: str, state) -> np.ndarray:
@@ -328,6 +440,211 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     )
     result.metrics = result.summary()
     return result
+
+
+# -- vectorized multi-seed execution ----------------------------------------
+
+def _config_eq(a: Any, b: Any) -> bool:
+    """Structural equality for resolved protocol stages (mixers etc.)."""
+    if a is b:
+        return True
+    if type(a) is not type(b):
+        return False
+    if isinstance(a, (np.ndarray, jnp.ndarray, np.generic)):
+        return (np.shape(a) == np.shape(b)
+                and bool(np.array_equal(np.asarray(a), np.asarray(b))))
+    if dataclasses.is_dataclass(a) and not isinstance(a, type):
+        return all(_config_eq(getattr(a, f.name), getattr(b, f.name))
+                   for f in dataclasses.fields(a))
+    if isinstance(a, dict):
+        return (a.keys() == b.keys()
+                and all(_config_eq(v, b[k]) for k, v in a.items()))
+    if isinstance(a, (list, tuple)):
+        return (len(a) == len(b)
+                and all(_config_eq(x, y) for x, y in zip(a, b)))
+    if hasattr(a, "__dict__") and not callable(a):
+        return _config_eq(vars(a), vars(b))
+    try:
+        return bool(a == b)
+    except Exception:
+        return False
+
+
+def seed_vectorizable(spec: RunSpec, seeds) -> bool:
+    """True when a seed batch can share ONE compiled chunk program.
+
+    The vmapped path bakes the resolved mixer (and the rest of the stage
+    pipeline) into the program once, from the first seed; only the PRNG key
+    and the stream data vary per seed. Seeded topologies ('random',
+    'time_varying', per-edge `delay_dist` draws) resolve to DIFFERENT mixing
+    matrices per seed, so they must fall back to sequential `run()` calls —
+    `repro.sweep` consults this predicate to pick the path automatically.
+    """
+    seeds = list(seeds)
+    if len(seeds) <= 1:
+        return True
+    base = spec.replace(seed=seeds[0]).resolve_mixer()
+    return all(_config_eq(spec.replace(seed=s).resolve_mixer(), base)
+               for s in seeds[1:])
+
+
+def _index_tree(tree: Any, i: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
+              chunk_rounds: int = 512,
+              checkpoint_every: int | None = None,
+              checkpoint_dir: str | None = None,
+              resume: bool = False,
+              compute_regret: bool = True,
+              warmup: bool = True,
+              horizon: int | None = None,
+              check_vectorizable: bool = True) -> list[RunResult]:
+    """Run one config under S seeds as ONE vmapped program; S RunResults.
+
+    The innermost (seed) axis is vectorized: per-seed engine states are
+    stacked into a leading axis of size S, the per-seed stream chunks are
+    stacked the same way, and `jax.vmap` of the runner's per-chunk `lax.scan`
+    drives all S trajectories in a single compiled pass — one compilation
+    and roughly one memory-bound sweep instead of S sequential `run()` calls.
+    Each returned RunResult is bit-identical to the corresponding
+    ``run(spec.replace(seed=s), engine)`` (same stream chunks, same PRNG
+    keys, same scan — the seed-vmap equivalence tests hold this to the bit),
+    with ``wall_clock`` amortized as batch wall / S and the batch totals
+    under ``metrics["batch"]``.
+
+    Checkpoints (``checkpoint_every``/``checkpoint_dir``/``resume``) store
+    the STACKED state, so a resumed batch continues bit-identically too.
+    Raises ValueError when the spec's resolved stages depend on the seed
+    (see `seed_vectorizable`) — callers like `repro.sweep` fall back to
+    sequential per-seed runs in that case.
+    """
+    seeds = [int(s) for s in seeds]
+    if not seeds:
+        raise ValueError("run_batch needs at least one seed")
+    # check_vectorizable=False skips the per-seed mixer resolutions when the
+    # caller (repro.sweep) already ran seed_vectorizable on this spec
+    if check_vectorizable and not seed_vectorizable(spec, seeds):
+        raise ValueError(
+            "the resolved mixer depends on RunSpec.seed (seeded topology or "
+            "delay_dist); a vmapped batch would share one mixing matrix "
+            "across seeds — run sequentially per seed instead (repro.sweep "
+            "does this fallback automatically)")
+
+    specs = [spec.replace(seed=s) for s in seeds]
+    base = specs[0]
+    streams = [s.resolve_stream() for s in specs]
+    T = horizon or base.horizon or streams[0].rounds
+    m = spec.nodes
+    S = len(seeds)
+
+    mech = base.resolve_mechanism()
+    accountant = PrivacyAccountant(
+        eps_per_round=spec.eps if mech.is_private else math.inf,
+        disjoint_streams=getattr(streams[0], "disjoint", False))
+
+    chunk_fn, init_fn = make_chunk_program(base, engine)
+    init_states = [init_fn(jax.random.PRNGKey(s)) for s in seeds]
+    batched_init = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *init_states)
+    chunk_jit = jax.jit(jax.vmap(chunk_fn))
+
+    start = 0
+    eng_state = batched_init
+    if resume:
+        if not checkpoint_dir:
+            raise ValueError("resume=True needs checkpoint_dir=")
+        found = latest_step(checkpoint_dir)
+        if found is not None:
+            eng_state = restore_checkpoint(checkpoint_dir, batched_init,
+                                           step=found)
+            start = found
+    accountant.rounds = start
+
+    def stacked_chunk(a: int, b: int):
+        pairs = [st.chunk(a, b) for st in streams]
+        return (jnp.stack([p[0] for p in pairs]),
+                jnp.stack([p[1] for p in pairs]))
+
+    bounds = _boundaries(start, T, chunk_rounds, checkpoint_every)
+
+    first_chunk = None
+    if warmup and len(bounds) > 1:
+        first_chunk = stacked_chunk(bounds[0], bounds[1])
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(chunk_jit(eng_state, *first_chunk)[0])[0])
+
+    losses, wb_losses, sparsities, corrects = [], [], [], []
+    xs_all, ys_all = [], []
+    t0 = time.time()
+    for a, b in zip(bounds[:-1], bounds[1:]):
+        if a == bounds[0] and first_chunk is not None:
+            xs, ys = first_chunk
+        else:
+            xs, ys = stacked_chunk(a, b)
+        eng_state, outs = chunk_jit(eng_state, xs, ys)
+        jax.block_until_ready(outs.loss)
+        accountant.step(b - a)
+        losses.append(np.asarray(outs.loss))           # (S, C, m)
+        wb_losses.append(np.asarray(outs.w_bar_loss))  # (S, C)
+        sparsities.append(np.asarray(outs.sparsity))
+        corrects.append(np.asarray(outs.correct))
+        if compute_regret:
+            xs_all.append(np.asarray(xs))
+            ys_all.append(np.asarray(ys))
+        if (checkpoint_every and checkpoint_dir
+                and b % checkpoint_every == 0):
+            save_checkpoint(checkpoint_dir, b, eng_state)
+    wall = time.time() - t0
+
+    # a fully-resumed batch (start >= T) executes no chunks; degrade to
+    # empty trajectories exactly like run() does instead of crashing
+    loss = (np.concatenate(losses, axis=1) if losses
+            else np.zeros((S, 0, m)))             # (S, T', m)
+    w_bar_loss = (np.concatenate(wb_losses, axis=1) if wb_losses
+                  else np.zeros((S, 0)))
+    sparsity = (np.concatenate(sparsities, axis=1) if sparsities
+                else np.zeros((S, 0)))
+    correct = (np.concatenate(corrects, axis=1) if corrects
+               else np.zeros((S, 0, m)))
+    done = T - start
+    tail = max(1, int(correct.shape[1] * 0.2)) if correct.size else 1
+    eps_ledger = np.asarray(accountant.ledger(T)[start:])
+    batch_info = {"seeds": seeds, "wall_clock_s": wall,
+                  "seed_rounds_per_sec": (S * done / wall if wall > 0
+                                          else float("inf"))}
+
+    results = []
+    for i, (s, st) in enumerate(zip(seeds, streams)):
+        regret = None
+        if compute_regret and start == 0 and xs_all:
+            regret = _regret(st, w_bar_loss[i],
+                             np.concatenate([x[i] for x in xs_all]),
+                             np.concatenate([y[i] for y in ys_all]), m)
+        res = RunResult(
+            engine=engine,
+            rounds=T,
+            start_round=start,
+            wall_clock=wall / S,
+            rounds_per_sec=(S * done / wall) if wall > 0 else float("inf"),
+            stream=(spec.stream if isinstance(spec.stream, str)
+                    else type(st).__name__),
+            eps_ledger=eps_ledger.copy(),
+            privacy=accountant.summary(),
+            loss=loss[i] if loss.size else None,
+            w_bar_loss=w_bar_loss[i] if w_bar_loss.size else None,
+            correct=correct[i] if correct.size else None,
+            sparsity=sparsity[i] if sparsity.size else None,
+            regret=None if regret is None else np.asarray(regret),
+            accuracy=float(correct[i, -tail:].mean()) if correct.size else None,
+            final_w=_final_primal(specs[i], engine, _index_tree(eng_state, i)),
+            final_state=_index_tree(eng_state, i),
+        )
+        res.metrics = res.summary()
+        res.metrics["batch"] = dict(batch_info)
+        results.append(res)
+    return results
 
 
 def _run_custom(spec, engine, *, step_fn, state, batches, horizon,

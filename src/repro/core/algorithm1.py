@@ -181,10 +181,13 @@ class Algorithm1:
                                    self.mechanism.noise_self, state.t)
         theta_next = self.local_rule.dual_step(mixed, grad, ctx)
 
-        # Definition 3 regret is w.r.t. the average parameter w_bar.
+        # Definition 3 regret is w.r.t. the average parameter w_bar. The
+        # margin is an explicit multiply+reduce (not a matvec einsum) so the
+        # op lowers identically with or without a leading vmapped seed axis —
+        # run_batch's seed-vmap equivalence holds this metric to the bit.
         w_bar = jnp.mean(w, axis=0, keepdims=True)
         wb_loss = jnp.mean(
-            jnp.maximum(1.0 - y * jnp.einsum("n,mn->m", w_bar[0], x), 0.0)
+            jnp.maximum(1.0 - y * jnp.sum(w_bar * x, axis=-1), 0.0)
         )
 
         out = RoundOutput(

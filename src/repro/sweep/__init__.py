@@ -1,0 +1,36 @@
+"""repro.sweep — vectorized experiment orchestration.
+
+The paper's §V evidence is sweep-shaped (accuracy/regret vs eps, sparsity,
+node count, topology); this subsystem makes a sweep a declarative object
+instead of a hand-rolled loop:
+
+  `SweepSpec`   — named axes over any `RunSpec` field (grid, or comma-zipped
+                  fields) plus a vectorized ``seeds`` axis.
+  `sweep()`     — runs every point; the seed axis goes through
+                  `repro.api.run_batch` (`jax.vmap` over seeds inside the
+                  runner's jitted per-chunk `lax.scan` — one compile and
+                  ~one memory-bound pass per point) with a sequential
+                  fallback when a stage resolves seed-dependently.
+  `SweepStore`  — persistent JSONL records under experiments/store/
+                  (resolved spec, seed, trajectories, eps ledger,
+                  wall-clock, git SHA) with load/query/aggregate helpers,
+                  so figures regenerate without re-running (``reuse=True``).
+
+>>> from repro.sweep import SweepSpec, SweepResult, sweep, SweepStore
+>>> from repro.api import RunSpec
+>>> spec = SweepSpec(base=RunSpec(nodes=2, dim=8, horizon=4, eps=1.0),
+...                  axes={"eps": (0.1, 1.0)}, seeds=(0, 1, 2))
+>>> len(spec.points()), spec.store_name
+(2, 'sweep_eps')
+"""
+from repro.sweep.spec import SweepPoint, SweepSpec
+from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
+                               git_sha, record_key, result_from_record,
+                               spec_from_record, spec_record)
+from repro.sweep.engine import SweepResult, sweep
+
+__all__ = [
+    "SweepSpec", "SweepPoint", "SweepResult", "sweep",
+    "SweepStore", "DEFAULT_STORE", "aggregate_records", "git_sha",
+    "record_key", "result_from_record", "spec_record", "spec_from_record",
+]

@@ -1,0 +1,208 @@
+"""The sweep engine: SweepSpec -> (vmapped) runs -> store -> SweepResult.
+
+For every grid point the engine runs all seeds at once through the runner's
+vmapped seed axis (`repro.api.run_batch` — one compilation and ~one
+memory-bound pass per point) and falls back to sequential per-seed `run()`
+calls when the point's resolved stages depend on the seed (seeded 'random'
+/ 'time_varying' topologies, per-edge `delay_dist` draws) — outer axes that
+change shapes (nodes / dim / mixer) are separate compiles by construction,
+which is exactly why only the innermost seed axis is vectorized.
+
+Results persist through `repro.sweep.store.SweepStore` (one JSONL record
+per point x seed); ``reuse=True`` loads any already-stored record with a
+matching resolved spec instead of re-running, so figure scripts regenerate
+their JSONs from the store for free.
+
+>>> import tempfile
+>>> from repro.api import RunSpec
+>>> from repro.sweep import SweepSpec, sweep
+>>> base = RunSpec(nodes=2, dim=8, horizon=6, eps=1.0, alpha0=0.5, lam=0.01,
+...                stream="drift", stream_options={"period": 3})
+>>> sw = SweepSpec(base=base, axes={"eps": (0.5, 1.0)}, seeds=(0, 1),
+...                name="doc_demo", chunk_rounds=6, compute_regret=False)
+>>> out = sweep(sw, store=tempfile.mkdtemp(), warmup=False)
+>>> len(out.points), [len(rs) for rs in out.results], out.ran_points
+(2, [2, 2], 2)
+>>> rows = out.aggregate("accuracy")
+>>> [r["eps"] for r in rows], rows[0]["n"]
+([0.5, 1.0], 2)
+>>> again = sweep(sw, store=out.store.root, reuse=True, warmup=False)
+>>> again.ran_points, again.loaded_points     # regenerated, nothing re-run
+(0, 2)
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro.api.runner import RunResult, run, run_batch, seed_vectorizable
+from repro.sweep.spec import SweepPoint, SweepSpec
+from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
+                               record_key, spec_record)
+
+__all__ = ["sweep", "SweepResult"]
+
+
+def _metric(res: RunResult, value: str | Callable) -> Any:
+    if callable(value):
+        return value(res)
+    if value == "regret_final":
+        return None if res.regret is None else float(res.regret[-1])
+    v = getattr(res, value, None)
+    if isinstance(v, (int, float)):
+        return float(v)
+    return res.metrics.get(value)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Everything a finished sweep knows: the grid, the per-point per-seed
+    RunResults, the records as persisted, and where they went."""
+
+    spec: SweepSpec
+    points: list[SweepPoint]
+    results: list[list[RunResult]]       # [point][seed]
+    records: list[dict]                  # flat, as written/loaded
+    store: SweepStore | None
+    wall_clock: float
+    ran_points: int                      # points actually executed
+    loaded_points: int                   # points served from the store
+
+    def aggregate(self, value: str | Callable[[RunResult], Any] = "accuracy",
+                  ) -> list[dict]:
+        """Per-point mean/std over seeds of one scalar metric.
+
+        ``value`` is a RunResult attribute / metrics key (e.g. 'accuracy',
+        'regret_final', 'wall_clock') or a callable RunResult -> float.
+        Rows are ``{**coords, mean, std, n, values}`` in grid order.
+        """
+        import numpy as np
+        rows = []
+        for point, results in zip(self.points, self.results):
+            values = [_metric(r, value) for r in results]
+            clean = [v for v in values if v is not None]
+            rows.append({
+                **point.coords,
+                "mean": float(np.mean(clean)) if clean else None,
+                "std": float(np.std(clean)) if clean else None,
+                "n": len(values),
+                "values": values,
+            })
+        return rows
+
+    def point_records(self, index: int) -> list[dict]:
+        coords = self.points[index].coords
+        return [r for r in self.records if r.get("coords") == coords]
+
+    def summary(self) -> dict:
+        return {
+            "name": self.spec.store_name,
+            "engine": self.spec.engine,
+            "points": len(self.points),
+            "seeds": list(self.spec.seeds),
+            "ran_points": self.ran_points,
+            "loaded_points": self.loaded_points,
+            "wall_clock_s": round(self.wall_clock, 3),
+            "store": None if self.store is None else self.store.path(
+                self.spec.store_name),
+        }
+
+
+def _run_point(point: SweepPoint, spec: SweepSpec, *,
+               warmup: bool) -> list[RunResult]:
+    seeds = list(spec.seeds)
+    vec = spec.vectorize_seeds
+    if vec is None:
+        vec = len(seeds) > 1 and seed_vectorizable(point.spec, seeds)
+    if vec:
+        # spec.vectorize_seeds=None means WE just verified vectorizability;
+        # an explicit True still lets run_batch's own check raise
+        return run_batch(point.spec, seeds, engine=spec.engine,
+                         chunk_rounds=spec.chunk_rounds,
+                         compute_regret=spec.compute_regret, warmup=warmup,
+                         check_vectorizable=spec.vectorize_seeds is not None)
+    return [run(point.spec.replace(seed=s), engine=spec.engine,
+                chunk_rounds=spec.chunk_rounds,
+                compute_regret=spec.compute_regret, warmup=warmup)
+            for s in seeds]
+
+
+def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
+          reuse: bool = False, warmup: bool = True,
+          include_state: bool = False, verbose: bool = False) -> SweepResult:
+    """Run (or reload) every grid point x seed; persist; return SweepResult.
+
+    store:   store root (or SweepStore, or None to skip persistence).
+    reuse:   serve a point from the store when ALL its seeds have records
+             whose resolved spec matches exactly — the regenerate-figures-
+             without-re-running path.
+    warmup:  compile each point's chunk outside its timed region.
+    include_state: persist the raw engine state inside each record.
+    """
+    store_obj = (store if isinstance(store, SweepStore)
+                 else SweepStore(store) if store is not None else None)
+    name = spec.store_name
+    existing = store_obj.load(name) if store_obj else []
+    # new identities append in O(1); only genuine replacements pay the
+    # full-file rewrite of upsert (keeps a P-point sweep O(P), not O(P^2))
+    existing_keys = {record_key(r) for r in existing}
+
+    points = spec.points()
+    results: list[list[RunResult]] = []
+    records: list[dict] = []
+    ran = loaded = 0
+    t0 = time.time()
+    for point in points:
+        cached = None
+        if reuse and store_obj is not None:
+            found = [store_obj.lookup(
+                         name, coords=point.coords, seed=s,
+                         engine=spec.engine,
+                         spec=spec_record(point.spec.replace(seed=s)),
+                         records=existing)
+                     for s in spec.seeds]
+            # a record stored by a compute_regret=False sweep has no regret
+            # trajectory — it cannot serve a sweep that asks for one
+            if spec.compute_regret:
+                found = [r if r is not None
+                         and r["result"].get("regret") is not None else None
+                         for r in found]
+            if all(r is not None for r in found):
+                cached = found
+        if cached is not None:
+            loaded += 1
+            point_results = [RunResult.from_record(r["result"])
+                             for r in cached]
+            point_records = cached
+        else:
+            ran += 1
+            point_results = _run_point(point, spec, warmup=warmup)
+            point_records = [
+                store_obj.make_record(
+                    name, coords=point.coords, seed=s, engine=spec.engine,
+                    spec=point.spec.replace(seed=s), result=res,
+                    include_state=include_state)
+                if store_obj is not None else
+                {"sweep": name, "coords": dict(point.coords), "seed": s,
+                 "engine": spec.engine,
+                 "result": res.to_record(include_state=include_state)}
+                for s, res in zip(spec.seeds, point_results)]
+            if store_obj is not None:
+                fresh_keys = [record_key(r) for r in point_records]
+                if any(k in existing_keys for k in fresh_keys):
+                    store_obj.upsert(name, point_records)
+                else:
+                    store_obj.append(name, point_records)
+                existing_keys.update(fresh_keys)
+        if verbose:
+            accs = [r.accuracy for r in point_results]
+            print(f"[sweep {name}] {point.label()}: "
+                  f"{'loaded' if cached is not None else 'ran'} "
+                  f"{len(point_results)} seeds, acc={accs}")
+        results.append(point_results)
+        records.extend(point_records)
+    return SweepResult(spec=spec, points=points, results=results,
+                       records=records, store=store_obj,
+                       wall_clock=time.time() - t0,
+                       ran_points=ran, loaded_points=loaded)

@@ -10,7 +10,7 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
-        "docs/streams.md")
+        "docs/streams.md", "docs/sweeps.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -21,6 +21,10 @@ API_MODULES = (
     "repro.api.clippers",
     "repro.api.streams",
     "repro.api.runner",
+    "repro.sweep",
+    "repro.sweep.spec",
+    "repro.sweep.store",
+    "repro.sweep.engine",
 )
 FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 

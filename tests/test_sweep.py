@@ -1,0 +1,303 @@
+"""repro.sweep — SweepSpec grids, the vmapped seed axis, the results store.
+
+The load-bearing guarantees:
+  * a vmapped seed batch is BIT-identical to per-seed sequential `run()`
+    on both engines, noise on, including delay>0 (history ring) and
+    checkpoint_every/resume;
+  * RunResult survives the JSON record round-trip exactly;
+  * the store regenerates sweep results without re-running (reuse), and
+    never silently reuses records from a changed spec.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, run, run_batch, seed_vectorizable
+from repro.api.runner import RunResult
+from repro.sweep import (SweepSpec, SweepStore, aggregate_records,
+                         record_key, spec_from_record, spec_record, sweep)
+
+SEEDS = (0, 1, 2)
+
+
+def _spec(**kw):
+    base = dict(nodes=3, dim=16, horizon=30, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def _assert_results_equal(a: RunResult, b: RunResult, regret: bool = True):
+    fields = ["final_w", "loss", "w_bar_loss", "correct", "sparsity",
+              "eps_ledger"] + (["regret"] if regret else [])
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"field {f} diverged")
+    assert a.accuracy == b.accuracy
+
+
+# -- SweepSpec grid resolution ----------------------------------------------
+
+def test_points_grid_order():
+    sw = SweepSpec(base=_spec(), axes={"eps": (0.1, 1.0), "lam": (0.0, 0.5)})
+    assert [p.coords for p in sw.points()] == [
+        {"eps": 0.1, "lam": 0.0}, {"eps": 0.1, "lam": 0.5},
+        {"eps": 1.0, "lam": 0.0}, {"eps": 1.0, "lam": 0.5}]
+    assert sw.points()[1].spec.eps == 0.1 and sw.points()[1].spec.lam == 0.5
+    assert sw.store_name == "sweep_eps-lam"
+
+
+def test_points_zipped_axis_crosses_with_grid():
+    sw = SweepSpec(base=_spec(),
+                   axes={"nodes,horizon": ((2, 10), (4, 5)),
+                         "eps": (0.5, 1.0)})
+    coords = [p.coords for p in sw.points()]
+    assert coords[0] == {"nodes": 2, "horizon": 10, "eps": 0.5}
+    assert coords[3] == {"nodes": 4, "horizon": 5, "eps": 1.0}
+    assert sw.points()[3].spec.nodes == 4 and sw.points()[3].spec.horizon == 5
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="unknown RunSpec field"):
+        SweepSpec(base=_spec(), axes={"nope": (1,)})
+    with pytest.raises(ValueError, match="SweepSpec.seeds"):
+        SweepSpec(base=_spec(), axes={"seed": (0, 1)})
+    with pytest.raises(ValueError, match="duplicate seeds"):
+        SweepSpec(base=_spec(), seeds=(0, 0))
+    with pytest.raises(ValueError, match="2-tuples"):
+        SweepSpec(base=_spec(), axes={"nodes,horizon": (4,)})
+    with pytest.raises(ValueError, match="no values"):
+        SweepSpec(base=_spec(), axes={"eps": ()})
+
+
+# -- RunResult JSON round-trip ----------------------------------------------
+
+@pytest.mark.parametrize("engine,delay", [("sim", 0), ("sim", 2), ("dist", 2)])
+def test_runresult_record_round_trip_exact(engine, delay):
+    res = run(_spec(delay=delay), engine=engine, chunk_rounds=15,
+              warmup=False)
+    rec = json.loads(json.dumps(res.to_record(include_state=True)))
+    back = RunResult.from_record(rec)
+    _assert_results_equal(res, back)
+    assert back.rounds == res.rounds and back.engine == engine
+    assert back.privacy == res.privacy
+    # the engine state (incl. the delay history ring) survives exactly
+    orig, rest = res.final_state, back.final_state
+    assert type(rest).__name__ == type(orig).__name__
+    np.testing.assert_array_equal(np.asarray(orig.t), np.asarray(rest.t))
+    np.testing.assert_array_equal(np.asarray(orig.key), np.asarray(rest.key))
+    if engine == "sim":
+        np.testing.assert_array_equal(np.asarray(orig.theta),
+                                      np.asarray(rest.theta))
+    else:
+        np.testing.assert_array_equal(np.asarray(orig.theta["w"]),
+                                      np.asarray(rest.theta["w"]))
+    if delay:
+        h_orig = (orig.history if engine == "sim" else orig.history["w"])
+        h_back = (rest.history if engine == "sim" else rest.history["w"])
+        np.testing.assert_array_equal(np.asarray(h_orig), np.asarray(h_back))
+
+
+def test_record_handles_inf_eps():
+    res = run(_spec(eps=math.inf), engine="sim", chunk_rounds=30,
+              warmup=False, compute_regret=False)
+    back = RunResult.from_record(json.loads(json.dumps(res.to_record())))
+    assert math.isinf(back.privacy["eps_per_round"])
+    np.testing.assert_array_equal(back.eps_ledger, res.eps_ledger)
+
+
+# -- seed-vmap equivalence (the acceptance contract) -------------------------
+
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+@pytest.mark.parametrize("delay", [0, 2])
+def test_seed_vmap_bit_identical(engine, delay):
+    """A vmapped seed batch matches per-seed sequential run() bit-for-bit
+    on both engines, Laplace noise ON, including under delay>0 (ring)."""
+    spec = _spec(delay=delay)
+    batch = run_batch(spec, SEEDS, engine=engine, chunk_rounds=13,
+                      warmup=False)
+    for s, vec in zip(SEEDS, batch):
+        seq = run(spec.replace(seed=s), engine=engine, chunk_rounds=13,
+                  warmup=False)
+        _assert_results_equal(seq, vec)
+
+
+def test_seed_vmap_checkpoint_resume_bit_identical(tmp_path):
+    """A batch that checkpoints and resumes mid-horizon continues exactly
+    where the uninterrupted batch (and the sequential runs) would be."""
+    spec = _spec(delay=1, horizon=24)
+    full = run_batch(spec, SEEDS, chunk_rounds=6, warmup=False)
+    ck = str(tmp_path / "ck")
+    first = run_batch(spec, SEEDS, chunk_rounds=6, warmup=False,
+                      checkpoint_every=12, checkpoint_dir=ck, horizon=12)
+    resumed = run_batch(spec, SEEDS, chunk_rounds=6, warmup=False,
+                        checkpoint_dir=ck, resume=True,
+                        compute_regret=False)
+    assert resumed[0].start_round == 12
+    for f, r in zip(full, resumed):
+        np.testing.assert_array_equal(f.final_w, r.final_w)
+        np.testing.assert_array_equal(np.asarray(f.correct)[12:],
+                                      np.asarray(r.correct))
+    seq = run(spec.replace(seed=SEEDS[1]), chunk_rounds=24, warmup=False)
+    np.testing.assert_array_equal(seq.final_w, resumed[1].final_w)
+    assert first[0].rounds == 12
+
+
+def test_batch_resume_when_already_complete(tmp_path):
+    """Resuming a batch whose checkpoint is already at the horizon returns
+    gracefully (empty trajectories, like run()) instead of crashing."""
+    spec = _spec(horizon=12)
+    ck = str(tmp_path / "ck")
+    run_batch(spec, SEEDS, chunk_rounds=6, warmup=False,
+              checkpoint_every=12, checkpoint_dir=ck,
+              compute_regret=False)
+    done = run_batch(spec, SEEDS, chunk_rounds=6, warmup=False,
+                     checkpoint_dir=ck, resume=True, compute_regret=False)
+    assert done[0].start_round == 12 and done[0].rounds == 12
+    assert done[0].loss is None and done[0].accuracy is None
+    assert len(done) == len(SEEDS)
+
+
+def test_seed_dependent_mixer_fallback():
+    """Seeded topologies resolve differently per seed: run_batch refuses,
+    seed_vectorizable says no, and sweep() falls back to sequential runs
+    that match per-seed run() exactly."""
+    spec_dd = _spec(delay=2, delay_dist="uniform", horizon=16)
+    if not seed_vectorizable(spec_dd, (0, 1)):
+        with pytest.raises(ValueError, match="depends on RunSpec.seed"):
+            run_batch(spec_dd, (0, 1), chunk_rounds=16)
+    out = sweep(SweepSpec(base=spec_dd, seeds=(0, 1), chunk_rounds=16,
+                          compute_regret=False),
+                store=None, warmup=False)
+    for s, res in zip((0, 1), out.results[0]):
+        seq = run(spec_dd.replace(seed=s), chunk_rounds=16, warmup=False,
+                  compute_regret=False)
+        _assert_results_equal(seq, res, regret=False)
+
+
+def test_vectorizable_predicate():
+    assert seed_vectorizable(_spec(), SEEDS)
+    assert seed_vectorizable(_spec(mixer="complete"), SEEDS)
+    assert not seed_vectorizable(_spec(delay=2, delay_dist="uniform"), SEEDS)
+
+
+# -- sweep engine + store ----------------------------------------------------
+
+def test_sweep_end_to_end_with_store(tmp_path):
+    sw = SweepSpec(base=_spec(horizon=12), axes={"eps": (0.5, 1.0)},
+                   seeds=(0, 1), name="t_e2e", chunk_rounds=12,
+                   compute_regret=False)
+    out = sweep(sw, store=str(tmp_path), warmup=False)
+    assert out.ran_points == 2 and out.loaded_points == 0
+    assert len(out.records) == 4
+    store = SweepStore(str(tmp_path))
+    assert store.names() == ["t_e2e"]
+    assert len(store.load("t_e2e")) == 4
+    assert {r["seed"] for r in store.query("t_e2e", eps=0.5)} == {0, 1}
+
+    rows = out.aggregate("accuracy")
+    assert [r["eps"] for r in rows] == [0.5, 1.0]
+    assert all(r["n"] == 2 and r["std"] is not None for r in rows)
+
+    # reuse: everything served from the store, results identical
+    again = sweep(sw, store=str(tmp_path), reuse=True, warmup=False)
+    assert again.ran_points == 0 and again.loaded_points == 2
+    for a, b in zip(out.results, again.results):
+        for ra, rb in zip(a, b):
+            _assert_results_equal(ra, rb, regret=False)
+
+    # re-running WITHOUT reuse upserts — no duplicate records
+    sweep(sw, store=str(tmp_path), warmup=False)
+    assert len(store.load("t_e2e")) == 4
+
+
+def test_store_reuse_requires_regret_when_requested(tmp_path):
+    """Records stored without a regret trajectory cannot serve a sweep
+    that asks for one — it re-runs (and the refreshed record then can)."""
+    sw = SweepSpec(base=_spec(horizon=12), axes={"eps": (0.5,)}, seeds=(0,),
+                   name="t_regret", chunk_rounds=12, compute_regret=False)
+    sweep(sw, store=str(tmp_path), warmup=False)
+    again = sweep(sw.replace(compute_regret=True), store=str(tmp_path),
+                  reuse=True, warmup=False)
+    assert again.ran_points == 1 and again.results[0][0].regret is not None
+    third = sweep(sw.replace(compute_regret=True), store=str(tmp_path),
+                  reuse=True, warmup=False)
+    assert third.loaded_points == 1
+    assert third.results[0][0].regret is not None
+
+
+def test_store_never_reuses_changed_spec(tmp_path):
+    sw = SweepSpec(base=_spec(horizon=12), axes={"eps": (0.5,)}, seeds=(0,),
+                   name="t_stale", chunk_rounds=12, compute_regret=False)
+    sweep(sw, store=str(tmp_path), warmup=False)
+    changed = sw.replace(base=_spec(horizon=12, lam=0.5))
+    out = sweep(changed, store=str(tmp_path), reuse=True, warmup=False)
+    assert out.ran_points == 1 and out.loaded_points == 0
+
+
+def test_spec_record_round_trip():
+    spec = _spec(eps=math.inf, delay=3)
+    rec = json.loads(json.dumps(spec_record(spec)))
+    back = spec_from_record(rec)
+    assert back == spec
+    assert record_key({"coords": {"a": 1}, "seed": 0, "engine": "sim",
+                       "spec": rec}) == record_key(
+        {"spec": rec, "engine": "sim", "seed": 0, "coords": {"a": 1}})
+
+
+def test_record_key_int_float_coords_identical(tmp_path):
+    """The CLI parses eps=1 as int, the Python API passes 1.0 — both must
+    map to ONE record identity so upsert dedups instead of duplicating."""
+    a = {"coords": {"eps": 1}, "seed": 0, "engine": "sim", "spec": {"lam": 0}}
+    b = {"coords": {"eps": 1.0}, "seed": 0, "engine": "sim",
+         "spec": {"lam": 0.0}}
+    assert record_key(a) == record_key(b)
+    store = SweepStore(str(tmp_path))
+    store.upsert("t_kk", [dict(a, result={"accuracy": 0.1})])
+    store.upsert("t_kk", [dict(b, result={"accuracy": 0.2})])
+    rows = store.load("t_kk")
+    assert len(rows) == 1 and rows[0]["result"]["accuracy"] == 0.2
+
+
+def test_spec_record_marks_instances():
+    from repro.api import SocialStream
+    stream = SocialStream(n=16, nodes=3, rounds=8)
+    rec = spec_record(_spec(stream=stream))
+    assert rec["stream"] == {"__instance__": "SocialStream"}
+    with pytest.raises(ValueError, match="audit-only"):
+        spec_from_record(rec)
+
+
+def test_aggregate_records():
+    recs = [{"coords": {"eps": e}, "seed": s,
+             "result": {"accuracy": 0.5 + 0.1 * s}}
+            for e in (0.5, 1.0) for s in (0, 1)]
+    rows = aggregate_records(recs, by=("eps",), value="accuracy")
+    assert len(rows) == 2
+    assert rows[0]["mean"] == pytest.approx(0.55)
+    assert rows[0]["n"] == 2
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_cli_axis_parsing():
+    from repro.launch.sweep import parse_axis
+    assert parse_axis("eps=0.1,1,inf") == ("eps", (0.1, 1, math.inf))
+    assert parse_axis("nodes,horizon=4:8,8:4") == (
+        "nodes,horizon", ((4, 8), (8, 4)))
+    assert parse_axis("mixer=ring,complete") == ("mixer",
+                                                 ("ring", "complete"))
+
+
+def test_cli_main_smoke(tmp_path):
+    from repro.launch.sweep import main
+    out = main(["--nodes", "3", "--dim", "16", "--horizon", "12",
+                "--axis", "eps=0.5,1.0", "--seeds", "0,1",
+                "--chunk-rounds", "12", "--no-regret",
+                "--store", str(tmp_path), "--name", "t_cli"])
+    assert out["summary"]["ran_points"] == 2
+    assert len(out["rows"]) == 2 and out["rows"][0]["eps"] == 0.5
+    assert SweepStore(str(tmp_path)).load("t_cli")
