@@ -42,11 +42,19 @@ def run(scale: Scale | None = None, *, stream: str = "drift",
                              else float(res.regret[-1])),
             "eps_total": res.privacy["eps_total"],
         }
+    # seeded sim-vs-dist runs are guaranteed bit-identical (PR 3); record the
+    # verdict so benchmarks/check_bench.py can gate it against the baseline
+    engines_identical = None
+    if "sim" in rows and "dist" in rows:
+        engines_identical = (
+            rows["sim"]["accuracy"] == rows["dist"]["accuracy"]
+            and rows["sim"]["regret_final"] == rows["dist"]["regret_final"])
     bench = {
         "bench": "stream_runner",
         "stream": stream,
         "scale": {"n": scale.n, "m": scale.m, "T": scale.T},
         "eps": eps,
+        "engines_identical": engines_identical,
         "rows": rows,
     }
     with open(bench_path, "w") as f:

@@ -1,16 +1,22 @@
 """Seed-axis vectorization bench: vmapped `run_batch` vs the sequential
-per-seed `run()` loop it replaces, same config, >= 8 seeds.
+per-seed `run()` loop it replaces — and, with ``--devices``, vs the
+device-SHARDED seed axis (shard_map over a ("seed",) mesh), same config,
+>= 8 seeds.
 
 The vmapped path compiles ONE program (vmap over the seed axis inside the
 runner's jitted per-chunk lax.scan) and drives all S trajectories in ~one
 memory-bound pass; the sequential loop pays S compiles and S dispatch
-streams. Both paths must agree to NUMERICAL IDENTITY per seed (the same
-guarantee tests/test_sweep.py holds to the bit) — the bench asserts it.
+streams; the sharded path splits the same vmapped program into S/D blocks,
+one per device. All paths must agree to NUMERICAL IDENTITY per seed (the
+same guarantee tests/test_sweep.py and tests/test_shard_seed.py hold to the
+bit) — the bench asserts it.
 
     PYTHONPATH=src python -m benchmarks.bench_sweep [--smoke] [--seeds 8]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_sweep --smoke --devices 4
 
-Writes BENCH_sweep.json: wall-clock for both paths, the speedup, and the
-identity verdict.
+Writes BENCH_sweep.json: wall-clock for every path, the speedups, and the
+identity verdicts (sharded fields stay null without --devices).
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ def _identical(a, b) -> bool:
 
 def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
               engine: str = "sim", eps: float = 1.0,
+              devices: int | str | None = None,
               bench_path: str = "BENCH_sweep.json") -> dict:
     scale = scale or Scale()
     spec = make_spec(scale, eps=eps, lam=0.01)
@@ -51,7 +58,23 @@ def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
                         compute_regret=False, warmup=False)
     vec_wall = time.time() - t0
 
+    sharded = None
+    shard_wall = None
+    n_devices = None
+    if devices is not None:
+        from repro.launch.mesh import seed_mesh
+        mesh = seed_mesh(devices)
+        if mesh is not None:
+            n_devices = int(mesh.shape["seed"])
+            t0 = time.time()
+            sharded = run_batch(spec, seeds, engine=engine,
+                                chunk_rounds=chunk, compute_regret=False,
+                                warmup=False, mesh=mesh)
+            shard_wall = time.time() - t0
+
     identical = all(_identical(a, b) for a, b in zip(sequential, vmapped))
+    sharded_identical = (None if sharded is None else all(
+        _identical(a, b) for a, b in zip(sequential, sharded)))
     bench = {
         "bench": "sweep_seed_vmap",
         "engine": engine,
@@ -66,12 +89,25 @@ def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
             n_seeds * scale.T / seq_wall, 1),
         "vmapped_seed_rounds_per_sec": round(
             n_seeds * scale.T / vec_wall, 1),
+        "devices": n_devices,
+        "sharded_s": None if shard_wall is None else round(shard_wall, 3),
+        "sharded_speedup_vs_sequential": (
+            None if shard_wall is None or shard_wall <= 0
+            else round(seq_wall / shard_wall, 2)),
+        "sharded_speedup_vs_vmapped": (
+            None if shard_wall is None or shard_wall <= 0
+            else round(vec_wall / shard_wall, 2)),
+        "sharded_identical": sharded_identical,
     }
     with open(bench_path, "w") as f:
         json.dump(bench, f, indent=1)
     if not identical:
         raise AssertionError(
             "vmapped seed batch diverged from the sequential per-seed loop")
+    if sharded_identical is False:
+        raise AssertionError(
+            "device-sharded seed batch diverged from the sequential "
+            "per-seed loop")
     return bench
 
 
@@ -81,15 +117,27 @@ def main() -> None:
                     help="tiny scale (seconds) for the CI bench-smoke job")
     ap.add_argument("--seeds", type=int, default=8)
     ap.add_argument("--engine", default="sim", choices=["sim", "dist"])
+    ap.add_argument("--devices", default=None, metavar="N|auto",
+                    help="also time the device-sharded seed axis over N "
+                         "local devices ('auto' = all, skipping the sharded "
+                         "lane on a 1-device host; an explicit N errors "
+                         "when fewer than N devices are visible)")
     ap.add_argument("--bench-path", default="BENCH_sweep.json")
     args = ap.parse_args()
     scale = Scale.smoke() if args.smoke else None
+    devices = (None if args.devices is None
+               else "auto" if args.devices == "auto" else int(args.devices))
     bench = run_bench(scale, n_seeds=args.seeds, engine=args.engine,
-                      bench_path=args.bench_path)
-    print(f"{bench['seeds']} seeds, {bench['engine']}: "
-          f"sequential {bench['sequential_s']}s -> "
-          f"vmapped {bench['vmapped_s']}s "
-          f"({bench['speedup']}x, identical={bench['identical']})")
+                      devices=devices, bench_path=args.bench_path)
+    msg = (f"{bench['seeds']} seeds, {bench['engine']}: "
+           f"sequential {bench['sequential_s']}s -> "
+           f"vmapped {bench['vmapped_s']}s "
+           f"({bench['speedup']}x, identical={bench['identical']})")
+    if bench["sharded_s"] is not None:
+        msg += (f" -> sharded/{bench['devices']}dev {bench['sharded_s']}s "
+                f"({bench['sharded_speedup_vs_sequential']}x vs sequential, "
+                f"identical={bench['sharded_identical']})")
+    print(msg)
 
 
 if __name__ == "__main__":

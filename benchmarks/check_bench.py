@@ -1,0 +1,155 @@
+"""Regression gate for the BENCH_*.json smoke artifacts.
+
+CI used to only *upload* the bench JSONs — a silent 10x slowdown (or a
+broken identity guarantee) would sail through green. This check compares a
+freshly written BENCH_*.json against its committed baseline under
+``benchmarks/baselines/`` and FAILS when:
+
+  * any ``identical``-ish field (bool) flips from its baseline value —
+    the bit-identity guarantees are not allowed to erode, ever;
+  * any ``speedup``-ish field (number) drops below ``tolerance`` x the
+    baseline value — generous by default (0.25) because CI runners are
+    noisy and slower than the dev container, but a vanished vectorization
+    win still trips it.
+
+Baseline fields that are null are skipped (e.g. the sharded timings on a
+1-device host, or a speedup too noise-bound to gate); fields present in
+the baseline but MISSING from the fresh file fail — a bench that silently
+stops measuring something is a regression too.
+
+Two baseline sets: ``benchmarks/baselines/`` (1-device, used by the
+bench-smoke job) and ``benchmarks/baselines/sharded/`` (8 fake devices,
+used by the multi-device job — gates ``sharded_identical`` and the
+sharded-vs-sequential speedup; the sharded-vs-vmapped ratio is nulled
+there because 2-core runners faking 8 devices make it pure noise).
+
+    PYTHONPATH=src python -m benchmarks.check_bench            # all baselines
+    PYTHONPATH=src python -m benchmarks.check_bench BENCH_sweep.json
+    PYTHONPATH=src python -m benchmarks.check_bench \
+        --baseline-dir benchmarks/baselines/sharded BENCH_sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+
+def _is_identity_key(key: str) -> bool:
+    return key == "identical" or key.endswith("_identical")
+
+
+def _is_speedup_key(key: str) -> bool:
+    return "speedup" in key
+
+
+def _walk(tree, path=()):
+    """(path, key, value) for every dict entry, depth-first."""
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield path, k, v
+            yield from _walk(v, path + (k,))
+    elif isinstance(tree, list):
+        for i, v in enumerate(tree):
+            yield from _walk(v, path + (str(i),))
+
+
+def _get(tree, path, key):
+    node = tree
+    for p in path:
+        if isinstance(node, dict):
+            node = node.get(p, {})
+        elif isinstance(node, list) and p.isdigit() and int(p) < len(node):
+            node = node[int(p)]
+        else:
+            return None
+    return node.get(key) if isinstance(node, dict) else None
+
+
+def check_file(current_path: str, baseline_path: str,
+               tolerance: float) -> list[str]:
+    """Human-readable failure messages (empty = pass)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    if not os.path.exists(current_path):
+        return [f"{current_path}: missing (baseline {baseline_path} exists "
+                f"— did the bench stop running?)"]
+    with open(current_path) as f:
+        current = json.load(f)
+
+    failures = []
+    checked = 0
+    for path, key, base_val in _walk(baseline):
+        where = ".".join(path + (key,))
+        if _is_identity_key(key) and isinstance(base_val, bool):
+            cur = _get(current, path, key)
+            checked += 1
+            if cur != base_val:
+                failures.append(
+                    f"{current_path}: {where} = {cur!r}, baseline "
+                    f"{base_val!r} — the bit-identity guarantee regressed")
+        elif _is_speedup_key(key) and isinstance(base_val, (int, float)) \
+                and not isinstance(base_val, bool):
+            cur = _get(current, path, key)
+            checked += 1
+            floor = base_val * tolerance
+            if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+                failures.append(
+                    f"{current_path}: {where} missing/non-numeric "
+                    f"(baseline {base_val})")
+            elif cur < floor:
+                failures.append(
+                    f"{current_path}: {where} = {cur} < {floor:.2f} "
+                    f"({tolerance} x baseline {base_val}) — vectorization "
+                    f"win regressed")
+    if checked == 0:
+        failures.append(f"{baseline_path}: no identical/speedup fields to "
+                        f"check — baseline is vacuous")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_bench",
+        description="Fail when a BENCH_*.json regresses vs its committed "
+                    "baseline (benchmarks/baselines/)")
+    ap.add_argument("files", nargs="*",
+                    help="BENCH_*.json files to check (default: every file "
+                         "with a committed baseline)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="fresh speedup must be >= tolerance x baseline "
+                         "(default 0.25 — CI runners are noisy)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    args = ap.parse_args(argv)
+
+    names = args.files or sorted(
+        f for f in os.listdir(args.baseline_dir) if f.endswith(".json"))
+    if not names:
+        print("check_bench: no baselines found", file=sys.stderr)
+        return 2
+
+    failures = []
+    for name in names:
+        base = os.path.basename(name)
+        baseline_path = os.path.join(args.baseline_dir, base)
+        if not os.path.exists(baseline_path):
+            failures.append(f"{name}: no committed baseline at "
+                            f"{baseline_path}")
+            continue
+        failures.extend(check_file(base if not args.files else name,
+                                   baseline_path, args.tolerance))
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION {msg}", file=sys.stderr)
+        return 1
+    print(f"check_bench: {len(names)} file(s) within tolerance "
+          f"{args.tolerance} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

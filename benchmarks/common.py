@@ -61,6 +61,7 @@ def figure_sweep(name: str, scale: Scale, axes: dict, *,
                  seeds: tuple = SEEDS, engine: str = "sim",
                  compute_regret: bool = True, from_store: bool = False,
                  store: str | None = DEFAULT_STORE,
+                 devices: int | str | None = None,
                  **spec_kw) -> SweepResult:
     """One figure = one sweep: axes over `make_spec`, seeds vmapped per
     point, records persisted under the figure's name in the sweep store.
@@ -71,13 +72,9 @@ def figure_sweep(name: str, scale: Scale, axes: dict, *,
     base = make_spec(scale, **spec_kw)
     spec = SweepSpec(base=base, axes=axes, seeds=tuple(seeds), engine=engine,
                      name=name, chunk_rounds=scale.T,
-                     compute_regret=compute_regret)
-    out = sweep(spec, store=store, reuse=from_store)
-    if from_store and out.ran_points:
-        # --from-store promises regeneration WITHOUT re-running; a silent
-        # fallback here would let a broken store-reuse path pass CI unseen
-        raise RuntimeError(
-            f"--from-store: {out.ran_points}/{len(out.points)} points of "
-            f"{name!r} missed the store and re-ran (stale or missing "
-            f"records for this spec — run once without --from-store first)")
-    return out
+                     compute_regret=compute_regret, devices=devices)
+    # --from-store promises regeneration WITHOUT re-running: require_store
+    # raises SweepStoreMiss (naming the stale/missing points) BEFORE any
+    # engine call, so a broken store-reuse path can never pass CI unseen
+    return sweep(spec, store=store, reuse=from_store,
+                 require_store=from_store)

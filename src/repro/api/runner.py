@@ -492,6 +492,39 @@ def _index_tree(tree: Any, i: int) -> Any:
     return jax.tree_util.tree_map(lambda x: x[i], tree)
 
 
+def _pad_tree(tree: Any, pad: int) -> Any:
+    """Grow every leaf's leading (seed) axis by ``pad`` copies of its last
+    entry. Pad seeds are throwaway duplicates — `_unpad_tree` masks them out
+    of every aggregate before results are read."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]), tree)
+
+
+def _unpad_tree(tree: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[:n], tree)
+
+
+def _resolve_seed_mesh(devices: int | str | None, mesh: Any):
+    """The ("seed",) mesh to shard the batch over, or None for plain vmap.
+
+    ``devices=None`` keeps the single-device vmap path; ``"auto"`` takes
+    every local device (falling back to vmap on a 1-device host); an int
+    asks for exactly that many. A prebuilt mesh must carry a "seed" axis.
+    """
+    if mesh is not None:
+        if "seed" not in mesh.axis_names:
+            raise ValueError(
+                f"run_batch needs a mesh with a 'seed' axis, got axes "
+                f"{tuple(mesh.axis_names)}")
+        return mesh if int(mesh.shape["seed"]) > 1 else None
+    if devices is None:
+        return None
+    from repro.launch.mesh import seed_mesh
+    return seed_mesh(devices)
+
+
 def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
               chunk_rounds: int = 512,
               checkpoint_every: int | None = None,
@@ -500,7 +533,9 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
               compute_regret: bool = True,
               warmup: bool = True,
               horizon: int | None = None,
-              check_vectorizable: bool = True) -> list[RunResult]:
+              check_vectorizable: bool = True,
+              devices: int | str | None = None,
+              mesh: Any = None) -> list[RunResult]:
     """Run one config under S seeds as ONE vmapped program; S RunResults.
 
     The innermost (seed) axis is vectorized: per-seed engine states are
@@ -514,8 +549,21 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     with ``wall_clock`` amortized as batch wall / S and the batch totals
     under ``metrics["batch"]``.
 
+    ``devices=`` (or a prebuilt ``mesh=`` with a "seed" axis) additionally
+    SHARDS the vmapped seed axis across local devices with `shard_map` over
+    a 1-D ``("seed",)`` mesh: S is padded up to a multiple of the device
+    count D with throwaway duplicate seeds, each device runs the same vmapped
+    chunk program over its S/D block, and the pad seeds are sliced out of
+    every trajectory, checkpoint and aggregate. Seeds are independent private
+    runs, so the sharded results stay bit-identical to the single-device
+    vmap (and to sequential `run()`) — noise, delay rings and resume
+    included. ``devices="auto"`` uses `jax.local_device_count()` and falls
+    back to plain vmap on a 1-device host.
+
     Checkpoints (``checkpoint_every``/``checkpoint_dir``/``resume``) store
-    the STACKED state, so a resumed batch continues bit-identically too.
+    the STACKED state gathered to host and stripped of pad seeds, so a run
+    saved under one device count resumes bit-identically under any other
+    (4 devices -> 1, 1 -> 8, ...).
     Raises ValueError when the spec's resolved stages depend on the seed
     (see `seed_vectorizable`) — callers like `repro.sweep` fall back to
     sequential per-seed runs in that case.
@@ -548,24 +596,50 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     init_states = [init_fn(jax.random.PRNGKey(s)) for s in seeds]
     batched_init = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *init_states)
-    chunk_jit = jax.jit(jax.vmap(chunk_fn))
+
+    mesh = _resolve_seed_mesh(devices, mesh)
+    D = int(mesh.shape["seed"]) if mesh is not None else 1
+    pad = (-S) % D
+    if mesh is None:
+        sharding = None
+        chunk_jit = jax.jit(jax.vmap(chunk_fn))
+    else:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import NamedSharding, PartitionSpec
+        pspec = PartitionSpec("seed")
+        sharding = NamedSharding(mesh, pspec)
+        # each device runs the SAME vmapped chunk program over its S/D block
+        # of seeds; no collectives cross the blocks, so per-seed trajectories
+        # cannot differ from the single-device vmap
+        chunk_jit = jax.jit(shard_map(
+            jax.vmap(chunk_fn), mesh=mesh,
+            in_specs=(pspec, pspec, pspec), out_specs=(pspec, pspec),
+            check_rep=False))
+
+    def _place(tree):
+        """Pad the seed axis to S + pad and lay it out over the mesh."""
+        if mesh is None:
+            return tree
+        return jax.device_put(_pad_tree(tree, pad), sharding)
 
     start = 0
-    eng_state = batched_init
+    eng_state = _place(batched_init)
     if resume:
         if not checkpoint_dir:
             raise ValueError("resume=True needs checkpoint_dir=")
         found = latest_step(checkpoint_dir)
         if found is not None:
-            eng_state = restore_checkpoint(checkpoint_dir, batched_init,
-                                           step=found)
+            # checkpoints hold the UNPADDED (S, ...) host state, so a run
+            # saved under any device count restores under this one
+            eng_state = _place(restore_checkpoint(checkpoint_dir,
+                                                  batched_init, step=found))
             start = found
     accountant.rounds = start
 
     def stacked_chunk(a: int, b: int):
         pairs = [st.chunk(a, b) for st in streams]
-        return (jnp.stack([p[0] for p in pairs]),
-                jnp.stack([p[1] for p in pairs]))
+        return _place((jnp.stack([p[0] for p in pairs]),
+                       jnp.stack([p[1] for p in pairs])))
 
     bounds = _boundaries(start, T, chunk_rounds, checkpoint_every)
 
@@ -586,17 +660,20 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         eng_state, outs = chunk_jit(eng_state, xs, ys)
         jax.block_until_ready(outs.loss)
         accountant.step(b - a)
-        losses.append(np.asarray(outs.loss))           # (S, C, m)
-        wb_losses.append(np.asarray(outs.w_bar_loss))  # (S, C)
-        sparsities.append(np.asarray(outs.sparsity))
-        corrects.append(np.asarray(outs.correct))
+        # [:S] masks the pad seeds (duplicates of the last real seed) out of
+        # every recorded trajectory; a no-op on the unsharded path
+        losses.append(np.asarray(outs.loss)[:S])           # (S, C, m)
+        wb_losses.append(np.asarray(outs.w_bar_loss)[:S])  # (S, C)
+        sparsities.append(np.asarray(outs.sparsity)[:S])
+        corrects.append(np.asarray(outs.correct)[:S])
         if compute_regret:
-            xs_all.append(np.asarray(xs))
-            ys_all.append(np.asarray(ys))
+            xs_all.append(np.asarray(xs)[:S])
+            ys_all.append(np.asarray(ys)[:S])
         if (checkpoint_every and checkpoint_dir
                 and b % checkpoint_every == 0):
-            save_checkpoint(checkpoint_dir, b, eng_state)
+            save_checkpoint(checkpoint_dir, b, _unpad_tree(eng_state, S))
     wall = time.time() - t0
+    eng_state = _unpad_tree(eng_state, S)
 
     # a fully-resumed batch (start >= T) executes no chunks; degrade to
     # empty trajectories exactly like run() does instead of crashing
@@ -612,6 +689,7 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     tail = max(1, int(correct.shape[1] * 0.2)) if correct.size else 1
     eps_ledger = np.asarray(accountant.ledger(T)[start:])
     batch_info = {"seeds": seeds, "wall_clock_s": wall,
+                  "devices": D, "pad_seeds": pad,
                   "seed_rounds_per_sec": (S * done / wall if wall > 0
                                           else float("inf"))}
 

@@ -31,6 +31,31 @@ def make_test_mesh(data: int = 4, model: int = 2):
     return make_mesh((data, model), ("data", "model"))
 
 
+def seed_mesh(devices: int | str | None = "auto"):
+    """1-D ``("seed",)`` mesh for device-sharding independent per-seed runs.
+
+    The seed axis of `repro.api.run_batch` is embarrassingly parallel — each
+    seed is its own private run — so the only mesh it needs is a flat row of
+    devices. ``devices="auto"`` uses every local device; an int asks for
+    exactly that many (error with an XLA_FLAGS hint when the host has fewer);
+    ``None``, 0 or 1 returns None — the caller's cue to stay on the
+    single-device vmap path.
+    """
+    avail = jax.local_device_count()
+    if devices == "auto":
+        devices = avail
+    devices = int(devices or 0)
+    if devices <= 1:
+        return None
+    if devices > avail:
+        raise ValueError(
+            f"seed_mesh: asked for {devices} devices but only {avail} are "
+            f"visible; on a CPU host, export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={devices} "
+            f"before importing jax to fake a multi-device topology")
+    return make_mesh((devices,), ("seed",))
+
+
 def gossip_axes(mesh) -> tuple[str, ...]:
     """Which mesh axes carry the gossip node dimension."""
     return ("pod",) if "pod" in mesh.axis_names else ("data",)

@@ -21,7 +21,7 @@ import json
 from typing import Any
 
 from repro.api import RunSpec
-from repro.sweep import DEFAULT_STORE, SweepSpec, sweep
+from repro.sweep import DEFAULT_STORE, SweepSpec, SweepStoreMiss, sweep
 
 
 def _value(text: str) -> Any:
@@ -98,6 +98,11 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--force-vmap", action="store_true",
                     help="error instead of falling back on seed-dependent "
                          "stages")
+    ap.add_argument("--devices", default=None, metavar="N|auto",
+                    help="shard the vmapped seed axis over N local devices "
+                         "(shard_map over a ('seed',) mesh; 'auto' = "
+                         "jax.local_device_count(), falling back to plain "
+                         "vmap on a 1-device host)")
     # store
     ap.add_argument("--store", default=DEFAULT_STORE)
     ap.add_argument("--no-store", action="store_true")
@@ -120,14 +125,23 @@ def main(argv: list[str] | None = None) -> dict:
         stream_options=parse_opts(args.stream_opt))
     vectorize = (False if args.no_vmap
                  else True if args.force_vmap else None)
+    devices = (None if args.devices is None
+               else "auto" if args.devices == "auto" else int(args.devices))
     spec = SweepSpec(
         base=base, axes=axes,
         seeds=tuple(int(s) for s in args.seeds.split(",")),
         engine=args.engine, name=args.name,
         chunk_rounds=args.chunk_rounds,
-        compute_regret=not args.no_regret, vectorize_seeds=vectorize)
-    out = sweep(spec, store=None if args.no_store else args.store,
-                reuse=args.from_store, verbose=True)
+        compute_regret=not args.no_regret, vectorize_seeds=vectorize,
+        devices=devices)
+    try:
+        out = sweep(spec, store=None if args.no_store else args.store,
+                    reuse=args.from_store, verbose=True,
+                    require_store=args.from_store)
+    except SweepStoreMiss as e:
+        # --from-store promises regeneration WITHOUT re-running; dying with
+        # the miss explained beats silently emitting an empty/recomputed table
+        raise SystemExit(f"error: {e}")
 
     rows = out.aggregate(args.metric)
     print(json.dumps(out.summary(), indent=1))

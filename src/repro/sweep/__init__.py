@@ -27,10 +27,10 @@ from repro.sweep.spec import SweepPoint, SweepSpec
 from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
                                git_sha, record_key, result_from_record,
                                spec_from_record, spec_record)
-from repro.sweep.engine import SweepResult, sweep
+from repro.sweep.engine import SweepResult, SweepStoreMiss, sweep
 
 __all__ = [
-    "SweepSpec", "SweepPoint", "SweepResult", "sweep",
+    "SweepSpec", "SweepPoint", "SweepResult", "SweepStoreMiss", "sweep",
     "SweepStore", "DEFAULT_STORE", "aggregate_records", "git_sha",
     "record_key", "result_from_record", "spec_record", "spec_from_record",
 ]

@@ -41,7 +41,13 @@ from repro.sweep.spec import SweepPoint, SweepSpec
 from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
                                record_key, spec_record)
 
-__all__ = ["sweep", "SweepResult"]
+__all__ = ["sweep", "SweepResult", "SweepStoreMiss"]
+
+
+class SweepStoreMiss(RuntimeError):
+    """Raised by ``sweep(reuse=True, require_store=True)`` when the store has
+    no matching record for one or more (point, seed) identities — instead of
+    silently re-running (or worse, emitting a figure from nothing)."""
 
 
 def _metric(res: RunResult, value: str | Callable) -> Any:
@@ -117,11 +123,15 @@ def _run_point(point: SweepPoint, spec: SweepSpec, *,
         vec = len(seeds) > 1 and seed_vectorizable(point.spec, seeds)
     if vec:
         # spec.vectorize_seeds=None means WE just verified vectorizability;
-        # an explicit True still lets run_batch's own check raise
+        # an explicit True still lets run_batch's own check raise.
+        # seed_vectorizable gates the sharded path exactly like the vmapped
+        # one — a seed-dependent stage falls back to sequential runs below
+        # whatever spec.devices asks for.
         return run_batch(point.spec, seeds, engine=spec.engine,
                          chunk_rounds=spec.chunk_rounds,
                          compute_regret=spec.compute_regret, warmup=warmup,
-                         check_vectorizable=spec.vectorize_seeds is not None)
+                         check_vectorizable=spec.vectorize_seeds is not None,
+                         devices=spec.devices)
     return [run(point.spec.replace(seed=s), engine=spec.engine,
                 chunk_rounds=spec.chunk_rounds,
                 compute_regret=spec.compute_regret, warmup=warmup)
@@ -130,7 +140,8 @@ def _run_point(point: SweepPoint, spec: SweepSpec, *,
 
 def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
           reuse: bool = False, warmup: bool = True,
-          include_state: bool = False, verbose: bool = False) -> SweepResult:
+          include_state: bool = False, verbose: bool = False,
+          require_store: bool = False) -> SweepResult:
     """Run (or reload) every grid point x seed; persist; return SweepResult.
 
     store:   store root (or SweepStore, or None to skip persistence).
@@ -139,37 +150,66 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
              without-re-running path.
     warmup:  compile each point's chunk outside its timed region.
     include_state: persist the raw engine state inside each record.
+    require_store: with ``reuse``, raise `SweepStoreMiss` (naming the
+             missing points) instead of re-running anything when the store
+             cannot serve every point — the contract behind --from-store.
     """
+    if require_store and not reuse:
+        raise ValueError(
+            "require_store=True is only meaningful with reuse=True — "
+            "without reuse every point re-runs, the exact thing "
+            "require_store promises to prevent")
     store_obj = (store if isinstance(store, SweepStore)
                  else SweepStore(store) if store is not None else None)
     name = spec.store_name
     existing = store_obj.load(name) if store_obj else []
-    # new identities append in O(1); only genuine replacements pay the
-    # full-file rewrite of upsert (keeps a P-point sweep O(P), not O(P^2))
+    # every finished point APPENDS immediately (O(1), durable under a
+    # mid-sweep crash); identity collisions are resolved on read (load keeps
+    # the last write) and compacted away once at the end of the sweep —
+    # a P-point sweep stays O(P) I/O, not O(P^2)
     existing_keys = {record_key(r) for r in existing}
 
+    def _cached(point: SweepPoint) -> list[dict] | None:
+        """The point's stored records (one per seed), or None on any miss."""
+        if store_obj is None:
+            return None
+        found = [store_obj.lookup(
+                     name, coords=point.coords, seed=s, engine=spec.engine,
+                     spec=spec_record(point.spec.replace(seed=s)),
+                     records=existing)
+                 for s in spec.seeds]
+        # a record stored by a compute_regret=False sweep has no regret
+        # trajectory — it cannot serve a sweep that asks for one
+        if spec.compute_regret:
+            found = [r if r is not None
+                     and r["result"].get("regret") is not None else None
+                     for r in found]
+        return found if all(r is not None for r in found) else None
+
     points = spec.points()
+    cached_points = [_cached(p) if reuse else None for p in points]
+    if reuse and require_store:
+        missing = [p.label() for p, c in zip(points, cached_points)
+                   if c is None]
+        if missing:
+            where = (store_obj.path(name) if store_obj is not None
+                     else "no store configured")
+            shown = ", ".join(missing[:5]) + ("..." if len(missing) > 5
+                                              else "")
+            raise SweepStoreMiss(
+                f"sweep {name!r}: the store ({where}) has no record "
+                f"matching the resolved spec for {len(missing)}/"
+                f"{len(points)} point(s) [{shown}] x seeds "
+                f"{tuple(spec.seeds)}; run once without --from-store to "
+                f"populate it (records also go stale when the base spec "
+                f"changes)")
+
     results: list[list[RunResult]] = []
     records: list[dict] = []
+    needs_compaction = False
     ran = loaded = 0
     t0 = time.time()
-    for point in points:
-        cached = None
-        if reuse and store_obj is not None:
-            found = [store_obj.lookup(
-                         name, coords=point.coords, seed=s,
-                         engine=spec.engine,
-                         spec=spec_record(point.spec.replace(seed=s)),
-                         records=existing)
-                     for s in spec.seeds]
-            # a record stored by a compute_regret=False sweep has no regret
-            # trajectory — it cannot serve a sweep that asks for one
-            if spec.compute_regret:
-                found = [r if r is not None
-                         and r["result"].get("regret") is not None else None
-                         for r in found]
-            if all(r is not None for r in found):
-                cached = found
+    for point, cached in zip(points, cached_points):
         if cached is not None:
             loaded += 1
             point_results = [RunResult.from_record(r["result"])
@@ -189,11 +229,10 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
                  "result": res.to_record(include_state=include_state)}
                 for s, res in zip(spec.seeds, point_results)]
             if store_obj is not None:
+                store_obj.append(name, point_records)
                 fresh_keys = [record_key(r) for r in point_records]
                 if any(k in existing_keys for k in fresh_keys):
-                    store_obj.upsert(name, point_records)
-                else:
-                    store_obj.append(name, point_records)
+                    needs_compaction = True
                 existing_keys.update(fresh_keys)
         if verbose:
             accs = [r.accuracy for r in point_results]
@@ -202,6 +241,8 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
                   f"{len(point_results)} seeds, acc={accs}")
         results.append(point_results)
         records.extend(point_records)
+    if store_obj is not None and needs_compaction:
+        store_obj.compact(name)
     return SweepResult(spec=spec, points=points, results=results,
                        records=records, store=store_obj,
                        wall_clock=time.time() - t0,

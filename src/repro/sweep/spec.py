@@ -75,6 +75,11 @@ class SweepSpec:
     vectorize_seeds: True forces the vmapped path (error when impossible),
              False forces sequential per-seed run() calls, None (default)
              picks automatically per point.
+    devices: shard the vmapped seed axis over this many local devices
+             (`repro.api.run_batch(devices=)` — shard_map over a ("seed",)
+             mesh, S padded to a multiple of the device count). "auto" uses
+             every local device; None (default) / 1 stays on the
+             single-device vmap. Ignored by the sequential fallback.
     """
 
     base: RunSpec
@@ -85,10 +90,16 @@ class SweepSpec:
     chunk_rounds: int = 512
     compute_regret: bool = True
     vectorize_seeds: bool | None = None
+    devices: int | str | None = None
 
     def __post_init__(self):
         if not self.seeds:
             raise ValueError("SweepSpec needs at least one seed")
+        if self.devices is not None and self.devices != "auto":
+            if not isinstance(self.devices, int) or self.devices < 1:
+                raise ValueError(
+                    f"devices must be None, 'auto' or a positive int, got "
+                    f"{self.devices!r}")
         if len(set(self.seeds)) != len(tuple(self.seeds)):
             raise ValueError(f"duplicate seeds: {tuple(self.seeds)}")
         if self.engine not in ("sim", "dist"):

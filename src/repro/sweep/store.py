@@ -188,24 +188,75 @@ class SweepStore:
                       if f.endswith(".jsonl"))
 
     def load(self, name: str) -> list[dict]:
+        """All records, deduped by identity — the LAST write wins.
+
+        The file is an append-first log: the sweep engine appends refreshed
+        records immediately (durability) and compacts with `upsert` at the
+        end of the sweep. Deduping on read means a crash between those two
+        steps never surfaces duplicate (or stale) identities to readers.
+        """
         path = self.path(name)
         if not os.path.exists(path):
             return []
         with open(path) as f:
-            return [json.loads(line) for line in f if line.strip()]
+            lines = [line for line in f if line.strip()]
+        rows = []
+        for i, line in enumerate(lines):
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    break   # torn trailing line from a crashed append — the
+                    #         record is lost but the store stays readable
+                raise       # a torn MIDDLE line is real corruption: surface it
+        by_key = {record_key(r): r for r in rows}   # later rows replace earlier
+        return list(by_key.values())
 
     def keys(self, name: str) -> set:
         """Identity keys of every stored record (see `record_key`)."""
         return {record_key(r) for r in self.load(name)}
 
     def append(self, name: str, records: Iterable[dict]) -> None:
-        """Raw append — callers must know the identities are fresh (the
-        sweep engine checks against `keys` and only then takes this O(1)
-        path instead of the full-rewrite `upsert`)."""
+        """O(1) append. Safe even for colliding identities — `load` keeps
+        the last write per identity — but the file grows until a compacting
+        `upsert`; the sweep engine appends every record immediately and
+        compacts once per sweep."""
         os.makedirs(self.root, exist_ok=True)
-        with open(self.path(name), "a") as f:
+        path = self.path(name)
+        self._heal_torn_tail(path)
+        with open(path, "a") as f:
             for rec in records:
                 f.write(json.dumps(rec) + "\n")
+
+    @staticmethod
+    def _heal_torn_tail(path: str) -> None:
+        """Drop a partial trailing line left by a crashed append.
+
+        Without this, the next append would fuse onto the torn fragment and
+        turn it into an invalid MID-file line — which `load` rightly treats
+        as corruption. A line write can only tear into a prefix, so 'last
+        byte is newline' iff the last line is whole; the O(file) repair
+        rewrite runs only in the rare post-crash case.
+        """
+        try:
+            if os.path.getsize(path) == 0:
+                return
+        except OSError:
+            return
+        with open(path, "rb") as f:
+            f.seek(-1, os.SEEK_END)
+            if f.read(1) == b"\n":
+                return
+            f.seek(0)
+            data = f.read()
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data[:data.rfind(b"\n") + 1])
+        os.replace(tmp, path)
+
+    def compact(self, name: str) -> None:
+        """Rewrite the log without superseded duplicate identities."""
+        self.upsert(name, [])
 
     def upsert(self, name: str, records: Iterable[dict]) -> None:
         """Append records, REPLACING stored rows with the same identity."""
@@ -228,31 +279,37 @@ class SweepStore:
         When ``spec`` is given the record's resolved spec must match too —
         a changed base spec never silently reuses stale results. Records
         whose spec carries instance markers are never matched.
+
+        Matching canonicalizes ints to floats exactly like `record_key`,
+        so a record written from CLI-parsed values (eps=1) serves a reuse
+        lookup with Python-API values (eps=1.0) — one identity for writes
+        AND reads.
         """
-        want_coords = _normalize(coords)
-        want_spec = None if spec is None else _normalize(spec)
+        want_coords = _canon(_normalize(coords))
+        want_spec = None if spec is None else _canon(_normalize(spec))
         for rec in (self.load(name) if records is None else records):
             if rec.get("seed") != seed or rec.get("engine") != engine:
                 continue
-            if _normalize(rec.get("coords") or {}) != want_coords:
+            if _canon(_normalize(rec.get("coords") or {})) != want_coords:
                 continue
             rspec = _normalize(rec.get("spec") or {})
             if any(isinstance(v, dict) and "__instance__" in v
                    for v in rspec.values()):
                 continue
-            if want_spec is not None and rspec != want_spec:
+            if want_spec is not None and _canon(rspec) != want_spec:
                 continue
             return rec
         return None
 
     def query(self, name: str, **filters: Any) -> list[dict]:
-        """Records whose coords (or seed/engine) match every filter."""
+        """Records whose coords (or seed/engine) match every filter
+        (int/float canonicalized like `lookup`)."""
         out = []
         for rec in self.load(name):
             coords = rec.get("coords") or {}
             view = {**coords, "seed": rec.get("seed"),
                     "engine": rec.get("engine")}
-            if all(_normalize(view.get(k)) == _normalize(v)
+            if all(_canon(_normalize(view.get(k))) == _canon(_normalize(v))
                    for k, v in filters.items()):
                 out.append(rec)
         return out

@@ -1,0 +1,275 @@
+"""Device-sharded seed axis — shard_map over a ("seed",) mesh.
+
+The multi-device equivalence tests run in subprocesses with 8 fake CPU
+devices (XLA_FLAGS=--xla_force_host_platform_device_count=8; the main
+pytest process keeps the real 1-device view). The acceptance contract:
+
+  * sharded per-seed trajectories are BIT-identical to the single-device
+    vmap and to sequential `run()` — Laplace noise on, delay in {0, 2},
+    both engines;
+  * pad-and-mask seed counts work: S=5 on 4 devices matches sequential
+    `run()` per seed, pad seeds never leak into any trajectory/aggregate;
+  * checkpoints cross device counts: save on 4 devices, resume on 1
+    (and the reverse) bit-identically.
+
+The in-process tests cover the 1-device behavior: graceful fallback to the
+vmap path, the error surfaces, and the SweepSpec/CLI threading.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import RunSpec, run, run_batch
+from repro.launch.mesh import seed_mesh
+from repro.sweep import SweepSpec, sweep
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = r"""
+import numpy as np
+from repro.api import RunSpec, run, run_batch
+
+FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity",
+          "eps_ledger")
+
+
+def spec(**kw):
+    base = dict(nodes=3, dim=16, horizon=14, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def assert_identical(a, b, what):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: field {f} diverged")
+    assert a.accuracy == b.accuracy, what
+"""
+
+
+def _run(code: str, timeout=520) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _PRELUDE + code],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# -- multi-device equivalence (subprocesses, 8 fake devices) -----------------
+
+@pytest.mark.slow
+def test_sharded_bit_identical_to_vmap_and_sequential():
+    """devices=8: per-seed trajectories match the single-device vmap AND
+    sequential run(), noise on, delay in {0, 2}, both engines (S=6 pads
+    to 8)."""
+    out = _run(r"""
+import jax
+assert jax.local_device_count() == 8
+seeds = list(range(6))
+for engine in ("sim", "dist"):
+    for delay in (0, 2):
+        sp = spec(delay=delay)
+        sharded = run_batch(sp, seeds, engine=engine, chunk_rounds=7,
+                            warmup=False, compute_regret=False, devices=8)
+        assert sharded[0].metrics["batch"]["devices"] == 8
+        assert sharded[0].metrics["batch"]["pad_seeds"] == 2
+        vmapped = run_batch(sp, seeds, engine=engine, chunk_rounds=7,
+                            warmup=False, compute_regret=False)
+        for s, sh, vm in zip(seeds, sharded, vmapped):
+            assert_identical(sh, vm, f"{engine}/delay={delay}/seed={s} "
+                                     "sharded vs vmap")
+            seq = run(sp.replace(seed=s), engine=engine, chunk_rounds=7,
+                      warmup=False, compute_regret=False)
+            assert_identical(sh, seq, f"{engine}/delay={delay}/seed={s} "
+                                      "sharded vs sequential")
+        print(engine, delay, "OK")
+""")
+    assert out.count("OK") == 4
+
+
+@pytest.mark.slow
+def test_pad_and_mask_non_divisible_seed_count():
+    """S=5 on 4 devices (pad to 8/
+    mask back to 5) matches sequential run() per seed on both engines."""
+    out = _run(r"""
+seeds = list(range(5))
+for engine in ("sim", "dist"):
+    sharded = run_batch(spec(delay=1), seeds, engine=engine, chunk_rounds=7,
+                        warmup=False, compute_regret=False, devices=4)
+    info = sharded[0].metrics["batch"]
+    assert info["devices"] == 4 and info["pad_seeds"] == 3, info
+    assert len(sharded) == 5                      # pad seeds masked out
+    assert {tuple(r.metrics["batch"]["seeds"]) for r in sharded} \
+        == {tuple(seeds)}
+    for s, sh in zip(seeds, sharded):
+        seq = run(spec(delay=1).replace(seed=s), engine=engine,
+                  chunk_rounds=7, warmup=False, compute_regret=False)
+        assert_identical(sh, seq, f"{engine}/seed={s}")
+    print(engine, "OK")
+""")
+    assert out.count("OK") == 2
+
+
+@pytest.mark.slow
+def test_checkpoint_crosses_device_counts():
+    """A batch checkpoint saved under 4 devices resumes bit-identically
+    under 1 (vmap), and a 1-device checkpoint resumes under 4 — the saved
+    state is the gathered, pad-stripped host array."""
+    out = _run(r"""
+import tempfile
+sp = spec(delay=1, horizon=24)
+seeds = (0, 1, 2, 3, 4)
+full = run_batch(sp, seeds, chunk_rounds=6, warmup=False,
+                 compute_regret=False)
+# save on 4 devices -> resume on 1
+ck = tempfile.mkdtemp()
+run_batch(sp, seeds, chunk_rounds=6, warmup=False, compute_regret=False,
+          checkpoint_every=12, checkpoint_dir=ck, horizon=12, devices=4)
+resumed = run_batch(sp, seeds, chunk_rounds=6, warmup=False,
+                    checkpoint_dir=ck, resume=True, compute_regret=False)
+assert resumed[0].start_round == 12
+for f, r in zip(full, resumed):
+    np.testing.assert_array_equal(f.final_w, r.final_w)
+    np.testing.assert_array_equal(np.asarray(f.correct)[12:],
+                                  np.asarray(r.correct))
+seq = run(sp.replace(seed=seeds[1]), chunk_rounds=24, warmup=False,
+          compute_regret=False)
+np.testing.assert_array_equal(seq.final_w, resumed[1].final_w)
+# save on 1 device -> resume on 4
+ck2 = tempfile.mkdtemp()
+run_batch(sp, seeds, chunk_rounds=6, warmup=False, compute_regret=False,
+          checkpoint_every=12, checkpoint_dir=ck2, horizon=12)
+resumed2 = run_batch(sp, seeds, chunk_rounds=6, warmup=False,
+                     checkpoint_dir=ck2, resume=True, compute_regret=False,
+                     devices=4)
+for f, r in zip(full, resumed2):
+    np.testing.assert_array_equal(f.final_w, r.final_w)
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sweep_engine_sharded_matches_vmap():
+    """SweepSpec(devices=) threads through sweep() and agrees with the
+    unsharded sweep per (point, seed); seed_vectorizable still gates the
+    sharded path into the sequential fallback."""
+    out = _run(r"""
+import numpy as np
+from repro.sweep import SweepSpec, sweep
+base = spec()
+sharded = sweep(SweepSpec(base=base, axes={"eps": (0.5, 1.0)},
+                          seeds=(0, 1, 2), chunk_rounds=7,
+                          compute_regret=False, devices=4),
+                store=None, warmup=False)
+plain = sweep(SweepSpec(base=base, axes={"eps": (0.5, 1.0)},
+                        seeds=(0, 1, 2), chunk_rounds=7,
+                        compute_regret=False),
+              store=None, warmup=False)
+for prs, vrs in zip(sharded.results, plain.results):
+    for a, b in zip(prs, vrs):
+        assert_identical(a, b, "sweep sharded vs vmap")
+# a seed-dependent stage must still fall back sequentially, devices or not
+dd = spec(delay=2, delay_dist="uniform", horizon=7)
+fb = sweep(SweepSpec(base=dd, seeds=(0, 1), chunk_rounds=7,
+                     compute_regret=False, devices=4),
+           store=None, warmup=False)
+for s, res in zip((0, 1), fb.results[0]):
+    seq = run(dd.replace(seed=s), chunk_rounds=7, warmup=False,
+              compute_regret=False)
+    assert_identical(res, seq, f"fallback seed={s}")
+print("OK")
+""")
+    assert "OK" in out
+
+
+# -- 1-device behavior (in-process) ------------------------------------------
+
+def _spec(**kw):
+    base = dict(nodes=3, dim=16, horizon=12, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def test_seed_mesh_single_device_fallback():
+    """On a 1-device host, 'auto'/1/None all mean: stay on the vmap path."""
+    import jax
+    if jax.local_device_count() != 1:
+        pytest.skip("needs the default 1-device test process")
+    assert seed_mesh(None) is None
+    assert seed_mesh(0) is None
+    assert seed_mesh(1) is None
+    assert seed_mesh("auto") is None
+
+
+def test_seed_mesh_too_many_devices_errors():
+    import jax
+    want = jax.local_device_count() + 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        seed_mesh(want)
+
+
+def test_run_batch_devices_auto_graceful_on_one_device():
+    """devices='auto' on a 1-device host is exactly the vmap path."""
+    import jax
+    import numpy as np
+    if jax.local_device_count() != 1:
+        pytest.skip("exercises the 1-device fallback specifically")
+    sp = _spec()
+    auto = run_batch(sp, (0, 1), chunk_rounds=6, warmup=False,
+                     compute_regret=False, devices="auto")
+    plain = run_batch(sp, (0, 1), chunk_rounds=6, warmup=False,
+                      compute_regret=False)
+    for a, b in zip(auto, plain):
+        np.testing.assert_array_equal(a.final_w, b.final_w)
+        np.testing.assert_array_equal(np.asarray(a.loss),
+                                      np.asarray(b.loss))
+    assert auto[0].metrics["batch"]["devices"] == 1
+    assert auto[0].metrics["batch"]["pad_seeds"] == 0
+
+
+def test_run_batch_rejects_mesh_without_seed_axis():
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="'seed' axis"):
+        run_batch(_spec(), (0, 1), mesh=mesh, chunk_rounds=6, warmup=False)
+
+
+def test_sweepspec_devices_validation():
+    SweepSpec(base=_spec(), devices=None)
+    SweepSpec(base=_spec(), devices="auto")
+    SweepSpec(base=_spec(), devices=4)
+    with pytest.raises(ValueError, match="devices"):
+        SweepSpec(base=_spec(), devices=0)
+    with pytest.raises(ValueError, match="devices"):
+        SweepSpec(base=_spec(), devices="many")
+
+
+def test_sweep_devices_auto_on_one_device():
+    """sweep(devices='auto') on a 1-device host falls back to vmap and still
+    matches sequential run() per seed."""
+    import numpy as np
+    sw = SweepSpec(base=_spec(), seeds=(0, 1), chunk_rounds=6,
+                   compute_regret=False, devices="auto")
+    out = sweep(sw, store=None, warmup=False)
+    for s, res in zip((0, 1), out.results[0]):
+        seq = run(_spec().replace(seed=s), chunk_rounds=6, warmup=False,
+                  compute_regret=False)
+        np.testing.assert_array_equal(res.final_w, seq.final_w)
+
+
+def test_cli_devices_parsing(tmp_path):
+    from repro.launch.sweep import main
+    out = main(["--nodes", "3", "--dim", "16", "--horizon", "6",
+                "--axis", "eps=0.5", "--seeds", "0,1",
+                "--chunk-rounds", "6", "--no-regret", "--devices", "auto",
+                "--store", str(tmp_path), "--name", "t_dev"])
+    assert out["summary"]["ran_points"] == 1

@@ -209,9 +209,66 @@ def test_sweep_end_to_end_with_store(tmp_path):
         for ra, rb in zip(a, b):
             _assert_results_equal(ra, rb, regret=False)
 
-    # re-running WITHOUT reuse upserts — no duplicate records
+    # re-running WITHOUT reuse upserts — no duplicate records, and the
+    # end-of-sweep compaction leaves the file itself duplicate-free
     sweep(sw, store=str(tmp_path), warmup=False)
     assert len(store.load("t_e2e")) == 4
+    with open(store.path("t_e2e")) as f:
+        assert sum(1 for line in f if line.strip()) == 4
+
+
+def test_store_append_first_crash_durability(tmp_path):
+    """Refreshed records persist the moment their point finishes (append),
+    and a 'crash' before the end-of-sweep compaction still reads back
+    deduped with the LAST write winning."""
+    store = SweepStore(str(tmp_path))
+    old = {"coords": {"eps": 1.0}, "seed": 0, "engine": "sim",
+           "spec": {"lam": 0.0}, "result": {"accuracy": 0.1}}
+    new = dict(old, result={"accuracy": 0.9})
+    store.append("t_crash", [old])
+    store.append("t_crash", [new])        # same identity, no compaction yet
+    rows = store.load("t_crash")
+    assert len(rows) == 1 and rows[0]["result"]["accuracy"] == 0.9
+    store.compact("t_crash")
+    with open(store.path("t_crash")) as f:
+        assert sum(1 for line in f if line.strip()) == 1
+    assert store.load("t_crash")[0]["result"]["accuracy"] == 0.9
+
+
+def test_store_tolerates_torn_trailing_line(tmp_path):
+    """A crash mid-append leaves a truncated final line; load() drops that
+    one record and keeps the store readable. A torn MIDDLE line is real
+    corruption and still raises."""
+    store = SweepStore(str(tmp_path))
+    rec = {"coords": {"eps": 1.0}, "seed": 0, "engine": "sim",
+           "spec": {}, "result": {"accuracy": 0.5}}
+    store.append("t_torn", [rec])
+    with open(store.path("t_torn"), "a") as f:
+        f.write('{"coords": {"eps": 2.0}, "seed": 1, "eng')   # torn write
+    rows = store.load("t_torn")
+    assert len(rows) == 1 and rows[0]["seed"] == 0
+    with open(store.path("t_torn"), "a") as f:
+        f.write("\n" + json.dumps(dict(rec, seed=2)) + "\n")
+    with pytest.raises(json.JSONDecodeError):      # torn line now mid-file
+        store.load("t_torn")
+
+
+def test_store_append_heals_torn_tail(tmp_path):
+    """Appending after a crash must not fuse the new record onto the torn
+    fragment — append repairs the tail first, so the store stays readable
+    and only the torn record is lost."""
+    store = SweepStore(str(tmp_path))
+    rec = {"coords": {"eps": 1.0}, "seed": 0, "engine": "sim",
+           "spec": {}, "result": {"accuracy": 0.5}}
+    store.append("t_heal", [rec])
+    with open(store.path("t_heal"), "a") as f:
+        f.write('{"coords": {"eps": 2.0}, "seed": 1')       # torn, no \n
+    store.append("t_heal", [dict(rec, seed=2)])
+    rows = store.load("t_heal")
+    assert sorted(r["seed"] for r in rows) == [0, 2]
+    store.compact("t_heal")
+    with open(store.path("t_heal")) as f:
+        assert sum(1 for line in f if line.strip()) == 2
 
 
 def test_store_reuse_requires_regret_when_requested(tmp_path):
@@ -290,6 +347,66 @@ def test_cli_axis_parsing():
         "nodes,horizon", ((4, 8), (8, 4)))
     assert parse_axis("mixer=ring,complete") == ("mixer",
                                                  ("ring", "complete"))
+
+
+def test_store_lookup_int_float_identity(tmp_path):
+    """Records written with CLI-parsed int values (eps=1) must serve a
+    reuse lookup with float values (eps=1.0) — lookup canonicalizes like
+    record_key, so one identity governs writes AND reads."""
+    from repro.launch.sweep import main
+    argv = ["--nodes", "3", "--dim", "16", "--horizon", "12",
+            "--seeds", "0", "--chunk-rounds", "12", "--no-regret",
+            "--store", str(tmp_path), "--name", "t_if"]
+    main(argv + ["--axis", "eps=1"])                 # int axis value
+    out = main(argv + ["--axis", "eps=1.0", "--from-store"])  # float
+    assert out["summary"]["loaded_points"] == 1
+    assert out["summary"]["ran_points"] == 0
+    store = SweepStore(str(tmp_path))
+    assert len(store.query("t_if", eps=1)) == 1      # query canonicalizes too
+    assert len(store.query("t_if", eps=1.0)) == 1
+
+
+def test_require_store_raises_on_missing_records(tmp_path):
+    """reuse + require_store refuses to run anything when the store cannot
+    serve every (point, seed) — the contract behind --from-store."""
+    from repro.sweep import SweepStoreMiss
+    sw = SweepSpec(base=_spec(horizon=12), axes={"eps": (0.5, 1.0)},
+                   seeds=(0, 1), name="t_req", chunk_rounds=12,
+                   compute_regret=False)
+    with pytest.raises(SweepStoreMiss, match="no record"):
+        sweep(sw, store=str(tmp_path), reuse=True, require_store=True,
+              warmup=False)
+    assert not SweepStore(str(tmp_path)).load("t_req")   # nothing ran
+    sweep(sw, store=str(tmp_path), warmup=False)          # populate
+    out = sweep(sw, store=str(tmp_path), reuse=True, require_store=True,
+                warmup=False)
+    assert out.ran_points == 0 and out.loaded_points == 2
+    # a changed base spec goes stale -> miss again, named in the error
+    with pytest.raises(SweepStoreMiss, match="eps=0.5"):
+        sweep(sw.replace(base=_spec(horizon=12, lam=0.5)),
+              store=str(tmp_path), reuse=True, require_store=True,
+              warmup=False)
+
+
+def test_require_store_without_reuse_rejected(tmp_path):
+    sw = SweepSpec(base=_spec(horizon=12), seeds=(0,), chunk_rounds=12)
+    with pytest.raises(ValueError, match="reuse=True"):
+        sweep(sw, store=str(tmp_path), require_store=True, warmup=False)
+
+
+def test_cli_from_store_empty_store_errors(tmp_path):
+    """--from-store on an empty/stale store dies with a clear message
+    instead of silently re-running (or emitting an empty figure)."""
+    from repro.launch.sweep import main
+    argv = ["--nodes", "3", "--dim", "16", "--horizon", "12",
+            "--axis", "eps=0.5", "--seeds", "0,1", "--chunk-rounds", "12",
+            "--no-regret", "--store", str(tmp_path), "--name", "t_fs"]
+    with pytest.raises(SystemExit, match="no record"):
+        main(argv + ["--from-store"])
+    main(argv)                                   # populate the store
+    out = main(argv + ["--from-store"])          # now served entirely
+    assert out["summary"]["loaded_points"] == 1
+    assert out["summary"]["ran_points"] == 0
 
 
 def test_cli_main_smoke(tmp_path):
