@@ -1,0 +1,123 @@
+"""Serving-layer bench: predict-step latency + bursty-replay throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke] \
+        [--bench-path BENCH_serve.json]
+
+Two measurements, both with honest wall clocks (`jax.block_until_ready`
+before every stamp):
+
+  predict_step   the jitted batched predict in isolation — p50/p99 ms per
+                 max_batch-shaped call against a fixed snapshot (compile
+                 excluded via one warmup call).
+  replay         the assembled `ServeService` under the `bursty` stream's
+                 heavy-tailed arrivals while the background trainer keeps
+                 publishing — sustained QPS, end-to-end p50/p99 latency,
+                 staleness-in-rounds, shed/refused counts, and the
+                 bit-identity verdict of a served response against a fresh
+                 reference `repro.api.run` at its snapshot round.
+
+Writes BENCH_serve.json; `benchmarks/check_bench.py` gates
+``snapshot_identical``, every ``*_ms`` latency ceiling and the ``qps``
+floor against benchmarks/baselines/BENCH_serve.json in CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.api import RunSpec
+from repro.launch.serve import serve_social
+from repro.serve import ServeState
+
+
+def bench_predict_step(spec: RunSpec, *, max_batch: int,
+                       iters: int = 200) -> dict:
+    """Isolated jitted-predict latency against a fixed round-0 snapshot."""
+    state = ServeState(spec)
+    state.publish_initial()
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((max_batch, spec.dim)).astype(np.float32)
+    nodes = (np.arange(max_batch) % spec.nodes).astype(np.int32)
+    jax.block_until_ready(state.predict(feats, nodes)[:2])       # compile
+    lat = np.empty(iters)
+    for i in range(iters):
+        t0 = time.perf_counter()
+        margins, labels, _ = state.predict(feats, nodes)
+        jax.block_until_ready((margins, labels))
+        lat[i] = time.perf_counter() - t0
+    return {
+        "max_batch": max_batch,
+        "iters": iters,
+        "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 4),
+        "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 4),
+    }
+
+
+def run(*, smoke: bool = False,
+        bench_path: str = "BENCH_serve.json") -> dict:
+    if smoke:
+        shape = dict(nodes=4, dim=16, horizon=96, chunk_rounds=8,
+                     max_batch=8, ticks=64, warmup=False)
+    else:
+        shape = dict(nodes=8, dim=64, horizon=1024, chunk_rounds=64,
+                     max_batch=32, ticks=512)
+    spec = RunSpec(nodes=shape["nodes"], dim=shape["dim"],
+                   horizon=shape["horizon"], eps=10.0, alpha0=0.5, lam=0.01,
+                   stream="bursty")
+    step = bench_predict_step(spec, max_batch=shape["max_batch"],
+                              iters=50 if smoke else 200)
+    end_to_end = serve_social(
+        nodes=shape["nodes"], dim=shape["dim"], horizon=shape["horizon"],
+        eps=10.0, chunk_rounds=shape["chunk_rounds"],
+        max_batch=shape["max_batch"], max_wait_ms=0.5,
+        queue_capacity=4 * shape["max_batch"] * shape["nodes"],
+        ticks=shape["ticks"], warmup=shape.get("warmup", True))
+    adm, rep = end_to_end["admission"], end_to_end["replay"]
+    bench = {
+        "bench": "serve",
+        "scale": {k: shape[k] for k in
+                  ("nodes", "dim", "horizon", "chunk_rounds", "max_batch",
+                   "ticks")},
+        "snapshot_identical": end_to_end["snapshot_identical"],
+        "predict_step": step,
+        "replay": {
+            "qps": round(rep["qps"], 1),
+            "submitted": rep["submitted"],
+            "served": rep["served"],
+            "shed": rep["shed"],
+            "refused": rep["refused"],
+            "p50_latency_ms": adm["p50_latency_ms"],
+            "p99_latency_ms": adm["p99_latency_ms"],
+            "staleness_mean_rounds": adm["staleness_mean_rounds"],
+            "staleness_max_rounds": adm["staleness_max_rounds"],
+        },
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (seconds) for the CI serve-smoke job")
+    ap.add_argument("--bench-path", default="BENCH_serve.json")
+    args = ap.parse_args()
+    bench = run(smoke=args.smoke, bench_path=args.bench_path)
+    step, rep = bench["predict_step"], bench["replay"]
+    print(f"predict_step: p50={step['p50_ms']}ms p99={step['p99_ms']}ms "
+          f"(batch {step['max_batch']})")
+    print(f"replay: {rep['qps']} qps, latency p50={rep['p50_latency_ms']}ms "
+          f"p99={rep['p99_latency_ms']}ms, staleness "
+          f"mean={rep['staleness_mean_rounds']} "
+          f"max={rep['staleness_max_rounds']} rounds, "
+          f"{rep['shed']} shed / {rep['refused']} refused")
+    print(f"snapshot_identical: {bench['snapshot_identical']}")
+
+
+if __name__ == "__main__":
+    main()

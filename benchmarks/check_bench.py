@@ -10,7 +10,12 @@ freshly written BENCH_*.json against its committed baseline under
   * any ``speedup``-ish field (number) drops below ``tolerance`` x the
     baseline value — generous by default (0.25) because CI runners are
     noisy and slower than the dev container, but a vanished vectorization
-    win still trips it.
+    win still trips it;
+  * any ``qps`` throughput field drops below ``tolerance`` x baseline, or
+    any ``*_ms`` latency field climbs above baseline / ``tolerance`` —
+    the serving bench's sustained-QPS floor and latency ceiling
+    (BENCH_serve baselines are committed pre-softened for CI, so the
+    default tolerance leaves further headroom on top).
 
 Baseline fields that are null are skipped (e.g. the sharded timings on a
 1-device host, or a speedup too noise-bound to gate); fields present in
@@ -45,6 +50,16 @@ def _is_identity_key(key: str) -> bool:
 
 def _is_speedup_key(key: str) -> bool:
     return "speedup" in key
+
+
+def _is_rate_key(key: str) -> bool:
+    """Throughput floors: higher is better, gated like speedups."""
+    return key == "qps" or key.endswith("_qps")
+
+
+def _is_latency_key(key: str) -> bool:
+    """Latency ceilings (milliseconds): lower is better."""
+    return key.endswith("_ms")
 
 
 def _walk(tree, path=()):
@@ -92,11 +107,14 @@ def check_file(current_path: str, baseline_path: str,
                 failures.append(
                     f"{current_path}: {where} = {cur!r}, baseline "
                     f"{base_val!r} — the bit-identity guarantee regressed")
-        elif _is_speedup_key(key) and isinstance(base_val, (int, float)) \
+        elif (_is_speedup_key(key) or _is_rate_key(key)) \
+                and isinstance(base_val, (int, float)) \
                 and not isinstance(base_val, bool):
             cur = _get(current, path, key)
             checked += 1
             floor = base_val * tolerance
+            what = ("vectorization win" if _is_speedup_key(key)
+                    else "serving throughput")
             if not isinstance(cur, (int, float)) or isinstance(cur, bool):
                 failures.append(
                     f"{current_path}: {where} missing/non-numeric "
@@ -104,8 +122,22 @@ def check_file(current_path: str, baseline_path: str,
             elif cur < floor:
                 failures.append(
                     f"{current_path}: {where} = {cur} < {floor:.2f} "
-                    f"({tolerance} x baseline {base_val}) — vectorization "
-                    f"win regressed")
+                    f"({tolerance} x baseline {base_val}) — {what} "
+                    f"regressed")
+        elif _is_latency_key(key) and isinstance(base_val, (int, float)) \
+                and not isinstance(base_val, bool):
+            cur = _get(current, path, key)
+            checked += 1
+            ceiling = base_val / tolerance
+            if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+                failures.append(
+                    f"{current_path}: {where} missing/non-numeric "
+                    f"(baseline {base_val})")
+            elif cur > ceiling:
+                failures.append(
+                    f"{current_path}: {where} = {cur} > {ceiling:.2f} "
+                    f"(baseline {base_val} / tolerance {tolerance}) — "
+                    f"serving latency regressed")
     if checked == 0:
         failures.append(f"{baseline_path}: no identical/speedup fields to "
                         f"check — baseline is vacuous")

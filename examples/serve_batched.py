@@ -5,7 +5,7 @@ including SSM (O(1) state) and sliding-window archs.
 """
 import argparse
 
-from repro.launch.serve import serve
+from repro.launch.serve_lm import serve
 
 
 def main():

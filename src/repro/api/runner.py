@@ -314,6 +314,7 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         compute_regret: bool = True,
         warmup: bool = True,
         horizon: int | None = None,
+        on_chunk: Callable | None = None,
         step_fn: Callable | None = None,
         state: Any = None,
         batches: Iterator | None = None,
@@ -327,6 +328,17 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     are keyed per absolute round, so the data after resume is unchanged).
     ``warmup=True`` compiles the first chunk outside the timed region so
     rounds_per_sec measures steady-state execution.
+
+    ``on_chunk(round_end, eng_state, accountant)`` fires after every
+    completed chunk with the ABSOLUTE round it ended on, the engine state at
+    that round (host-synchronized — safe to publish or serialize) and the
+    live accountant; returning a truthy value stops the run early at that
+    chunk boundary (trajectories and the eps ledger cover only the completed
+    rounds). This is the snapshot-publication hook the serving layer
+    (`repro.serve`) hangs its background trainer on — a published snapshot
+    at round r is bit-identical to a fresh ``run(spec, horizon=r)`` because
+    streams are keyed per absolute round and chunking never changes the
+    per-round math.
 
     Custom mode (``step_fn=``): drives ``state, metrics = step_fn(state,
     next(batches))`` for ``horizon`` steps with the same tracking /
@@ -378,6 +390,7 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
 
     losses, wb_losses, sparsities, corrects = [], [], [], []
     xs_all, ys_all = [], []
+    done_to = start
     t0 = time.time()
     for a, b in zip(bounds[:-1], bounds[1:]):
         if a == bounds[0] and first_chunk is not None:
@@ -385,8 +398,12 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         else:
             xs, ys = stream.chunk(a, b)
         eng_state, outs = chunk_jit(eng_state, xs, ys)
-        jax.block_until_ready(outs.loss)
+        # block on the STATE too, not just the metric outputs — the timed
+        # region must cover the whole round computation, and on_chunk
+        # consumers (snapshot publication) need a finished state
+        jax.block_until_ready((eng_state, outs))
         accountant.step(b - a)
+        done_to = b
         losses.append(np.asarray(outs.loss))
         wb_losses.append(np.asarray(outs.w_bar_loss))
         sparsities.append(np.asarray(outs.sparsity))
@@ -406,7 +423,10 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         if (checkpoint_every and checkpoint_dir
                 and b % checkpoint_every == 0):
             save_checkpoint(checkpoint_dir, b, eng_state)
+        if on_chunk is not None and on_chunk(b, eng_state, accountant):
+            break
     wall = time.time() - t0
+    T = done_to                 # < requested horizon iff on_chunk stopped early
     if logger:
         logger.close()
 
@@ -658,7 +678,9 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         else:
             xs, ys = stacked_chunk(a, b)
         eng_state, outs = chunk_jit(eng_state, xs, ys)
-        jax.block_until_ready(outs.loss)
+        # block on state + outputs so the timed region measures the whole
+        # round computation, not just the dispatch of the metric arrays
+        jax.block_until_ready((eng_state, outs))
         accountant.step(b - a)
         # [:S] masks the pad seeds (duplicates of the last real seed) out of
         # every recorded trajectory; a no-op on the unsharded path

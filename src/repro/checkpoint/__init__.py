@@ -1,3 +1,5 @@
 from repro.checkpoint.store import save_checkpoint, restore_checkpoint, latest_step
+from repro.checkpoint.async_writer import AsyncCheckpointer
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]

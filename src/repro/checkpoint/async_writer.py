@@ -1,0 +1,99 @@
+"""Threaded checkpoint writes: snapshot-to-host now, disk I/O later.
+
+The serving layer publishes model snapshots every few rounds; blocking a
+publication on an npz write would stall both the trainer and (through the
+publication lock) the predictor. `AsyncCheckpointer` splits the two
+halves of `save_checkpoint`: the device->host gather happens synchronously
+in `save` (so the caller can keep mutating device state immediately), and
+the serialization + file write run on a single background thread. A
+bounded queue applies backpressure instead of letting pending host copies
+pile up; errors from the writer thread surface on the next `save`, `wait`
+or `close`.
+
+>>> import tempfile
+>>> import jax.numpy as jnp
+>>> from repro.checkpoint import AsyncCheckpointer, restore_checkpoint
+>>> d = tempfile.mkdtemp()
+>>> ck = AsyncCheckpointer(d)
+>>> ck.save(4, {"theta": jnp.ones((2, 3))})
+>>> ck.close()                              # flushes pending writes
+>>> restored = restore_checkpoint(d, {"theta": jnp.zeros((2, 3))}, step=4)
+>>> bool((restored["theta"] == 1.0).all())
+True
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any
+
+import jax
+
+from repro.checkpoint.store import save_checkpoint
+
+__all__ = ["AsyncCheckpointer"]
+
+_SENTINEL = object()
+
+
+class AsyncCheckpointer:
+    """Background-thread `save_checkpoint` with bounded backpressure."""
+
+    def __init__(self, directory: str, max_pending: int = 2):
+        if max_pending < 1:
+            raise ValueError("max_pending must be >= 1")
+        self.directory = directory
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._error: BaseException | None = None
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True,
+                                        name="repro-async-ckpt")
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _SENTINEL:
+                    return
+                step, host_tree = item
+                save_checkpoint(self.directory, step, host_tree)
+            except BaseException as err:     # surfaced on the caller thread
+                self._error = err
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.directory} failed") from err
+
+    def save(self, step: int, tree: Any) -> None:
+        """Gather ``tree`` to host NOW; enqueue the write. Blocks only when
+        ``max_pending`` writes are already queued (backpressure)."""
+        if self._closed:
+            raise RuntimeError("AsyncCheckpointer is closed")
+        self._raise_pending()
+        host_tree = jax.device_get(tree)
+        self._q.put((step, host_tree))
+
+    def wait(self) -> None:
+        """Block until every enqueued write hit disk; re-raise failures."""
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Flush pending writes and stop the worker (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_SENTINEL)
+        self._thread.join()
+        self._raise_pending()
+
+    def __enter__(self) -> "AsyncCheckpointer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,47 @@
+"""repro.serve — online prediction while the model keeps learning.
+
+The paper's premise is serving social predictions to millions of users
+from distributed data centers while the model trains online under
+differential privacy; this subsystem closes that loop on top of
+`repro.api`:
+
+  `ServeState`     — atomically-published model snapshots + a jitted,
+                     batch-shaped predict step (per-node ``w`` or the
+                     running average ``w_bar``).
+  `BackgroundTrainer` — continuous gossip/update rounds in fixed chunks
+                     (the runner's ``on_chunk`` hook), each chunk boundary
+                     publishing a fresh snapshot; serving-side eps ledger
+                     with an optional budget that, once spent, refuses
+                     further requests.
+  `AdmissionQueue`/`Batcher` — bounded queue, max-batch/max-wait batching,
+                     load shedding with counters.
+  `BurstyReplay`   — heavy-tailed request arrivals derived from the
+                     `bursty` stream's seeded Pareto burst process.
+  `ServeService`   — the assembled service (plus threaded checkpointing of
+                     the serving state via `repro.checkpoint`).
+
+>>> from repro.serve import ServeConfig, ServeService
+>>> from repro.api import RunSpec
+>>> spec = RunSpec(nodes=2, dim=4, horizon=8, eps=1.0, alpha0=0.5, lam=0.01,
+...                stream="bursty")
+>>> svc = ServeService(ServeConfig(spec=spec, train=False, warmup=False,
+...                                max_wait_ms=0.5)).start()
+>>> svc.predict([0.5] * 4, node=1).status
+'ok'
+>>> svc.stop()
+"""
+from repro.serve.admission import AdmissionQueue, Batcher, Request, ServeStats
+from repro.serve.replay import BurstyReplay
+from repro.serve.service import ServeConfig, ServeService
+from repro.serve.state import (ServeState, Snapshot, make_predict_fn,
+                               snapshot_from_state, verify_snapshot)
+from repro.serve.trainer import BackgroundTrainer
+
+__all__ = [
+    "AdmissionQueue", "Batcher", "Request", "ServeStats",
+    "BurstyReplay",
+    "ServeConfig", "ServeService",
+    "ServeState", "Snapshot", "make_predict_fn", "snapshot_from_state",
+    "verify_snapshot",
+    "BackgroundTrainer",
+]

@@ -1,0 +1,263 @@
+"""Admission control: bounded queue, max-batch/max-wait batcher, shedding.
+
+The front door of the serving layer. Requests enter a BOUNDED queue — a
+full queue sheds the request immediately (counted, never silently dropped)
+instead of letting latency grow without bound under a burst. A batcher
+thread drains the queue into fixed-size batches: it waits at most
+``max_wait_s`` after the first request of a batch (latency bound) and never
+packs more than ``max_batch`` (compute bound), then pads the batch to
+exactly ``max_batch`` so the jitted predict step compiles ONCE for one
+static shape.
+
+Requests are also REFUSED (distinct from shed) when the privacy ledger is
+exhausted — `repro.serve.trainer` flips the shared flag once the eps budget
+is spent, and from that point the service returns ``status='refused'``
+rather than serving a model whose release the budget no longer covers.
+
+>>> from repro.serve.admission import Request, ServeStats
+>>> stats = ServeStats()
+>>> stats.shed_total, stats.served_total
+(0, 0)
+>>> r = Request(features=[1.0, 0.0], node=0)
+>>> r.status, r.done()
+('pending', False)
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.serve.state import ServeState
+
+__all__ = ["Request", "ServeStats", "AdmissionQueue", "Batcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One prediction request and, once fulfilled, its response.
+
+    status: 'pending' -> 'ok' | 'shed' (queue full) | 'refused' (eps spent).
+    Timing: ``submitted_at``/``completed_at`` are perf_counter stamps taken
+    after the batch's arrays are host-ready (`jax.block_until_ready`), so
+    ``latency_s`` measures admission wait + batching wait + compute — not
+    async dispatch.
+    """
+
+    features: Any
+    node: int
+    status: str = "pending"
+    margin: float | None = None
+    label: float | None = None
+    snapshot_version: int | None = None
+    snapshot_round: int | None = None
+    train_round: int | None = None       # trainer progress at completion
+    eps_spent: float | None = None
+    submitted_at: float | None = None
+    completed_at: float | None = None
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: float | None = None) -> "Request":
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request not served within {timeout}s")
+        return self
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.completed_at is None or self.submitted_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+    @property
+    def staleness_rounds(self) -> int | None:
+        """How many rounds the served snapshot lagged the trainer."""
+        if self.train_round is None or self.snapshot_round is None:
+            return None
+        return self.train_round - self.snapshot_round
+
+    def _finish(self, status: str) -> None:
+        self.status = status
+        self.completed_at = time.perf_counter()
+        self._event.set()
+
+
+class ServeStats:
+    """Thread-safe serving counters + latency/staleness samples."""
+
+    def __init__(self, max_samples: int = 200_000):
+        self._lock = threading.Lock()
+        self.max_samples = max_samples
+        self.served_total = 0
+        self.shed_total = 0
+        self.refused_total = 0
+        self.batches_total = 0
+        self.latencies_s: list[float] = []
+        self.staleness: list[int] = []
+
+    def record_served(self, requests: list[Request]) -> None:
+        with self._lock:
+            self.served_total += len(requests)
+            self.batches_total += 1
+            room = self.max_samples - len(self.latencies_s)
+            for r in requests[:max(room, 0)]:
+                if r.latency_s is not None:
+                    self.latencies_s.append(r.latency_s)
+                if r.staleness_rounds is not None:
+                    self.staleness.append(r.staleness_rounds)
+
+    def record_shed(self, n: int = 1) -> None:
+        with self._lock:
+            self.shed_total += n
+
+    def record_refused(self, n: int = 1) -> None:
+        with self._lock:
+            self.refused_total += n
+
+    def summary(self) -> dict:
+        with self._lock:
+            lat = np.asarray(self.latencies_s, np.float64)
+            stale = np.asarray(self.staleness, np.float64)
+            out = {
+                "served": self.served_total,
+                "shed": self.shed_total,
+                "refused": self.refused_total,
+                "batches": self.batches_total,
+                "mean_batch": (self.served_total / self.batches_total
+                               if self.batches_total else None),
+            }
+        out["p50_latency_ms"] = (round(float(np.percentile(lat, 50)) * 1e3, 3)
+                                 if lat.size else None)
+        out["p99_latency_ms"] = (round(float(np.percentile(lat, 99)) * 1e3, 3)
+                                 if lat.size else None)
+        out["staleness_mean_rounds"] = (round(float(stale.mean()), 2)
+                                        if stale.size else None)
+        out["staleness_max_rounds"] = (int(stale.max()) if stale.size
+                                       else None)
+        return out
+
+
+class AdmissionQueue:
+    """Bounded FIFO with shed-on-full and refuse-on-exhaustion semantics."""
+
+    def __init__(self, capacity: int, stats: ServeStats):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self._q: queue.Queue[Request] = queue.Queue(maxsize=capacity)
+        self.capacity = capacity
+        self.stats = stats
+
+    def submit(self, request: Request, *, refuse: bool = False) -> Request:
+        request.submitted_at = time.perf_counter()
+        if refuse:
+            self.stats.record_refused()
+            request._finish("refused")
+            return request
+        try:
+            self._q.put_nowait(request)
+        except queue.Full:
+            self.stats.record_shed()
+            request._finish("shed")
+        return request
+
+    def get(self, timeout: float) -> Request | None:
+        try:
+            return self._q.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def empty(self) -> bool:
+        return self._q.empty()
+
+    def qsize(self) -> int:
+        return self._q.qsize()
+
+
+class Batcher(threading.Thread):
+    """Drains the admission queue into padded fixed-shape predict batches.
+
+    One batch = the first waiting request plus whatever else arrives within
+    ``max_wait_s`` of it (up to ``max_batch``). Features are packed into a
+    fresh (max_batch, n) buffer — rows beyond the real batch are zero — so
+    the jitted predict step sees ONE static shape for the whole lifetime of
+    the service, and the feature buffer can be donated on accelerators.
+    """
+
+    def __init__(self, state: ServeState, admission: AdmissionQueue,
+                 stats: ServeStats, *, max_batch: int = 32,
+                 max_wait_s: float = 0.002, exhausted=None,
+                 train_round=None, poll_s: float = 0.05):
+        super().__init__(daemon=True, name="repro-serve-batcher")
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.state = state
+        self.admission = admission
+        self.stats = stats
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.poll_s = poll_s
+        self._exhausted = exhausted or (lambda: False)
+        self._train_round = train_round or (lambda: None)
+        self._stopping = threading.Event()
+        self._dim = state.spec.dim
+
+    def stop(self) -> None:
+        self._stopping.set()
+
+    def run(self) -> None:
+        while True:
+            first = self.admission.get(timeout=self.poll_s)
+            if first is None:
+                if self._stopping.is_set() and self.admission.empty():
+                    return
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                nxt = self.admission.get(timeout=remaining)
+                if nxt is None:
+                    break
+                batch.append(nxt)
+            self._serve(batch)
+
+    def _serve(self, batch: list[Request]) -> None:
+        if self._exhausted():
+            # the budget ran out while these sat in the queue: refuse late
+            # rather than serve a release the ledger no longer covers
+            self.stats.record_refused(len(batch))
+            for r in batch:
+                r._finish("refused")
+            return
+        feats = np.zeros((self.max_batch, self._dim), np.float32)
+        nodes = np.zeros((self.max_batch,), np.int32)
+        for i, r in enumerate(batch):
+            feats[i] = np.asarray(r.features, np.float32)
+            nodes[i] = r.node
+        margins, labels, snap = self.state.predict(feats, nodes)
+        # latency must measure COMPUTE, not async dispatch: block before
+        # stamping completion times
+        jax.block_until_ready((margins, labels))
+        margins = np.asarray(margins)
+        labels = np.asarray(labels)
+        train_round = self._train_round()
+        for i, r in enumerate(batch):
+            r.margin = float(margins[i])
+            r.label = float(labels[i])
+            r.snapshot_version = snap.version
+            r.snapshot_round = snap.round
+            r.train_round = (train_round if train_round is not None
+                             else snap.round)
+            r.eps_spent = snap.eps_spent
+            r._finish("ok")
+        self.stats.record_served(batch)

@@ -1,0 +1,205 @@
+"""Published model snapshots + the jitted batched-predict step.
+
+The serving layer never reads the trainer's live engine state: the trainer
+PUBLISHES immutable :class:`Snapshot` objects (per-node primal models ``w``,
+the running average ``w_bar``, the round they were trained to and the eps
+spent releasing them) into a :class:`ServeState`, and every prediction is
+served against exactly one published snapshot — an atomic reference swap,
+so a request can never observe half of round t and half of round t+k.
+
+A snapshot at round r is bit-identical to ``repro.api.run(spec,
+horizon=r)``'s final state (streams are keyed per absolute round and
+chunking never changes the per-round math), which is what
+`verify_snapshot` — and the BENCH_serve.json ``snapshot_identical`` gate —
+check end-to-end.
+
+>>> import jax.numpy as jnp
+>>> from repro.api import RunSpec
+>>> from repro.serve.state import ServeState, Snapshot
+>>> spec = RunSpec(nodes=2, dim=4, horizon=8, eps=1.0, alpha0=0.5, lam=0.01)
+>>> state = ServeState(spec)
+>>> snap = state.publish_initial()        # round-0 model: w == 0
+>>> snap.round, snap.version, snap.eps_spent
+(0, 0, 0.0)
+>>> margins, labels, used = state.predict(jnp.ones((3, 4)),
+...                                       jnp.asarray([0, 1, 0]))
+>>> [float(m) for m in margins], [float(l) for l in labels], used.version
+([0.0, 0.0, 0.0], [1.0, 1.0, 1.0], 0)
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.spec import RunSpec
+
+__all__ = ["Snapshot", "ServeState", "make_predict_fn", "snapshot_from_state",
+           "verify_snapshot"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable published model: what a prediction is served against.
+
+    version:   monotone publication counter (0 = the initial round-0 model).
+    round:     absolute training round the snapshot was taken at.
+    theta:     (m, n) dual parameters at ``round`` (kept for audit/resume).
+    w:         (m, n) per-node primal models (local rule's Lasso prox).
+    w_bar:     (n,) running-average model (Definition-3's comparator view).
+    eps_spent: cumulative privacy guarantee charged for releasing this
+               snapshot (see `repro.serve.trainer` for the composition
+               policy).
+    """
+
+    version: int
+    round: int
+    theta: jax.Array
+    w: jax.Array
+    w_bar: jax.Array
+    eps_spent: float
+
+
+def snapshot_from_state(spec: RunSpec, engine: str, state, *, version: int,
+                        eps_spent: float) -> Snapshot:
+    """Snapshot of one engine state — the same primal-recovery convention as
+    `repro.api.runner`'s ``RunResult.final_w``, so a published snapshot and
+    a reference run at the same round agree to the bit."""
+    rule = spec.resolve_local_rule()
+    ctx = spec.omd_config().step_context(state.t)
+    theta = state.theta if engine == "sim" else state.theta["w"]
+    w = rule.primal(theta, ctx)
+    return Snapshot(version=version, round=int(state.t),
+                    theta=jnp.asarray(theta), w=jnp.asarray(w),
+                    w_bar=jnp.mean(w, axis=0), eps_spent=float(eps_spent))
+
+
+def make_predict_fn(mode: str = "node") -> Callable:
+    """The jitted batched-predict step: (w, w_bar, features, node_ids) ->
+    (margins, labels) for a (B, n) feature batch.
+
+    mode='node' serves each request against its data center's own model
+    row ``w[node]``; mode='average' serves everyone the consensus ``w_bar``.
+    The feature batch is DONATED (it is created per batch by the batcher and
+    never read again), so steady-state serving allocates no new buffer for
+    it. Labels follow the stream convention: +1 iff margin >= 0.
+    """
+    if mode == "node":
+        def predict(w, w_bar, features, node_ids):
+            rows = jnp.take(w, node_ids, axis=0)              # (B, n)
+            margins = jnp.sum(rows * features, axis=-1)
+            return margins, jnp.where(margins >= 0, 1.0, -1.0)
+    elif mode == "average":
+        def predict(w, w_bar, features, node_ids):
+            margins = jnp.sum(w_bar[None, :] * features, axis=-1)
+            return margins, jnp.where(margins >= 0, 1.0, -1.0)
+    else:
+        raise ValueError(f"unknown predict mode {mode!r}; "
+                         "expected 'node' or 'average'")
+    # donation is a no-op on CPU and would only emit a warning per compile;
+    # the buffer reuse matters on accelerator backends
+    donate = () if jax.default_backend() == "cpu" else (2,)
+    return jax.jit(predict, donate_argnums=donate)
+
+
+class ServeState:
+    """Current snapshot + a bounded history ring of recent publications.
+
+    ``publish`` swaps the current-snapshot reference under a lock (readers
+    see the old model or the new one, never a mix); the last ``keep``
+    snapshots stay reachable by version so a response recorded against
+    version v can be re-verified after later publications.
+    """
+
+    def __init__(self, spec: RunSpec, engine: str = "sim",
+                 mode: str = "node", keep: int = 8):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.spec = spec
+        self.engine = engine
+        self.mode = mode
+        self.keep = keep
+        self.predict_fn = make_predict_fn(mode)
+        self._lock = threading.Lock()
+        self._current: Snapshot | None = None
+        self._history: collections.OrderedDict[int, Snapshot] = \
+            collections.OrderedDict()
+        self._published = 0
+
+    # -- publication ---------------------------------------------------------
+
+    def publish(self, snapshot: Snapshot) -> None:
+        with self._lock:
+            self._current = snapshot
+            self._history[snapshot.version] = snapshot
+            while len(self._history) > self.keep:
+                self._history.popitem(last=False)
+            self._published += 1
+
+    def publish_initial(self) -> Snapshot:
+        """Publish the round-0 model (w = 0, eps 0) so the service answers
+        from the first request, before the trainer's first chunk lands."""
+        from repro.api.runner import make_chunk_program
+        _, init_fn = make_chunk_program(self.spec, self.engine)
+        state = init_fn(jax.random.PRNGKey(self.spec.seed))
+        snap = snapshot_from_state(self.spec, self.engine, state,
+                                   version=0, eps_spent=0.0)
+        self.publish(snap)
+        return snap
+
+    # -- reads ---------------------------------------------------------------
+
+    @property
+    def current(self) -> Snapshot | None:
+        with self._lock:
+            return self._current
+
+    @property
+    def published(self) -> int:
+        with self._lock:
+            return self._published
+
+    def snapshot(self, version: int) -> Snapshot | None:
+        """A recent snapshot by version (None once pruned past ``keep``)."""
+        with self._lock:
+            return self._history.get(version)
+
+    def predict(self, features, node_ids):
+        """(margins, labels, snapshot) for one feature batch against the
+        CURRENT snapshot — one atomic snapshot read per batch."""
+        snap = self.current
+        if snap is None:
+            raise RuntimeError("no snapshot published yet — call "
+                               "publish_initial() (ServeService.start does)")
+        feats = jnp.asarray(features, jnp.float32)
+        margins, labels = self.predict_fn(snap.w, snap.w_bar, feats,
+                                          jnp.asarray(node_ids, jnp.int32))
+        return margins, labels, snap
+
+
+def verify_snapshot(spec: RunSpec, engine: str, snapshot: Snapshot, *,
+                    chunk_rounds: int = 128) -> bool:
+    """True iff ``snapshot`` is bit-identical to a fresh reference run.
+
+    Re-runs ``repro.api.run(spec, horizon=snapshot.round)`` from scratch
+    (any chunking — the per-round math is chunk-invariant) and compares the
+    recovered primal models bit-for-bit. The serving acceptance gate: a
+    served prediction is exactly what the reference model at the recorded
+    snapshot round would have said.
+    """
+    from repro.api.runner import run
+    if snapshot.round == 0:
+        return bool(np.all(np.asarray(snapshot.w) == 0.0))
+    ref = run(spec, engine=engine, horizon=snapshot.round,
+              chunk_rounds=chunk_rounds, compute_regret=False, warmup=False)
+    ref_snap = snapshot_from_state(spec, engine, ref.final_state,
+                                   version=-1, eps_spent=0.0)
+    return (bool(np.array_equal(np.asarray(snapshot.w),
+                                np.asarray(ref_snap.w)))
+            and bool(np.array_equal(np.asarray(snapshot.w_bar),
+                                    np.asarray(ref_snap.w_bar))))

@@ -1,0 +1,181 @@
+"""Background trainer: continuous gossip rounds -> published snapshots.
+
+Wraps `repro.api.run`'s chunked scan in a thread and hangs on its
+``on_chunk`` hook: after every ``chunk_rounds`` gossip/update rounds the
+engine state is host-synchronized, turned into an immutable
+:class:`~repro.serve.state.Snapshot` and atomically published to the
+predictor — the serving side keeps answering against the previous snapshot
+until the swap, so training never blocks a prediction and a prediction
+never sees a half-updated model.
+
+Privacy accounting for SERVING is explicit about composition across
+publications:
+
+  * ``composition='parallel'`` (default, faithful to Theorem 1 when the
+    stream declares disjoint rounds): the cumulative guarantee stays flat
+    at eps_per_round — the broadcasts the accountant already covers are the
+    only releases.
+  * ``composition='sequential'`` is the pessimistic stance that every
+    published snapshot is a separate eps-DP release: the ledger grows by
+    eps_per_round per ROUND, so a finite ``eps_budget`` is eventually
+    SPENT. The trainer then stops advancing, refuses to publish the
+    over-budget snapshot, and flips ``exhausted`` — the admission layer
+    refuses every later request.
+
+>>> from repro.api import RunSpec
+>>> from repro.serve.state import ServeState
+>>> from repro.serve.trainer import BackgroundTrainer
+>>> spec = RunSpec(nodes=2, dim=8, horizon=12, eps=1.0, alpha0=0.5, lam=0.01,
+...                stream="bursty")
+>>> state = ServeState(spec)
+>>> _ = state.publish_initial()
+>>> tr = BackgroundTrainer(spec, state, chunk_rounds=4, warmup=False)
+>>> tr.run_blocking()                  # inline (no thread): 12 rounds
+>>> tr.round, state.current.round, state.published
+(12, 12, 4)
+>>> budget = BackgroundTrainer(spec, ServeState(spec), chunk_rounds=4,
+...                            composition="sequential", eps_budget=5.0,
+...                            warmup=False)
+>>> budget.run_blocking()              # 4 rounds cost 4.0, 8 would cost 8.0
+>>> budget.round, budget.exhausted
+(4, True)
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Callable
+
+from repro.api.runner import RunResult, run
+from repro.api.spec import RunSpec
+from repro.core.privacy import PrivacyAccountant
+from repro.serve.state import ServeState, Snapshot, snapshot_from_state
+
+__all__ = ["BackgroundTrainer"]
+
+
+class BackgroundTrainer:
+    """Advance gossip rounds in fixed chunks; publish snapshots atomically.
+
+    spec / engine / chunk_rounds: what `repro.api.run` drives — publication
+        happens at every chunk boundary, so ``chunk_rounds`` IS the
+        publication cadence (and the upper bound on served staleness while
+        the trainer keeps up).
+    composition / eps_budget: the serving-side privacy ledger (see module
+        docstring). ``eps_budget=None`` never refuses.
+    on_publish: optional callback fired with each published Snapshot —
+        the service uses it for async checkpointing.
+    """
+
+    def __init__(self, spec: RunSpec, state: ServeState, *,
+                 engine: str = "sim", chunk_rounds: int = 64,
+                 composition: str = "parallel",
+                 eps_budget: float | None = None,
+                 warmup: bool = True,
+                 on_publish: Callable[[Snapshot], None] | None = None):
+        if composition not in ("parallel", "sequential"):
+            raise ValueError(f"unknown composition {composition!r}")
+        self.spec = spec
+        self.state = state
+        self.engine = engine
+        self.chunk_rounds = chunk_rounds
+        self.composition = composition
+        self.eps_budget = eps_budget
+        self.warmup = warmup
+        self.on_publish = on_publish
+        stream = spec.resolve_stream()
+        mech = spec.resolve_mechanism()
+        self._accountant = PrivacyAccountant(
+            eps_per_round=spec.eps if mech.is_private else math.inf,
+            disjoint_streams=(composition == "parallel"
+                              and getattr(stream, "disjoint", False)))
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._round = 0
+        self._exhausted = False
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self.result: RunResult | None = None
+
+    # -- ledger --------------------------------------------------------------
+
+    def eps_at(self, rounds: int) -> float:
+        """Cumulative guarantee charged for serving a snapshot at ``rounds``
+        under this trainer's composition policy."""
+        return self._accountant.guarantee_at(rounds)
+
+    @property
+    def eps_spent(self) -> float:
+        return self.eps_at(self.round)
+
+    @property
+    def round(self) -> int:
+        with self._lock:
+            return self._round
+
+    @property
+    def exhausted(self) -> bool:
+        with self._lock:
+            return self._exhausted
+
+    # -- the on_chunk hook ---------------------------------------------------
+
+    def _on_chunk(self, round_end: int, eng_state, accountant) -> bool:
+        eps = self.eps_at(round_end)
+        if self.eps_budget is not None and eps > self.eps_budget:
+            # publishing this snapshot would overspend the ledger: drop it,
+            # stop training, and flip the flag the admission layer refuses on
+            with self._lock:
+                self._exhausted = True
+            return True
+        snap = snapshot_from_state(
+            self.spec, self.engine, eng_state,
+            version=self.state.published, eps_spent=eps)
+        self.state.publish(snap)
+        with self._lock:
+            self._round = round_end
+        if self.on_publish is not None:
+            self.on_publish(snap)
+        return self._stop.is_set()
+
+    def _drive(self) -> None:
+        try:
+            self.result = run(self.spec, engine=self.engine,
+                              chunk_rounds=self.chunk_rounds,
+                              compute_regret=False, warmup=self.warmup,
+                              on_chunk=self._on_chunk)
+        except BaseException as err:        # surfaced by join()
+            self._error = err
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def run_blocking(self) -> None:
+        """Drive the whole horizon inline (tests, doctests, benchmarks that
+        want training isolated from serving)."""
+        self._drive()
+        if self._error is not None:
+            raise self._error
+
+    def start(self) -> "BackgroundTrainer":
+        if self._thread is not None:
+            raise RuntimeError("trainer already started")
+        self._thread = threading.Thread(target=self._drive, daemon=True,
+                                        name="repro-serve-trainer")
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Request a stop at the next chunk boundary."""
+        self._stop.set()
+
+    def join(self, timeout: float | None = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise TimeoutError("trainer did not stop within timeout")
+        if self._error is not None:
+            raise self._error
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()

@@ -10,7 +10,7 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
-        "docs/streams.md", "docs/sweeps.md")
+        "docs/streams.md", "docs/sweeps.md", "docs/serving.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -25,6 +25,14 @@ API_MODULES = (
     "repro.sweep.spec",
     "repro.sweep.store",
     "repro.sweep.engine",
+    "repro.sweep.plot",
+    "repro.serve",
+    "repro.serve.state",
+    "repro.serve.admission",
+    "repro.serve.trainer",
+    "repro.serve.replay",
+    "repro.serve.service",
+    "repro.checkpoint.async_writer",
 )
 FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 

@@ -1,0 +1,213 @@
+"""repro.serve — snapshots, admission, background training, replay."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, run
+from repro.checkpoint import AsyncCheckpointer, restore_checkpoint
+from repro.serve import (BackgroundTrainer, BurstyReplay, ServeConfig,
+                         ServeService, ServeState, verify_snapshot)
+
+
+def _spec(**kw):
+    base = dict(nodes=4, dim=16, horizon=32, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="bursty")
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# -- runner on_chunk hook -----------------------------------------------------
+
+def test_on_chunk_fires_at_every_boundary_with_live_state():
+    spec = _spec()
+    seen = []
+    run(spec, chunk_rounds=8, warmup=False, compute_regret=False,
+        on_chunk=lambda b, st, acc: seen.append((b, int(st.t))) and False)
+    assert [b for b, _ in seen] == [8, 16, 24, 32]
+    assert all(b == t for b, t in seen)     # state is synchronized to b
+
+
+def test_on_chunk_truthy_stops_early_and_result_reflects_it():
+    spec = _spec()
+    res = run(spec, chunk_rounds=8, warmup=False, compute_regret=False,
+              on_chunk=lambda b, st, acc: b >= 16)
+    assert res.rounds == 16
+    # the early-stopped state equals a fresh run to the same horizon
+    ref = run(_spec(horizon=16), chunk_rounds=8, warmup=False,
+              compute_regret=False)
+    np.testing.assert_array_equal(np.asarray(res.final_w),
+                                  np.asarray(ref.final_w))
+
+
+# -- snapshots ----------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+def test_published_snapshot_bit_identical_to_reference_run(engine):
+    spec = _spec()
+    state = ServeState(spec, engine=engine)
+    state.publish_initial()
+    tr = BackgroundTrainer(spec, state, engine=engine, chunk_rounds=8,
+                           warmup=False)
+    tr.run_blocking()
+    snap = state.current
+    # 1 initial (round 0) + 4 chunk-boundary publications
+    assert snap.round == 32 and state.published == 5
+    assert verify_snapshot(spec, engine, snap, chunk_rounds=8)
+    # a corrupted snapshot must NOT verify
+    bad = snap.__class__(version=snap.version, round=snap.round,
+                         theta=snap.theta, w=np.asarray(snap.w) + 1e-3,
+                         w_bar=snap.w_bar, eps_spent=snap.eps_spent)
+    assert not verify_snapshot(spec, engine, bad, chunk_rounds=8)
+
+
+def test_history_ring_prunes_to_keep():
+    spec = _spec()
+    state = ServeState(spec, keep=2)
+    state.publish_initial()
+    BackgroundTrainer(spec, state, chunk_rounds=8,
+                      warmup=False).run_blocking()
+    assert state.snapshot(4) is not None and state.snapshot(3) is not None
+    assert state.snapshot(1) is None        # pruned
+
+
+# -- admission / batching -----------------------------------------------------
+
+def test_service_predict_matches_direct_predict_despite_padding():
+    spec = _spec()
+    svc = ServeService(ServeConfig(spec=spec, train=False, warmup=False,
+                                   max_batch=8, max_wait_ms=0.2)).start()
+    try:
+        feats = np.linspace(-1, 1, spec.dim).astype(np.float32)
+        req = svc.predict(feats, node=2, timeout=30.0)
+        assert req.status == "ok" and req.snapshot_round == 0
+        snap = svc.state.current
+        direct_feats = np.zeros((8, spec.dim), np.float32)
+        direct_feats[0] = feats
+        nodes = np.zeros((8,), np.int32)
+        nodes[0] = 2
+        margins, labels = svc.state.predict_fn(snap.w, snap.w_bar,
+                                               direct_feats, nodes)
+        assert float(np.asarray(margins)[0]) == req.margin
+        assert float(np.asarray(labels)[0]) == req.label
+        assert svc.verify(req)
+    finally:
+        svc.stop()
+
+
+def test_full_queue_sheds_instead_of_blocking():
+    spec = _spec()
+    svc = ServeService(ServeConfig(spec=spec, train=False, warmup=False,
+                                   queue_capacity=4, max_batch=2,
+                                   max_wait_ms=0.1))
+    # batcher NOT started: the queue can only fill
+    svc.state.publish_initial()
+    feats = [1.0] * spec.dim
+    reqs = [svc.submit(feats, node=0) for _ in range(10)]
+    shed = [r for r in reqs if r.status == "shed"]
+    assert len(shed) == 6 and all(r.done() for r in shed)
+    assert svc.stats()["admission"]["shed"] == 6
+
+
+def test_sequential_budget_exhausts_and_refuses():
+    spec = _spec(horizon=32)
+    svc = ServeService(ServeConfig(spec=spec, chunk_rounds=4,
+                                   composition="sequential", eps_budget=10.0,
+                                   max_batch=2, max_wait_ms=0.2,
+                                   warmup=False)).start()
+    try:
+        deadline = time.time() + 120
+        while not svc.exhausted() and time.time() < deadline:
+            time.sleep(0.01)
+        assert svc.exhausted()
+        # budget 10.0 at eps=1.0/round: rounds 4 and 8 publish, 12 would
+        # overspend — training stops at 8 and the snapshot stays there
+        assert svc.state.current.round == 8
+        assert svc.eps_spent() <= 10.0
+        req = svc.submit([1.0] * spec.dim, node=0).wait(30.0)
+        assert req.status == "refused"
+        assert svc.stats()["admission"]["refused"] >= 1
+    finally:
+        svc.stop()
+
+
+def test_parallel_composition_never_exhausts_on_disjoint_stream():
+    spec = _spec(horizon=32)
+    svc = ServeService(ServeConfig(spec=spec, chunk_rounds=8,
+                                   composition="parallel", eps_budget=10.0,
+                                   warmup=False)).start()
+    try:
+        deadline = time.time() + 120
+        while svc.state.current.round < 32 and time.time() < deadline:
+            time.sleep(0.01)
+        assert svc.state.current.round == 32
+        assert not svc.exhausted()
+        assert svc.eps_spent() == pytest.approx(spec.eps)   # Theorem 1: flat
+    finally:
+        svc.stop()
+
+
+# -- end to end ---------------------------------------------------------------
+
+def test_replay_end_to_end_serves_while_training(tmp_path):
+    spec = _spec(horizon=48)
+    svc = ServeService(ServeConfig(spec=spec, chunk_rounds=8, max_batch=8,
+                                   max_wait_ms=0.5, queue_capacity=64,
+                                   checkpoint_dir=str(tmp_path),
+                                   keep_snapshots=16, warmup=False)).start()
+    replay = BurstyReplay(spec.resolve_stream())
+    out = replay.drive(svc, 0, 32, timeout_s=120.0)
+    svc.stop()
+    assert out["submitted"] == replay.total_requests(0, 32)
+    assert out["served"] > 0 and out["qps"] > 0
+    assert out["served"] + out["shed"] + out["refused"] == out["submitted"]
+    # served responses carry a published snapshot and verify bitwise
+    served = [r for r in out["requests"] if r.status == "ok"]
+    sample = max(served, key=lambda r: r.snapshot_version)
+    assert sample.staleness_rounds is not None
+    assert sample.staleness_rounds >= 0
+    assert svc.verify(sample)
+    # async checkpoints of published snapshots landed on disk
+    rounds = sorted(int(f.split("_")[-1].split(".")[0])
+                    for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert rounds and set(rounds) <= {8, 16, 24, 32, 40, 48}
+    snap = svc.state.snapshot(sample.snapshot_version)
+    restored = restore_checkpoint(str(tmp_path),
+                                  {"theta": np.zeros_like(snap.w)},
+                                  step=snap.round)
+    np.testing.assert_array_equal(np.asarray(restored["theta"]),
+                                  np.asarray(snap.theta))
+
+
+def test_replay_derives_load_from_stream_counts():
+    spec = _spec(horizon=16)
+    stream = spec.resolve_stream()
+    replay = BurstyReplay(stream)
+    counts = np.asarray(stream.counts(0, 16))
+    ticks = list(replay.ticks(0, 16))
+    assert [len(t) for t in ticks] == counts.sum(axis=1).tolist()
+    with pytest.raises(ValueError):
+        BurstyReplay(object())
+
+
+# -- async checkpointing ------------------------------------------------------
+
+def test_async_checkpointer_roundtrip_and_error_surfacing(tmp_path):
+    import jax.numpy as jnp
+    good = tmp_path / "good"
+    with AsyncCheckpointer(str(good)) as ck:
+        for step in (1, 2, 3):
+            ck.save(step, {"w": jnp.full((3,), float(step))})
+        ck.wait()
+    out = restore_checkpoint(str(good), {"w": jnp.zeros((3,))}, step=2)
+    np.testing.assert_array_equal(np.asarray(out["w"]), [2.0, 2.0, 2.0])
+    # a failing write surfaces on the NEXT call, not silently
+    bad_parent = tmp_path / "not_a_dir"
+    bad_parent.write_text("file, not dir")
+    ck = AsyncCheckpointer(str(bad_parent / "sub"))
+    ck.save(1, {"w": jnp.zeros((2,))})
+    with pytest.raises(RuntimeError, match="async checkpoint"):
+        ck.wait()
+    with pytest.raises(RuntimeError, match="closed"):
+        ck.close() or ck.save(2, {"w": jnp.zeros((2,))})

@@ -151,3 +151,39 @@ def test_stream_instances_are_frozen_and_hashable():
     assert hash(a) == hash(DriftStream(n=8, nodes=2, rounds=4))
     with pytest.raises(dataclasses.FrozenInstanceError):
         a.period = 3
+
+
+def test_bursty_counts_chunk_invariant():
+    # the arrival process is keyed per ABSOLUTE round: any chunking of
+    # [0, T) reproduces the same burst sizes, so a replay client and the
+    # training stream agree on the workload no matter the chunk size
+    s = BurstyStream(n=8, nodes=4, rounds=64, seed=5)
+    whole = np.asarray(s.counts(0, 64))
+    for step in (1, 8, 24):
+        parts = [np.asarray(s.counts(a, min(a + step, 64)))
+                 for a in range(0, 64, step)]
+        np.testing.assert_array_equal(np.concatenate(parts), whole)
+    # and it is deterministic per seed, distinct across seeds
+    np.testing.assert_array_equal(
+        whole, np.asarray(BurstyStream(n=8, nodes=4, rounds=64,
+                                       seed=5).counts(0, 64)))
+    assert (np.asarray(BurstyStream(n=8, nodes=4, rounds=64,
+                                    seed=6).counts(0, 64)) != whole).any()
+
+
+def test_bursty_counts_match_pareto_tail():
+    # P(c >= k) ~ k^-tail below the cap: the empirical CCDF of the drawn
+    # counts must track the discrete-Pareto law they claim to follow
+    tail, cap = 1.5, 64
+    s = BurstyStream(n=4, nodes=16, rounds=2048, burst_max=cap, tail=tail,
+                     seed=1)
+    c = np.asarray(s.counts(0, 2048)).ravel()
+    assert c.min() >= 1 and c.max() <= cap
+    for k in (2, 4, 8):
+        emp = (c >= k).mean()
+        expect = float(k) ** -tail       # P(floor(u^-1/tail) >= k)
+        assert abs(emp - expect) < 0.25 * expect + 0.01, (k, emp, expect)
+    # burstiness: the index of dispersion of per-round totals exceeds
+    # Poisson's (=1) — arrivals cluster instead of smoothing out
+    totals = np.asarray(s.counts(0, 2048)).sum(axis=1)
+    assert totals.var() / totals.mean() > 1.0

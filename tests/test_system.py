@@ -3,7 +3,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.launch.serve import serve
+from repro.launch.serve_lm import serve
 from repro.launch.train import train
 
 
