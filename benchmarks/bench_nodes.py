@@ -1,0 +1,196 @@
+"""Node-axis scaling bench: sparse segment_sum gossip vs the dense m x m
+matvec it replaces — and, with ``--devices``, vs the node-SHARDED sparse
+path (shard_map + ppermute halo exchange over a ("node",) mesh).
+
+The dense path materializes the m x m mixing matrix (DenseMatrixMixer's
+tensordot), so its memory is quadratic in the node count: at m = 10^5 the
+matrix alone is 40 GB and the point is SKIPPED (``dense_s: null``) — which
+is precisely the regime the sparse edge-list path exists for (a ring at
+m = 10^5 is 3 x 10^5 edges, ~3.6 MB). The curve reports rounds/sec per
+node count for every path that can run.
+
+Correctness rides along: at the gate scale the sparse run must stay inside
+the float32 reduction-order bound of the dense run (``dense_match_identical``
+— the same contract tests/test_sparse_graph.py asserts per field), and the
+node-sharded run must be deterministic to the BIT across replays and inside
+the same bound of the unsharded sparse run (``sharded_identical``, the
+tests/test_shard_node.py contract).
+
+    PYTHONPATH=src python -m benchmarks.bench_nodes [--smoke]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_nodes --smoke --devices 4
+
+Writes BENCH_nodes.json; benchmarks/check_bench.py gates the identity
+verdicts and the ``sparse_vs_dense_speedup`` scaling key against the
+committed baselines (sharded fields stay null without --devices).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.api import RunSpec, run
+
+# float32 reduction-order bound for whole-run trajectories at the gate
+# scale (tests/test_sparse_graph.py holds 2e-6 at m=10; the bench's gate
+# point is larger, so allow the same slack the shard tests do)
+BOUND = 5e-6
+
+# dense is O(m^2) memory: above this the matrix no longer fits comfortably
+# (32768^2 floats = 4 GB) and the point is skipped rather than measured
+DENSE_MAX_NODES = 8192
+
+
+def _spec(m: int, *, dim: int, horizon: int, mixer: str) -> RunSpec:
+    options = ({"topology": "ring"} if mixer in ("sparse", "dense") else {})
+    return RunSpec(nodes=m, dim=dim, horizon=horizon, eps=1.0, alpha0=0.5,
+                   lam=0.01, stream="drift", stream_options={"period": 7},
+                   mixer=mixer, mixer_options=options)
+
+
+def _timed(spec: RunSpec, **kw):
+    """(result, wall) with compile excluded: warmup=True compiles the first
+    chunk outside the runner's timed region (needs >= 2 chunks), and the
+    reported wall is ``RunResult.wall_clock`` — steady-state execution, so
+    the curve compares the per-round math, not XLA compile times."""
+    chunk = max(1, spec.horizon // 2)
+    res = run(spec, chunk_rounds=chunk, compute_regret=False, warmup=True,
+              **kw)
+    return res, float(res.wall_clock)
+
+
+def _within(a, b, bound: float) -> bool:
+    return all(
+        float(np.abs(np.asarray(getattr(a, f))
+                     - np.asarray(getattr(b, f))).max()) <= bound
+        for f in ("final_w", "loss", "correct", "w_bar_loss", "sparsity"))
+
+
+def _bit_identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in ("final_w", "loss", "correct", "w_bar_loss",
+                         "sparsity"))
+
+
+def run_bench(*, curve: list[int], dim: int, horizon: int, gate_nodes: int,
+              dense_max: int = DENSE_MAX_NODES,
+              devices: int | str | None = None,
+              bench_path: str = "BENCH_nodes.json") -> dict:
+    node_mesh = None
+    n_devices = None
+    if devices is not None:
+        from repro.launch.mesh import node_mesh as make_node_mesh
+        node_mesh = make_node_mesh(devices)
+        if node_mesh is not None:
+            n_devices = int(node_mesh.shape["node"])
+
+    points = []
+    gate_speedup = None
+    for m in curve:
+        row = {"nodes": m, "dense_s": None, "dense_rounds_per_sec": None,
+               "sparse_s": None, "sparse_rounds_per_sec": None,
+               "sharded_s": None, "sharded_rounds_per_sec": None}
+        sparse_res, sparse_wall = _timed(
+            _spec(m, dim=dim, horizon=horizon, mixer="sparse"))
+        row["sparse_s"] = round(sparse_wall, 3)
+        row["sparse_rounds_per_sec"] = round(sparse_res.rounds_per_sec, 1)
+        if m <= dense_max:
+            dense_res, dense_wall = _timed(
+                _spec(m, dim=dim, horizon=horizon, mixer="dense"))
+            row["dense_s"] = round(dense_wall, 3)
+            row["dense_rounds_per_sec"] = round(dense_res.rounds_per_sec, 1)
+        if n_devices is not None:
+            shard_res, shard_wall = _timed(
+                _spec(m, dim=dim, horizon=horizon, mixer="sparse"),
+                node_devices=n_devices)
+            row["sharded_s"] = round(shard_wall, 3)
+            row["sharded_rounds_per_sec"] = round(shard_res.rounds_per_sec, 1)
+        points.append(row)
+        print(f"  m={m}: dense {row['dense_s']}s  sparse {row['sparse_s']}s"
+              f"  sharded {row['sharded_s']}s", flush=True)
+
+    # the speedup gate reads the LARGEST node count both paths measured:
+    # that is where the O(m^2) vs O(E) gap is, and where it must not erode
+    both = [p for p in points if p["dense_s"] is not None]
+    if both:
+        top = both[-1]
+        gate_speedup = round(top["dense_s"] / top["sparse_s"], 2) \
+            if top["sparse_s"] > 0 else None
+
+    # correctness gate point: dense-vs-sparse within the asserted bound,
+    # sharded bit-deterministic and within the bound of unsharded sparse
+    gspec = _spec(gate_nodes, dim=dim, horizon=horizon, mixer="sparse")
+    gate_sparse = run(gspec, chunk_rounds=max(1, horizon // 2),
+                      compute_regret=False, warmup=False)
+    gate_dense = run(_spec(gate_nodes, dim=dim, horizon=horizon,
+                           mixer="dense"),
+                     chunk_rounds=max(1, horizon // 2),
+                     compute_regret=False, warmup=False)
+    dense_match = _within(gate_sparse, gate_dense, BOUND)
+    sharded_identical = None
+    if n_devices is not None:
+        kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+                  warmup=False, node_devices=n_devices)
+        shard_a = run(gspec, **kw)
+        shard_b = run(gspec, **kw)
+        sharded_identical = (_bit_identical(shard_a, shard_b)
+                             and _within(shard_a, gate_sparse, BOUND))
+
+    bench = {
+        "bench": "nodes_sparse_scaling",
+        "dim": dim,
+        "rounds": horizon,
+        "dense_max_nodes": dense_max,
+        "devices": n_devices,
+        "curve": points,
+        "gate_nodes": gate_nodes,
+        "sparse_vs_dense_speedup": gate_speedup,
+        "dense_match_identical": dense_match,
+        "sharded_identical": sharded_identical,
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    if not dense_match:
+        raise AssertionError("sparse run left the asserted float32 bound "
+                             f"({BOUND}) of the dense run at the gate point")
+    if sharded_identical is False:
+        raise AssertionError("node-sharded run is not deterministic or left "
+                             "the asserted bound of the unsharded sparse run")
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny curve (seconds) for the CI jobs")
+    ap.add_argument("--devices", default=None, metavar="N|auto",
+                    help="also time the node-sharded sparse path over N "
+                         "local devices ('auto' = all, skipping the sharded "
+                         "lane on a 1-device host; an explicit N errors "
+                         "when fewer than N devices are visible)")
+    ap.add_argument("--bench-path", default="BENCH_nodes.json")
+    args = ap.parse_args()
+    devices = (None if args.devices is None
+               else "auto" if args.devices == "auto" else int(args.devices))
+    if args.smoke:
+        kw = dict(curve=[256, 2048], dim=8, horizon=20, gate_nodes=256,
+                  dense_max=2048)
+    else:
+        kw = dict(curve=[256, 2048, 8192, 32768, 131072], dim=8, horizon=20,
+                  gate_nodes=256)
+    bench = run_bench(devices=devices, bench_path=args.bench_path, **kw)
+    top = bench["curve"][-1]
+    print(f"{len(bench['curve'])} node counts to m={top['nodes']}: "
+          f"sparse {top['sparse_s']}s "
+          f"(dense skipped above m={bench['dense_max_nodes']}); "
+          f"sparse_vs_dense_speedup={bench['sparse_vs_dense_speedup']} "
+          f"dense_match={bench['dense_match_identical']} "
+          f"sharded_identical={bench['sharded_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -318,7 +318,9 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         step_fn: Callable | None = None,
         state: Any = None,
         batches: Iterator | None = None,
-        print_every: int | None = None) -> RunResult:
+        print_every: int | None = None,
+        node_devices: int | str | None = None,
+        node_mesh: Any = None) -> RunResult:
     """Drive one run end-to-end and return a RunResult.
 
     Stream mode (default): resolves ``spec.stream`` and scans the chosen
@@ -339,6 +341,15 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     at round r is bit-identical to a fresh ``run(spec, horizon=r)`` because
     streams are keyed per absolute round and chunking never changes the
     per-round math.
+
+    ``node_devices=`` (or a prebuilt ``node_mesh=`` with a "node" axis)
+    SHARDS the node axis itself across devices: the spec's topology is
+    lowered to its sparse edge-list form and the whole per-chunk scan runs
+    under `shard_map` with a ppermute halo exchange for cross-shard edges
+    (see `repro.api.shard_node`). State entering/leaving each chunk stays
+    global and unpadded, so checkpoints interchange with any device count
+    (and with the unsharded path). The per-round noise is bit-identical to
+    the dense engines; only float32 reduction order differs.
 
     Custom mode (``step_fn=``): drives ``state, metrics = step_fn(state,
     next(batches))`` for ``horizon`` steps with the same tracking /
@@ -365,7 +376,16 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         eps_per_round=spec.eps if mech.is_private else math.inf,
         disjoint_streams=getattr(stream, "disjoint", False))
 
-    chunk_fn, init_state = make_chunk_fn(spec, engine)
+    nmesh = None
+    if node_devices is not None or node_mesh is not None:
+        from repro.api.shard_node import resolve_node_mesh
+        nmesh = resolve_node_mesh(node_devices, node_mesh)
+    if nmesh is None:
+        chunk_fn, init_state = make_chunk_fn(spec, engine)
+    else:
+        from repro.api.shard_node import make_node_chunk_fn
+        chunk_fn, init_fn = make_node_chunk_fn(spec, engine, nmesh)
+        init_state = init_fn(jax.random.PRNGKey(spec.seed))
     chunk_jit = jax.jit(chunk_fn)
 
     start = 0
@@ -555,7 +575,8 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
               horizon: int | None = None,
               check_vectorizable: bool = True,
               devices: int | str | None = None,
-              mesh: Any = None) -> list[RunResult]:
+              mesh: Any = None,
+              node_devices: int | str | None = None) -> list[RunResult]:
     """Run one config under S seeds as ONE vmapped program; S RunResults.
 
     The innermost (seed) axis is vectorized: per-seed engine states are
@@ -579,6 +600,14 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     vmap (and to sequential `run()`) — noise, delay rings and resume
     included. ``devices="auto"`` uses `jax.local_device_count()` and falls
     back to plain vmap on a 1-device host.
+
+    ``node_devices=`` composes node sharding with the seed batch into a 2-D
+    ``("seed", "node")`` grid (``devices`` then counts SEED rows, default 1;
+    a prebuilt ``mesh=`` may carry both axes): each seed row runs the
+    node-sharded sparse chunk program of `repro.api.shard_node`, vmapped
+    over its seed block inside one shard_map. Node padding lives inside the
+    chunk program, so the seed pad-and-mask logic and checkpoints here are
+    unchanged.
 
     Checkpoints (``checkpoint_every``/``checkpoint_dir``/``resume``) store
     the STACKED state gathered to host and stripped of pad seeds, so a run
@@ -617,24 +646,49 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     batched_init = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *init_states)
 
-    mesh = _resolve_seed_mesh(devices, mesh)
-    D = int(mesh.shape["seed"]) if mesh is not None else 1
-    pad = (-S) % D
-    if mesh is None:
-        sharding = None
-        chunk_jit = jax.jit(jax.vmap(chunk_fn))
-    else:
-        from jax.experimental.shard_map import shard_map
+    node_grid = None
+    if node_devices is not None or (
+            mesh is not None and "node" in getattr(mesh, "axis_names", ())):
+        if mesh is not None:
+            if "seed" not in mesh.axis_names:
+                raise ValueError(
+                    "run_batch node sharding needs a ('seed','node') mesh")
+            node_grid = mesh
+        else:
+            from repro.launch.mesh import seed_node_mesh
+            seed_dev = 1 if devices in (None, "auto") else int(devices)
+            node_grid = seed_node_mesh(seed_dev, node_devices)
+        mesh = node_grid        # _place shards the seed axis of this grid
+
+    if node_grid is not None:
         from jax.sharding import NamedSharding, PartitionSpec
-        pspec = PartitionSpec("seed")
-        sharding = NamedSharding(mesh, pspec)
-        # each device runs the SAME vmapped chunk program over its S/D block
-        # of seeds; no collectives cross the blocks, so per-seed trajectories
-        # cannot differ from the single-device vmap
-        chunk_jit = jax.jit(shard_map(
-            jax.vmap(chunk_fn), mesh=mesh,
-            in_specs=(pspec, pspec, pspec), out_specs=(pspec, pspec),
-            check_rep=False))
+        from repro.api.shard_node import make_node_chunk_fn
+        D = int(node_grid.shape["seed"])
+        pad = (-S) % D
+        sharding = NamedSharding(node_grid, PartitionSpec("seed"))
+        # the node-sharded chunk program vmaps the seed axis inside its own
+        # ("seed","node") shard_map; the seed pad-and-mask stays out here
+        chunk_jit = jax.jit(make_node_chunk_fn(base, engine, node_grid,
+                                               batched=True)[0])
+    else:
+        mesh = _resolve_seed_mesh(devices, mesh)
+        D = int(mesh.shape["seed"]) if mesh is not None else 1
+        pad = (-S) % D
+        if mesh is None:
+            sharding = None
+            chunk_jit = jax.jit(jax.vmap(chunk_fn))
+        else:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import NamedSharding, PartitionSpec
+            pspec = PartitionSpec("seed")
+            sharding = NamedSharding(mesh, pspec)
+            # each device runs the SAME vmapped chunk program over its S/D
+            # block of seeds; no collectives cross the blocks, so per-seed
+            # trajectories cannot differ from the single-device vmap
+            chunk_jit = jax.jit(shard_map(
+                jax.vmap(chunk_fn), mesh=mesh,
+                in_specs=(pspec, pspec, pspec), out_specs=(pspec, pspec),
+                check_rep=False))
 
     def _place(tree):
         """Pad the seed axis to S + pad and lay it out over the mesh."""

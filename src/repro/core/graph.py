@@ -30,6 +30,9 @@ __all__ = [
     "assert_doubly_stochastic",
     "spectral_gap",
     "GossipGraph",
+    "SparseGraph",
+    "ring_edges",
+    "torus_edges",
     "ring_neighbor_weights",
     "torus_neighbor_weights",
 ]
@@ -193,6 +196,223 @@ def spectral_gap(A: np.ndarray) -> float:
     """1 - |lambda_2(A)|: governs gossip mixing speed (consensus rate)."""
     ev = np.sort(np.abs(np.linalg.eigvals(np.asarray(A, dtype=np.float64))))
     return float(1.0 - (ev[-2] if len(ev) > 1 else 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Sparse (edge-list / CSR) topologies — the social-big-data regime.
+# A dense (m, m) mixing matrix caps m at a few thousand nodes; the paper's
+# "distributed data centers" setting needs m in the 10^5..10^6 range, where
+# only the O(edges) form fits. SparseGraph is the canonical sparse view both
+# the segment_sum mixer (repro.api.mixers.SparseMixer) and the node-sharded
+# gossip exchange (repro.api.shard_node) consume.
+# ---------------------------------------------------------------------------
+
+def ring_edges(m: int, self_weight: float = 0.5) -> "SparseGraph":
+    """Edge-list form of :func:`ring_matrix`, built natively in O(m).
+
+    Never materialises the dense matrix, so it scales to millions of nodes
+    (``SparseGraph.from_dense(ring_matrix(m))`` would need O(m^2) memory).
+    ``to_dense()`` of the result equals ``ring_matrix(m, self_weight)``
+    exactly for m >= 3; m in {1, 2} degenerate the same way (neighbor
+    weights fold onto the single/self edge).
+    """
+    if m == 1:
+        return SparseGraph(dst=np.zeros(1, np.int64), src=np.zeros(1, np.int64),
+                           weight=np.ones(1, np.float32), m=1, name="ring")
+    i = np.arange(m, dtype=np.int64)
+    nbr = np.float32((1.0 - self_weight) / 2.0)
+    dst = np.concatenate([i, i, i])
+    src = np.concatenate([i, (i - 1) % m, (i + 1) % m])
+    w = np.concatenate([np.full(m, np.float32(self_weight)),
+                        np.full(m, nbr), np.full(m, nbr)])
+    # m == 2: the two "neighbors" are the same node; duplicates merge in
+    # the canonical sort below exactly like the dense constructor's +=
+    return SparseGraph(dst=dst, src=src, weight=w.astype(np.float32), m=m,
+                       name="ring")
+
+
+def torus_edges(rows: int, cols: int,
+                self_weight: float = 1.0 / 3.0) -> "SparseGraph":
+    """Edge-list form of :func:`torus_matrix`, built natively in O(m)."""
+    m = rows * cols
+    if m == 1:
+        return SparseGraph(dst=np.zeros(1, np.int64), src=np.zeros(1, np.int64),
+                           weight=np.ones(1, np.float32), m=1, name="torus")
+    r, c = np.divmod(np.arange(m, dtype=np.int64), cols)
+    nbr = np.float32((1.0 - self_weight) / 4.0)
+    dsts, srcs, ws = [np.arange(m, dtype=np.int64)], [np.arange(m, dtype=np.int64)], \
+        [np.full(m, np.float32(self_weight))]
+    for dr, dc in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+        dsts.append(np.arange(m, dtype=np.int64))
+        srcs.append(((r + dr) % rows) * cols + (c + dc) % cols)
+        ws.append(np.full(m, nbr))
+    return SparseGraph(dst=np.concatenate(dsts), src=np.concatenate(srcs),
+                       weight=np.concatenate(ws).astype(np.float32), m=m,
+                       name="torus")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseGraph:
+    """Edge-list / CSR view of a (fixed) mixing matrix.
+
+    Edges are (dst, src, weight) triples meaning ``A[dst, src] = weight``;
+    ``apply`` semantics are ``out[i] = sum_j A[i, j] x[j]`` — exactly the
+    dense matvec, restricted to stored entries. Construction canonicalizes:
+    edges are sorted by (dst, src) and DUPLICATE (dst, src) pairs are summed
+    into one edge, which is precisely what the dense form does when the same
+    entry is written twice — so conversions and aggregations stay
+    dense-equivalent by construction. Entries with weight exactly 0.0 are
+    kept (they round-trip from a dense matrix's explicit zeros as absent —
+    ``from_dense`` drops them — but a caller may store them).
+
+    ``validate()`` checks the paper's Assumption 1 (doubly stochastic,
+    nonneg, entries >= eta) in O(edges); a zero-degree (isolated) node makes
+    its row sum 0 and is rejected there with a clear message.
+    """
+
+    dst: np.ndarray       # (E,) int — destination / row index
+    src: np.ndarray       # (E,) int — source / column index
+    weight: np.ndarray    # (E,) float32 — A[dst, src]
+    m: int
+    name: str = "sparse"
+
+    def __post_init__(self):
+        dst = np.asarray(self.dst, np.int64).ravel()
+        src = np.asarray(self.src, np.int64).ravel()
+        w = np.asarray(self.weight, np.float32).ravel()
+        if not (dst.shape == src.shape == w.shape):
+            raise ValueError(
+                f"edge arrays disagree: dst {dst.shape}, src {src.shape}, "
+                f"weight {w.shape}")
+        if self.m < 1:
+            raise ValueError(f"m must be >= 1, got {self.m}")
+        if dst.size and (dst.min() < 0 or dst.max() >= self.m
+                         or src.min() < 0 or src.max() >= self.m):
+            raise ValueError(
+                f"edge indices out of range for m={self.m}: "
+                f"dst in [{dst.min()}, {dst.max()}], "
+                f"src in [{src.min()}, {src.max()}]")
+        # canonical form: sort by (dst, src), merge duplicate edges by
+        # summing their weights (the dense-equivalent reading of a repeated
+        # (i, j) entry). float32 sums of float32 duplicates match the dense
+        # np.add.at accumulation exactly.
+        flat = dst * self.m + src
+        order = np.argsort(flat, kind="stable")
+        flat, dst, src, w = flat[order], dst[order], src[order], w[order]
+        uniq, first = np.unique(flat, return_index=True)
+        if uniq.size != flat.size:
+            w = np.add.reduceat(w.astype(np.float32), first)
+            dst, src = dst[first], src[first]
+        object.__setattr__(self, "dst", dst)
+        object.__setattr__(self, "src", src)
+        object.__setattr__(self, "weight", w.astype(np.float32))
+
+    # -- shape/views ---------------------------------------------------------
+
+    @property
+    def edges(self) -> int:
+        return int(self.dst.size)
+
+    @property
+    def indptr(self) -> np.ndarray:
+        """(m + 1,) CSR row pointers: edges of row i live in
+        ``[indptr[i], indptr[i+1])`` of the (dst, src)-sorted edge arrays."""
+        counts = np.bincount(self.dst, minlength=self.m)
+        return np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+
+    def diag(self) -> np.ndarray:
+        """(m,) self-weights A[i, i] (0 where no self-loop is stored)."""
+        d = np.zeros(self.m, np.float32)
+        loop = self.dst == self.src
+        d[self.dst[loop]] = self.weight[loop]
+        return d
+
+    def degree(self) -> np.ndarray:
+        """(m,) number of stored in-edges per destination node."""
+        return np.bincount(self.dst, minlength=self.m).astype(np.int64)
+
+    # -- conversions (exact round trips) -------------------------------------
+
+    @classmethod
+    def from_dense(cls, A: np.ndarray, name: str | None = None) -> "SparseGraph":
+        """Edge list of every nonzero entry; float32 values are preserved
+        exactly, so ``to_dense()`` round-trips bit-for-bit."""
+        A = np.asarray(A, np.float32)
+        if A.ndim != 2 or A.shape[0] != A.shape[1]:
+            raise ValueError(f"A must be square, got {A.shape}")
+        dst, src = np.nonzero(A)
+        return cls(dst=dst.astype(np.int64), src=src.astype(np.int64),
+                   weight=A[dst, src], m=A.shape[0],
+                   name=name or "sparse")
+
+    def to_dense(self) -> np.ndarray:
+        """(m, m) float32 dense form (duplicates were already merged)."""
+        A = np.zeros((self.m, self.m), np.float32)
+        np.add.at(A, (self.dst, self.src), self.weight)
+        return A
+
+    # -- checks --------------------------------------------------------------
+
+    def validate(self, eta: float = 1e-6, atol: float = 1e-6) -> "SparseGraph":
+        """Assumption 1 in O(edges): nonneg entries >= eta, every row and
+        column sums to 1 (a zero-degree node fails its row sum). Returns
+        self so construction sites can chain ``SparseGraph(...).validate()``."""
+        if np.any(self.weight < -atol):
+            raise ValueError("sparse A has negative entries")
+        pos = self.weight[self.weight > atol]
+        if pos.size and pos.min() < eta - atol:
+            raise ValueError(
+                f"positive entries below eta={eta}: min={pos.min()}")
+        rows = np.zeros(self.m, np.float64)
+        cols = np.zeros(self.m, np.float64)
+        np.add.at(rows, self.dst, self.weight.astype(np.float64))
+        np.add.at(cols, self.src, self.weight.astype(np.float64))
+        bad_r = np.flatnonzero(~np.isclose(rows, 1.0, atol=atol))
+        if bad_r.size:
+            raise ValueError(
+                f"rows do not sum to 1 (isolated/underweighted nodes?): "
+                f"rows {bad_r[:8].tolist()} sum to "
+                f"{rows[bad_r[:8]].tolist()}")
+        bad_c = np.flatnonzero(~np.isclose(cols, 1.0, atol=atol))
+        if bad_c.size:
+            raise ValueError(
+                f"cols do not sum to 1: cols {bad_c[:8].tolist()} sum to "
+                f"{cols[bad_c[:8]].tolist()}")
+        return self
+
+    def is_symmetric(self, atol: float = 0.0) -> bool:
+        """True iff A[i, j] == A[j, i] for every stored edge (O(E log E))."""
+        fwd = {(int(d), int(s)): float(w)
+               for d, s, w in zip(self.dst, self.src, self.weight)}
+        return all(abs(w - fwd.get((s, d), 0.0)) <= atol
+                   for (d, s), w in fwd.items())
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def make(cls, topology: str, m: int, seed: int = 0,
+             **kw) -> "SparseGraph":
+        """Sparse mixing graph by topology name.
+
+        'ring' and 'torus' build natively in O(m) (any m, including the
+        n >= 10^5 regime); every other fixed GossipGraph topology goes
+        through its dense form (small m only). Time-varying schedules have
+        no sparse form here — the sparse path assumes one fixed A.
+        """
+        if topology == "ring":
+            return ring_edges(m, **kw).validate()
+        if topology == "torus":
+            rows = kw.pop("rows", int(np.sqrt(m)))
+            if rows * (m // rows) != m:
+                raise ValueError(f"torus needs factorable m, got {m}")
+            return torus_edges(rows, m // rows, **kw).validate()
+        if topology == "time_varying":
+            raise ValueError(
+                "time_varying schedules have no sparse form — the sparse "
+                "gossip path assumes one fixed topology (use the dense "
+                "mixer for A(t) schedules)")
+        graph = GossipGraph.make(topology, m, seed=seed, **kw)
+        return cls.from_dense(graph.at(0), name=topology).validate()
 
 
 # ---------------------------------------------------------------------------

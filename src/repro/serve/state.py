@@ -183,7 +183,9 @@ class ServeState:
 
 
 def verify_snapshot(spec: RunSpec, engine: str, snapshot: Snapshot, *,
-                    chunk_rounds: int = 128) -> bool:
+                    chunk_rounds: int = 128,
+                    node_devices: int | str | None = None,
+                    atol: float = 0.0) -> bool:
     """True iff ``snapshot`` is bit-identical to a fresh reference run.
 
     Re-runs ``repro.api.run(spec, horizon=snapshot.round)`` from scratch
@@ -191,15 +193,26 @@ def verify_snapshot(spec: RunSpec, engine: str, snapshot: Snapshot, *,
     recovered primal models bit-for-bit. The serving acceptance gate: a
     served prediction is exactly what the reference model at the recorded
     snapshot round would have said.
+
+    A NODE-SHARDED trainer (``run(..., node_devices=D)``, see
+    `repro.api.shard_node`) is verified by replaying under the same
+    ``node_devices`` — the sharded program is deterministic, so the replay
+    is still bit-identical. Cross-layout verification (sharded snapshot vs
+    dense replay or vice versa) differs by float32 reduction order only;
+    pass ``atol`` to bound it instead of requiring equal bits.
     """
     from repro.api.runner import run
     if snapshot.round == 0:
         return bool(np.all(np.asarray(snapshot.w) == 0.0))
     ref = run(spec, engine=engine, horizon=snapshot.round,
-              chunk_rounds=chunk_rounds, compute_regret=False, warmup=False)
+              chunk_rounds=chunk_rounds, compute_regret=False, warmup=False,
+              node_devices=node_devices)
     ref_snap = snapshot_from_state(spec, engine, ref.final_state,
                                    version=-1, eps_spent=0.0)
-    return (bool(np.array_equal(np.asarray(snapshot.w),
-                                np.asarray(ref_snap.w)))
-            and bool(np.array_equal(np.asarray(snapshot.w_bar),
-                                    np.asarray(ref_snap.w_bar))))
+    w, ref_w = np.asarray(snapshot.w), np.asarray(ref_snap.w)
+    wb, ref_wb = np.asarray(snapshot.w_bar), np.asarray(ref_snap.w_bar)
+    if atol:
+        return (bool(np.abs(w - ref_w).max() <= atol)
+                and bool(np.abs(wb - ref_wb).max() <= atol))
+    return (bool(np.array_equal(w, ref_w))
+            and bool(np.array_equal(wb, ref_wb)))

@@ -10,7 +10,8 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
-        "docs/streams.md", "docs/sweeps.md", "docs/serving.md")
+        "docs/streams.md", "docs/sweeps.md", "docs/serving.md",
+        "docs/node_sharding.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -21,6 +22,7 @@ API_MODULES = (
     "repro.api.clippers",
     "repro.api.streams",
     "repro.api.runner",
+    "repro.api.shard_node",
     "repro.sweep",
     "repro.sweep.spec",
     "repro.sweep.store",

@@ -85,3 +85,46 @@ def test_ring_neighbor_weights_match_matrix():
     assert np.isclose(A[0, 0], w[0])
     assert np.isclose(A[0, 1], w[1])
     assert np.isclose(A[0, 7], w[-1])
+
+
+# -- symmetry where the paper/model claims it ---------------------------------
+# Every fixed undirected topology must produce A == A.T (gossip weights are
+# assigned per undirected edge); the sparse edge-list form must agree.
+
+@pytest.mark.parametrize("make,args", [
+    (ring_matrix, (9,)), (ring_matrix, (2, 0.3)),
+    (torus_matrix, (3, 4)), (hypercube_matrix, (16,)),
+    (complete_matrix, (7,)), (disconnected_matrix, (5,)),
+    (random_regular_matrix, (12, 3, 1)),
+])
+def test_fixed_generators_are_symmetric(make, args):
+    A = make(*args)
+    np.testing.assert_allclose(A, A.T, atol=1e-12)
+
+
+def test_metropolis_is_symmetric():
+    rng = np.random.default_rng(7)
+    adj = rng.uniform(size=(10, 10)) < 0.4
+    adj = np.triu(adj, 1)
+    adj = adj | adj.T
+    for i in range(10):
+        adj[i, (i + 1) % 10] = adj[(i + 1) % 10, i] = True
+    np.fill_diagonal(adj, False)
+    A = metropolis_hastings(adj)
+    np.testing.assert_allclose(A, A.T, atol=1e-12)
+
+
+def test_time_varying_matchings_are_symmetric():
+    for A in time_varying_schedule(8, kind="random_matching", seed=5):
+        np.testing.assert_allclose(A, A.T, atol=1e-12)
+
+
+@pytest.mark.parametrize("topology,m", [("ring", 11), ("torus", 16),
+                                        ("hypercube", 8), ("random", 12),
+                                        ("complete", 6)])
+def test_sparse_form_symmetric_where_dense_is(topology, m):
+    from repro.core.graph import SparseGraph
+    g = SparseGraph.make(topology, m, seed=4)
+    A = np.asarray(GossipGraph.make(topology, m, seed=4).at(0))
+    assert g.is_symmetric(atol=1e-7) == bool(np.allclose(A, A.T, atol=1e-7))
+    assert g.is_symmetric(atol=1e-7)

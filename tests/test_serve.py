@@ -72,6 +72,55 @@ def test_history_ring_prunes_to_keep():
     assert state.snapshot(1) is None        # pruned
 
 
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+def test_sparse_topology_trainer_snapshot_verifies_and_serves(engine):
+    """repro.serve over a sparse-graph trainer (the node-shardable mixer):
+    published snapshots verify bit-for-bit against the sparse reference run,
+    and the batched predict path serves the trained per-node rows."""
+    spec = _spec(nodes=10, mixer="sparse",
+                 mixer_options={"topology": "ring"})
+    state = ServeState(spec, engine=engine)
+    state.publish_initial()
+    BackgroundTrainer(spec, state, engine=engine, chunk_rounds=8,
+                      warmup=False).run_blocking()
+    snap = state.current
+    assert snap.round == 32
+    assert verify_snapshot(spec, engine, snap, chunk_rounds=8)
+    # batched predict against the sparse-trained model: node rows, not w_bar
+    feats = np.linspace(-1, 1, spec.dim * 6).reshape(6, spec.dim)
+    nodes = np.asarray([0, 3, 9, 9, 1, 5])
+    margins, labels, used = state.predict(feats, nodes)
+    assert used.version == snap.version
+    ref = (np.asarray(snap.w)[nodes] * feats).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(margins), ref, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(labels),
+                                  np.where(np.asarray(margins) >= 0, 1, -1))
+
+
+def test_verify_snapshot_atol_bounds_cross_layout_drift():
+    """The new atol= mode: exact comparison still rejects perturbed models,
+    while a reduction-order-sized bound accepts them (the contract a
+    node-sharded snapshot relies on when replayed under another layout)."""
+    spec = _spec(nodes=10, mixer="sparse",
+                 mixer_options={"topology": "ring"})
+    res = run(spec, chunk_rounds=8, warmup=False, compute_regret=False)
+    from repro.serve.state import snapshot_from_state
+    snap = snapshot_from_state(spec, "sim", res.final_state, version=1,
+                               eps_spent=1.0)
+    assert verify_snapshot(spec, "sim", snap, chunk_rounds=8)
+    nudged = snap.__class__(version=1, round=snap.round, theta=snap.theta,
+                            w=np.asarray(snap.w) + 1e-7,
+                            w_bar=np.asarray(snap.w_bar) + 1e-7,
+                            eps_spent=snap.eps_spent)
+    assert not verify_snapshot(spec, "sim", nudged, chunk_rounds=8)
+    assert verify_snapshot(spec, "sim", nudged, chunk_rounds=8, atol=2e-6)
+    # a genuinely wrong model fails even the bounded check
+    bad = snap.__class__(version=1, round=snap.round, theta=snap.theta,
+                         w=np.asarray(snap.w) + 1e-3, w_bar=snap.w_bar,
+                         eps_spent=snap.eps_spent)
+    assert not verify_snapshot(spec, "sim", bad, chunk_rounds=8, atol=2e-6)
+
+
 # -- admission / batching -----------------------------------------------------
 
 def test_service_predict_matches_direct_predict_despite_padding():

@@ -1,0 +1,231 @@
+"""Dense-vs-sparse equivalence — the correctness anchor for the sparse path.
+
+SparseGraph / SparseMixer must be *dense-equivalent*: the same topology
+expressed as an edge list and driven through `segment_sum` has to reproduce
+the dense n x n matvec exactly where the arithmetic is identical (edge
+construction, conversions, duplicate merging) and within an ASSERTED
+float32 reduction-order bound where it is not (segment_sum may sum a row in
+a different order than tensordot/roll). Full-run tolerances below are the
+contract `repro.api.shard_node` inherits; tests/test_shard_node.py extends
+them across devices.
+"""
+import numpy as np
+import pytest
+
+from repro.api import RunSpec, run
+from repro.api.mixers import MIXERS, DelayedMixer, RingRollMixer, SparseMixer
+from repro.core.graph import (
+    GossipGraph, SparseGraph, ring_edges, ring_matrix, torus_edges,
+    torus_matrix,
+)
+
+# float32 reduction-order bound for whole-run trajectories at these sizes;
+# the suite asserts it explicitly (acceptance: "tolerance-bounded with the
+# bound asserted")
+RUN_ATOL = 2e-6
+
+
+def _spec(**kw):
+    base = dict(nodes=10, dim=8, horizon=14, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7},
+                mixer="sparse", mixer_options={"topology": "ring"})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+# -- graph construction / conversions ----------------------------------------
+
+def test_ring_edges_match_dense_ring_exactly():
+    for m, sw in [(1, 0.5), (2, 0.5), (3, 0.25), (8, 0.5), (17, 0.8)]:
+        g = ring_edges(m, self_weight=sw)
+        np.testing.assert_array_equal(g.to_dense(), ring_matrix(m, sw))
+
+
+def test_torus_edges_match_dense_torus_exactly():
+    for rows, cols in [(2, 2), (3, 4), (4, 4)]:
+        g = torus_edges(rows, cols)
+        np.testing.assert_array_equal(g.to_dense(), torus_matrix(rows, cols))
+
+
+@pytest.mark.parametrize("topology,m", [
+    ("ring", 12), ("torus", 16), ("hypercube", 16), ("random", 12),
+    ("complete", 9), ("disconnected", 5),
+])
+def test_from_dense_round_trips_bit_exactly(topology, m):
+    A = np.asarray(GossipGraph.make(topology, m, seed=3).at(0), np.float32)
+    g = SparseGraph.from_dense(A, name=topology)
+    np.testing.assert_array_equal(g.to_dense(), A)
+    # CSR view is consistent with the canonical (dst, src) sort
+    indptr = g.indptr
+    assert indptr[0] == 0 and indptr[-1] == g.edges
+    np.testing.assert_array_equal(np.diff(indptr), g.degree())
+
+
+@pytest.mark.parametrize("topology,m", [("ring", 10), ("torus", 16),
+                                        ("hypercube", 8), ("random", 12)])
+def test_sparse_make_validates_and_matches_dense(topology, m):
+    g = SparseGraph.make(topology, m, seed=1)
+    A = np.asarray(GossipGraph.make(topology, m, seed=1).at(0), np.float32)
+    np.testing.assert_allclose(g.to_dense(), A, atol=1e-7)
+    assert g.validate() is g
+
+
+def test_sparse_make_scales_without_dense_materialization():
+    g = SparseGraph.make("ring", 100_000)
+    assert g.m == 100_000 and g.edges == 300_000
+    assert float(g.diag()[0]) == 0.5
+
+
+def test_time_varying_has_no_sparse_form():
+    with pytest.raises(ValueError, match="time_varying|sparse"):
+        SparseGraph.make("time_varying", 8)
+
+
+# -- segment_sum edge cases: self-loops, duplicates, isolated nodes ----------
+
+def test_duplicate_edges_merge_dense_equivalently():
+    """Repeated (dst, src) entries sum like the dense += — pinned to bits."""
+    dst = np.array([0, 0, 1, 1, 0], np.int64)
+    src = np.array([1, 1, 0, 1, 0], np.int64)
+    w = np.array([0.25, 0.25, 0.5, 0.5, 0.5], np.float32)
+    g = SparseGraph(dst=dst, src=src, weight=w, m=2)
+    dense = np.zeros((2, 2), np.float32)
+    np.add.at(dense, (dst, src), w)
+    np.testing.assert_array_equal(g.to_dense(), dense)
+    assert g.edges == 4                       # the duplicate collapsed
+    g.validate()                              # still doubly stochastic
+
+
+def test_self_loops_are_the_diagonal():
+    g = ring_edges(6, self_weight=0.4)
+    np.testing.assert_allclose(g.diag(), np.full(6, 0.4, np.float32))
+    # a graph without self-loops has a zero diagonal, not an error
+    perm = SparseGraph(dst=np.arange(4), src=(np.arange(4) + 1) % 4,
+                       weight=np.ones(4, np.float32), m=4)
+    np.testing.assert_array_equal(perm.diag(), np.zeros(4, np.float32))
+    perm.validate()                           # permutation: doubly stochastic
+
+
+def test_isolated_node_rejected_with_clear_error():
+    """A zero-degree node makes its row sum 0; validate() names it."""
+    g = SparseGraph(dst=np.array([0, 1]), src=np.array([1, 0]),
+                    weight=np.ones(2, np.float32), m=3)   # node 2 isolated
+    with pytest.raises(ValueError, match="isolated|rows"):
+        g.validate()
+    # ...but the aggregation itself is still dense-equivalent: row 2 -> 0
+    mixer = SparseMixer(graph=g)
+    import jax.numpy as jnp
+    x = jnp.arange(3.0)[:, None]
+    out = np.asarray(mixer.apply(x, 0))
+    np.testing.assert_allclose(out, g.to_dense() @ np.arange(3.0)[:, None],
+                               atol=1e-6)
+    assert out[2, 0] == 0.0
+
+
+def test_out_of_range_edges_rejected():
+    with pytest.raises(ValueError, match="out of range"):
+        SparseGraph(dst=np.array([0, 3]), src=np.array([0, 0]),
+                    weight=np.ones(2, np.float32), m=3)
+    with pytest.raises(ValueError, match="m must be"):
+        SparseGraph(dst=np.zeros(0, np.int64), src=np.zeros(0, np.int64),
+                    weight=np.zeros(0, np.float32), m=0)
+
+
+def test_negative_and_sub_eta_weights_rejected():
+    g = SparseGraph(dst=np.array([0, 0, 1, 1]), src=np.array([0, 1, 0, 1]),
+                    weight=np.array([1.5, -0.5, -0.5, 1.5], np.float32), m=2)
+    with pytest.raises(ValueError, match="negative"):
+        g.validate()
+    h = SparseGraph(dst=np.array([0, 0, 1, 1]), src=np.array([0, 1, 0, 1]),
+                    weight=np.array([1 - 1e-8, 1e-8, 1e-8, 1 - 1e-8],
+                                    np.float32), m=2)
+    with pytest.raises(ValueError, match="eta"):
+        h.validate(eta=1e-3, atol=1e-9)
+
+
+def test_symmetry_check():
+    assert ring_edges(8).is_symmetric()
+    assert SparseGraph.make("hypercube", 8).is_symmetric(atol=1e-7)
+    asym = SparseGraph(dst=np.array([0, 1]), src=np.array([1, 0]),
+                       weight=np.array([0.3, 0.7], np.float32), m=2)
+    assert not asym.is_symmetric()
+
+
+# -- SparseMixer vs dense mixers ---------------------------------------------
+
+def test_sparse_mixer_needs_a_sparse_graph():
+    with pytest.raises(TypeError, match="SparseGraph"):
+        SparseMixer(graph=np.eye(4))
+
+
+@pytest.mark.parametrize("topology,m", [("ring", 9), ("torus", 16),
+                                        ("hypercube", 16), ("random", 12)])
+def test_sparse_apply_matches_dense_matvec(topology, m):
+    import jax.numpy as jnp
+    mixer = MIXERS.build("sparse", m=m, topology=topology, seed=2)
+    A = np.asarray(mixer.graph.to_dense())
+    x = np.random.default_rng(0).normal(size=(m, 5)).astype(np.float32)
+    out = np.asarray(mixer.apply(jnp.asarray(x), 0))
+    ref = A @ x
+    bound = 1e-6
+    assert np.abs(out - ref).max() <= bound, (topology, np.abs(out - ref).max())
+
+
+def test_registry_builds_sparse_from_prebuilt_graph_and_delay():
+    g = ring_edges(6)
+    mixer = MIXERS.build("sparse", m=6, graph=g)
+    assert isinstance(mixer, SparseMixer) and mixer.name == "ring"
+    resolved = _spec(nodes=6, delay=2).resolve_mixer()
+    assert isinstance(resolved, DelayedMixer) and resolved.delay == 2
+    assert isinstance(resolved.inner, SparseMixer)
+
+
+# -- full-run equivalence: sparse vs dense, both engines, delay, noise on ----
+
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+@pytest.mark.parametrize("delay", [0, 2])
+def test_run_sparse_matches_dense_ring(engine, delay):
+    """run(mixer='sparse') vs run(mixer='ring'): same topology, Laplace
+    noise ON — every trajectory within the asserted reduction-order bound."""
+    dense = run(_spec(mixer="ring", mixer_options={}, delay=delay),
+                engine=engine, chunk_rounds=7, warmup=False,
+                compute_regret=False)
+    sparse = run(_spec(delay=delay), engine=engine, chunk_rounds=7,
+                 warmup=False, compute_regret=False)
+    for f in ("final_w", "loss", "w_bar_loss", "sparsity", "correct"):
+        a, b = np.asarray(getattr(dense, f)), np.asarray(getattr(sparse, f))
+        assert np.abs(a - b).max() <= RUN_ATOL, \
+            f"{engine}/delay={delay}: {f} off by {np.abs(a - b).max()}"
+    np.testing.assert_array_equal(dense.eps_ledger, sparse.eps_ledger)
+
+
+@pytest.mark.parametrize("delay", [0, 2])
+def test_sparse_sim_vs_dist_bit_identical(delay):
+    """The cross-engine bit-identity contract extends to the sparse mixer."""
+    sim = run(_spec(delay=delay), engine="sim", chunk_rounds=7,
+              warmup=False, compute_regret=False)
+    dist = run(_spec(delay=delay), engine="dist", chunk_rounds=7,
+               warmup=False, compute_regret=False)
+    np.testing.assert_array_equal(sim.final_w, dist.final_w)
+    np.testing.assert_array_equal(np.asarray(sim.loss),
+                                  np.asarray(dist.loss))
+
+
+def test_run_sparse_torus_matches_dense_torus():
+    dense = run(_spec(mixer="torus", mixer_options={}, nodes=16),
+                chunk_rounds=7, warmup=False, compute_regret=False)
+    sparse = run(_spec(nodes=16, mixer_options={"topology": "torus"}),
+                 chunk_rounds=7, warmup=False, compute_regret=False)
+    assert np.abs(dense.final_w - sparse.final_w).max() <= RUN_ATOL
+
+
+def test_sparse_checkpoint_resume_bit_identical(tmp_path):
+    sp = _spec(delay=1, horizon=12)
+    full = run(sp, chunk_rounds=6, warmup=False, compute_regret=False)
+    ck = str(tmp_path / "ck")
+    run(sp, chunk_rounds=6, warmup=False, compute_regret=False,
+        checkpoint_every=6, checkpoint_dir=ck, horizon=6)
+    resumed = run(sp, chunk_rounds=6, warmup=False, compute_regret=False,
+                  checkpoint_dir=ck, resume=True)
+    assert resumed.start_round == 6
+    np.testing.assert_array_equal(full.final_w, resumed.final_w)
