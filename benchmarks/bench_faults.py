@@ -1,0 +1,205 @@
+"""Fault-injection bench: regret / throughput under an unreliable fabric,
+anchored by the ``zero_fault_identical`` bit-identity gate.
+
+Two properties of `repro.faults` are measured and gated here:
+
+  * **Zero-cost abstraction**: a ``FaultSpec`` with every rate at zero runs
+    the SAME uniform draws and self-healing renormalization as a faulty
+    spec, yet must be bit-identical to a run with no faults at all — for
+    both engines, delay in {0, 2}, the dense mixer form, and (with
+    ``--devices``) the node-sharded path. Any drift here means the fault
+    machinery perturbs the round math it claims to only mask
+    (``zero_fault_identical``, also asserted in tests/test_faults.py).
+  * **Graceful degradation**: the accuracy and throughput retained at a
+    5% link-drop rate relative to the zero-rate run
+    (``accuracy_retention_floor`` / ``throughput_retention_floor``) —
+    check_bench gates both as ``*_floor`` keys so a future change cannot
+    quietly turn "survives a lossy DCN" into "collapses under it". The
+    full rate curve and a transient-partition recovery point ride along
+    as informational fields.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults [--smoke]
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_faults --smoke --devices 4
+
+Writes BENCH_faults.json; benchmarks/check_bench.py gates
+``zero_fault_identical`` and the ``*_floor`` ratios against the committed
+baselines (sharded checks stay absent without --devices).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.api import RunSpec, run
+from repro.faults import FaultSpec, rounds_to_recover
+
+# float32 reduction-order bound for sharded-vs-unsharded trajectories
+# (the tests/test_shard_node.py contract)
+BOUND = 5e-6
+
+FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity")
+
+
+def _spec(m: int, *, dim: int, horizon: int, mixer: str = "sparse",
+          delay: int = 0, faults=None, faults_options=None) -> RunSpec:
+    return RunSpec(nodes=m, dim=dim, horizon=horizon, eps=1.0, alpha0=0.5,
+                   lam=0.01, stream="drift", stream_options={"period": 7},
+                   mixer=mixer, mixer_options={"topology": "ring"},
+                   delay=delay, faults=faults,
+                   faults_options=faults_options or {})
+
+
+def _bit_identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in FIELDS)
+
+
+def _timed(spec: RunSpec, **kw):
+    """(result, wall) with compile excluded: warmup=True compiles the first
+    chunk outside the runner's timed region (needs >= 2 chunks)."""
+    chunk = max(1, spec.horizon // 2)
+    res = run(spec, chunk_rounds=chunk, warmup=True, **kw)
+    return res, float(res.wall_clock)
+
+
+def _zero_fault_checks(*, nodes: int, dim: int, horizon: int,
+                       n_devices: int | None) -> list[dict]:
+    """One clean-vs-zero-rate-faults pair per configuration.
+
+    The zero-rate spec exercises the REAL machinery (per-round uniform
+    draws, keep masks, healed-mass fold) — keep == 1.0 everywhere makes
+    every op bitwise equal to the clean mixer, which is the property gated.
+    """
+    kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+              warmup=False)
+    zero = {"link_rate": 0.0}
+    configs = [("sparse", engine, delay, None)
+               for engine in ("sim", "dist") for delay in (0, 2)]
+    configs.append(("dense", "sim", 0, None))
+    if n_devices is not None:
+        configs += [("sparse", engine, delay, n_devices)
+                    for engine in ("sim", "dist") for delay in (0, 2)]
+    checks = []
+    for mixer, engine, delay, nd in configs:
+        clean = run(_spec(nodes, dim=dim, horizon=horizon, mixer=mixer,
+                          delay=delay),
+                    engine=engine, node_devices=nd, **kw)
+        faulted = run(_spec(nodes, dim=dim, horizon=horizon, mixer=mixer,
+                            delay=delay, faults="links", faults_options=zero),
+                      engine=engine, node_devices=nd, **kw)
+        checks.append({"mixer": mixer, "engine": engine, "delay": delay,
+                       "node_devices": nd,
+                       "identical": _bit_identical(clean, faulted)})
+    return checks
+
+
+def run_bench(*, nodes: int, dim: int, horizon: int,
+              rates: list[float],
+              devices: int | str | None = None,
+              bench_path: str = "BENCH_faults.json") -> dict:
+    n_devices = None
+    if devices is not None:
+        from repro.launch.mesh import node_mesh as make_node_mesh
+        mesh = make_node_mesh(devices)
+        if mesh is not None:
+            n_devices = int(mesh.shape["node"])
+
+    checks = _zero_fault_checks(nodes=nodes, dim=dim, horizon=horizon,
+                                n_devices=n_devices)
+    zero_fault_identical = all(c["identical"] for c in checks)
+    print(f"  zero_fault_identical={zero_fault_identical} "
+          f"({len(checks)} configs)", flush=True)
+
+    # degradation curve: link-drop rates, the paper's workload otherwise
+    curve = []
+    for rate in rates:
+        res, wall = _timed(
+            _spec(nodes, dim=dim, horizon=horizon, faults="links",
+                  faults_options={"link_rate": rate}),
+            compute_regret=True)
+        faults_m = res.metrics.get("faults", {})
+        curve.append({
+            "link_rate": rate,
+            "regret_final": (None if res.regret is None
+                             else round(float(res.regret[-1]), 4)),
+            "accuracy": round(float(res.accuracy), 4),
+            "rounds_per_sec": round(res.rounds_per_sec, 1),
+            "mean_connectivity": faults_m.get("mean_connectivity"),
+        })
+        print(f"  link_rate={rate}: accuracy={curve[-1]['accuracy']} "
+              f"regret={curve[-1]['regret_final']} "
+              f"conn={curve[-1]['mean_connectivity']}", flush=True)
+
+    # retention floors vs the ZERO-RATE row (same machinery, no drops), so
+    # the ratio isolates the fault rate from the wrapper's own overhead
+    base, hit = curve[0], curve[1]
+    accuracy_floor = (round(hit["accuracy"] / base["accuracy"], 4)
+                      if base["accuracy"] > 0 else None)
+    throughput_floor = (round(hit["rounds_per_sec"]
+                              / base["rounds_per_sec"], 4)
+                        if base["rounds_per_sec"] > 0 else None)
+
+    # informational: rounds to reconverge after a transient partition heals
+    kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+              warmup=False)
+    heal = horizon // 2
+    part = FaultSpec(partitions=((horizon // 4, heal, nodes // 2),))
+    clean = run(_spec(nodes, dim=dim, horizon=horizon), **kw)
+    parted = run(_spec(nodes, dim=dim, horizon=horizon, faults=part), **kw)
+    recovery = rounds_to_recover(clean.correct.mean(axis=1),
+                                 parted.correct.mean(axis=1),
+                                 heal_round=heal, tol=0.05, window=3)
+
+    bench = {
+        "bench": "faults_degradation",
+        "nodes": nodes,
+        "dim": dim,
+        "rounds": horizon,
+        "devices": n_devices,
+        "zero_fault_identical": zero_fault_identical,
+        "zero_fault_checks": checks,
+        "curve": curve,
+        "accuracy_retention_floor": accuracy_floor,
+        "throughput_retention_floor": throughput_floor,
+        "partition_recovery_rounds": recovery,
+        "partition_min_connectivity": float(np.min(parted.connectivity)),
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    if not zero_fault_identical:
+        bad = [c for c in checks if not c["identical"]]
+        raise AssertionError(
+            f"zero-rate FaultSpec is not bit-identical to the fault-free "
+            f"run for {bad} — the fault machinery perturbs the round math")
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds) for the CI jobs")
+    ap.add_argument("--devices", default=None, metavar="N|auto",
+                    help="also gate the node-sharded zero-fault identity "
+                         "over N local devices ('auto' = all, skipping the "
+                         "sharded checks on a 1-device host)")
+    ap.add_argument("--bench-path", default="BENCH_faults.json")
+    args = ap.parse_args()
+    devices = (None if args.devices is None
+               else "auto" if args.devices == "auto" else int(args.devices))
+    if args.smoke:
+        kw = dict(nodes=16, dim=8, horizon=24, rates=[0.0, 0.05, 0.2])
+    else:
+        kw = dict(nodes=32, dim=16, horizon=40, rates=[0.0, 0.05, 0.2])
+    bench = run_bench(devices=devices, bench_path=args.bench_path, **kw)
+    print(f"zero_fault_identical={bench['zero_fault_identical']} "
+          f"accuracy_retention_floor={bench['accuracy_retention_floor']} "
+          f"throughput_retention_floor={bench['throughput_retention_floor']} "
+          f"partition_recovery_rounds={bench['partition_recovery_rounds']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,10 @@ freshly written BENCH_*.json against its committed baseline under
     any ``*_ms`` latency field climbs above baseline / ``tolerance`` —
     the serving bench's sustained-QPS floor and latency ceiling
     (BENCH_serve baselines are committed pre-softened for CI, so the
-    default tolerance leaves further headroom on top).
+    default tolerance leaves further headroom on top);
+  * any ``*_floor`` retention ratio (e.g. BENCH_faults' accuracy /
+    throughput retention under injected faults) drops below ``tolerance``
+    x baseline — graceful degradation is a gated property, not a hope.
 
 Baseline fields that are null are skipped (e.g. the sharded timings on a
 1-device host, or a speedup too noise-bound to gate); fields present in
@@ -55,6 +58,11 @@ def _is_speedup_key(key: str) -> bool:
 def _is_rate_key(key: str) -> bool:
     """Throughput floors: higher is better, gated like speedups."""
     return key == "qps" or key.endswith("_qps")
+
+
+def _is_floor_key(key: str) -> bool:
+    """Degradation floors (retention ratios): higher is better."""
+    return key.endswith("_floor")
 
 
 def _is_latency_key(key: str) -> bool:
@@ -107,13 +115,15 @@ def check_file(current_path: str, baseline_path: str,
                 failures.append(
                     f"{current_path}: {where} = {cur!r}, baseline "
                     f"{base_val!r} — the bit-identity guarantee regressed")
-        elif (_is_speedup_key(key) or _is_rate_key(key)) \
+        elif (_is_speedup_key(key) or _is_rate_key(key)
+                or _is_floor_key(key)) \
                 and isinstance(base_val, (int, float)) \
                 and not isinstance(base_val, bool):
             cur = _get(current, path, key)
             checked += 1
             floor = base_val * tolerance
             what = ("vectorization win" if _is_speedup_key(key)
+                    else "degradation floor" if _is_floor_key(key)
                     else "serving throughput")
             if not isinstance(cur, (int, float)) or isinstance(cur, bool):
                 failures.append(

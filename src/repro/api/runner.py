@@ -124,6 +124,8 @@ class RunResult:
     correct: np.ndarray | None = None     # (T, m) prediction correctness
     sparsity: np.ndarray | None = None    # (T,) zero-fraction of w
     regret: np.ndarray | None = None      # (T,) cumulative (Definition 3)
+    connectivity: np.ndarray | None = None  # (T,) surviving off-diag mixing
+    #                                         weight fraction (faulty runs)
     accuracy: float | None = None         # mean correctness, last 20%
     final_w: np.ndarray | None = None     # (m, n) final primal parameters
     final_state: Any = None               # engine state (checkpointable)
@@ -150,7 +152,7 @@ class RunResult:
         }
 
     _ARRAY_FIELDS = ("eps_ledger", "loss", "w_bar_loss", "correct",
-                     "sparsity", "regret", "final_w")
+                     "sparsity", "regret", "connectivity", "final_w")
 
     def to_record(self, include_state: bool = False) -> dict:
         """JSON-able dict that `from_record` reconstructs exactly.
@@ -376,6 +378,13 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         eps_per_round=spec.eps if mech.is_private else math.inf,
         disjoint_streams=getattr(stream, "disjoint", False))
 
+    # repro.faults: one resolved faulty mixer for metrics + accounting — the
+    # fault pattern is seeded by FaultSpec.seed, so this instance agrees
+    # bit-for-bit with the one baked into the chunk program
+    fault_mixer = (spec.resolve_mixer()
+                   if getattr(spec, "faults", None) is not None else None)
+    fault_sched = getattr(fault_mixer, "schedule", None)
+
     nmesh = None
     if node_devices is not None or node_mesh is not None:
         from repro.api.shard_node import resolve_node_mesh
@@ -422,7 +431,11 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         # region must cover the whole round computation, and on_chunk
         # consumers (snapshot publication) need a finished state
         jax.block_until_ready((eng_state, outs))
-        accountant.step(b - a)
+        if fault_sched is not None and fault_sched.has_crashes:
+            # crashed rounds release no noised broadcast — don't charge them
+            accountant.step(b - a, participation=fault_sched.participation(a, b))
+        else:
+            accountant.step(b - a)
         done_to = b
         losses.append(np.asarray(outs.loss))
         wb_losses.append(np.asarray(outs.w_bar_loss))
@@ -479,7 +492,24 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         final_state=eng_state,
     )
     result.metrics = result.summary()
+    if fault_mixer is not None and done > 0:
+        conn = np.asarray(fault_mixer.connectivity(T))[start:]
+        result.connectivity = conn
+        result.metrics["faults"] = _fault_metrics(spec, fault_sched, conn)
     return result
+
+
+def _fault_metrics(spec: RunSpec, fault_sched, conn: np.ndarray) -> dict:
+    """Per-run degradation summary attached as ``metrics['faults']``."""
+    name = (spec.faults if isinstance(spec.faults, str)
+            else getattr(spec.faults, "name", "faults"))
+    return {
+        "spec": name,
+        "mean_connectivity": float(conn.mean()),
+        "min_connectivity": float(conn.min()),
+        "crash_windows": len(getattr(fault_sched, "crash_windows", ()) or ()),
+        "partitions": len(getattr(fault_sched, "partitions", ()) or ()),
+    }
 
 
 # -- vectorized multi-seed execution ----------------------------------------
@@ -641,6 +671,12 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         eps_per_round=spec.eps if mech.is_private else math.inf,
         disjoint_streams=getattr(streams[0], "disjoint", False))
 
+    # FaultSpec.seed is independent of RunSpec.seed, so every seed in the
+    # batch runs under the SAME fault pattern (it's part of the scenario)
+    fault_mixer = (base.resolve_mixer()
+                   if getattr(base, "faults", None) is not None else None)
+    fault_sched = getattr(fault_mixer, "schedule", None)
+
     chunk_fn, init_fn = make_chunk_program(base, engine)
     init_states = [init_fn(jax.random.PRNGKey(s)) for s in seeds]
     batched_init = jax.tree_util.tree_map(
@@ -735,7 +771,10 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         # block on state + outputs so the timed region measures the whole
         # round computation, not just the dispatch of the metric arrays
         jax.block_until_ready((eng_state, outs))
-        accountant.step(b - a)
+        if fault_sched is not None and fault_sched.has_crashes:
+            accountant.step(b - a, participation=fault_sched.participation(a, b))
+        else:
+            accountant.step(b - a)
         # [:S] masks the pad seeds (duplicates of the last real seed) out of
         # every recorded trajectory; a no-op on the unsharded path
         losses.append(np.asarray(outs.loss)[:S])           # (S, C, m)
@@ -768,6 +807,10 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
                   "devices": D, "pad_seeds": pad,
                   "seed_rounds_per_sec": (S * done / wall if wall > 0
                                           else float("inf"))}
+    conn = faults_info = None
+    if fault_mixer is not None and done > 0:
+        conn = np.asarray(fault_mixer.connectivity(T))[start:]
+        faults_info = _fault_metrics(base, fault_sched, conn)
 
     results = []
     for i, (s, st) in enumerate(zip(seeds, streams)):
@@ -791,12 +834,15 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
             correct=correct[i] if correct.size else None,
             sparsity=sparsity[i] if sparsity.size else None,
             regret=None if regret is None else np.asarray(regret),
+            connectivity=None if conn is None else conn.copy(),
             accuracy=float(correct[i, -tail:].mean()) if correct.size else None,
             final_w=_final_primal(specs[i], engine, _index_tree(eng_state, i)),
             final_state=_index_tree(eng_state, i),
         )
         res.metrics = res.summary()
         res.metrics["batch"] = dict(batch_info)
+        if faults_info is not None:
+            res.metrics["faults"] = dict(faults_info)
         results.append(res)
     return results
 

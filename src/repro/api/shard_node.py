@@ -220,7 +220,7 @@ def _state_pspecs(template, lead: tuple):
 
 
 def _local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
-                    delay: int) -> Callable:
+                    delay: int, schedule=None, graph=None) -> Callable:
     """One gossip round over THIS shard's block of nodes.
 
     Mirrors `Algorithm1.round` / `GossipDP.update` term for term; the only
@@ -230,6 +230,11 @@ def _local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
     zero-padded to m_pad rows (dynamic_slice clamps, so padding must happen
     BEFORE the slice or the last shard would read overlapping rows) and each
     shard keeps only its block.
+
+    ``schedule`` (a `repro.faults.FaultSchedule`, with the global ``graph``
+    it was wrapped around) swaps the mixer for `FaultyShardedSparseMixer`
+    and freezes crashed rows of the local block, mirroring the unsharded
+    engines' fault hooks.
     """
     from repro.core import prox
     from repro.core.algorithm1 import (RoundOutput, SimState,
@@ -243,7 +248,11 @@ def _local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
     clipper = spec.resolve_clipper()
     omd = spec.omd_config()
     loss_and_grad = spec.loss_and_grad or hinge_loss_and_grad
-    smixer = ShardedSparseMixer(part, delay=delay)
+    if schedule is not None:
+        from repro.faults.mixers import FaultyShardedSparseMixer
+        smixer = FaultyShardedSparseMixer(part, graph, schedule, delay=delay)
+    else:
+        smixer = ShardedSparseMixer(part, delay=delay)
 
     def round_fn(state, batch):
         x, y = batch                              # (block, n), (block,)
@@ -276,6 +285,13 @@ def _local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
         else:
             mixed = smixer.mix(theta, tilde, mech.noise_self, state.t)
         theta_next = rule.dual_step(mixed, grad, ctx)
+        if schedule is not None and schedule.has_crashes:
+            # crashed rows of this block freeze (repro.faults), matching the
+            # unsharded engines' hook; pad rows stay zero either way
+            alive = _pad_axis(schedule.alive_mask(state.t), m_pad - m, 0)
+            alive_blk = jax.lax.dynamic_slice_in_dim(alive, d * block, block,
+                                                     axis=0)
+            theta_next = jnp.where(alive_blk[:, None], theta_next, theta)
 
         # global metrics: masked partial sums psum'd over the mesh axis —
         # same algebra as the dense engines up to reduction order
@@ -350,13 +366,30 @@ def make_node_chunk_fn(spec: RunSpec, engine: str, mesh,
         raise ValueError("batched node sharding needs a ('seed','node') mesh")
 
     mixer = spec.resolve_mixer()
-    graph, delay = sparse_graph_and_delay(mixer)
+    schedule = getattr(mixer, "schedule", None)
+    if schedule is not None:
+        # repro.faults: the spec resolved to a faulty mixer — shard its
+        # INNER edge list and rebuild the fault masks per device block
+        from repro.faults.mixers import FaultySparseMixer
+        if not isinstance(mixer, FaultySparseMixer):
+            raise ValueError(
+                f"node sharding under faults needs the sparse edge-list path "
+                f"(mixer='sparse' or a ring), got {type(mixer).__name__}")
+        if schedule.max_extra:
+            raise ValueError(
+                "stragglers are not supported under node sharding — "
+                "per-class delay rings do not shard; drop "
+                "straggler_rate/stragglers or run unsharded")
+        graph, delay = mixer.inner.graph, mixer.base_delay
+    else:
+        graph, delay = sparse_graph_and_delay(mixer)
     if int(graph.m) != int(spec.nodes):
         raise ValueError(f"graph has m={graph.m} nodes but RunSpec.nodes="
                          f"{spec.nodes}")
     part = partition_graph(graph, D)
     m, pad = part.m, part.m_pad - part.m
-    round_fn = _local_round_fn(spec, engine, part, delay)
+    round_fn = _local_round_fn(spec, engine, part, delay,
+                               schedule=schedule, graph=graph)
 
     def local_chunk(state, xs, ys):
         return jax.lax.scan(round_fn, state, (xs, ys))

@@ -71,6 +71,13 @@ class RunSpec:
              form of ``mixer`` with per-edge delays drawn from the seeded
              distribution, capped at ``delay``. None (default) keeps the
              uniform-delay behaviour.
+    faults / faults_options:
+             fault scenario for the gossip fabric (repro.faults): a FAULTS
+             registry name or a FaultSpec instance. Compiles against
+             (nodes, horizon) and wraps the resolved mixer in its faulty
+             form; see docs/faults.md. The fault pattern is seeded by
+             FaultSpec.seed, NOT RunSpec.seed — it is part of the
+             scenario, so multi-seed sweeps share the same weather.
     """
 
     nodes: int
@@ -101,11 +108,27 @@ class RunSpec:
     # constructed Stream instance; stream_options forward to the factory
     stream: str | Stream = "social_sparse"
     stream_options: dict = dataclasses.field(default_factory=dict)
+    # fault scenario (repro.faults): FAULTS registry name or FaultSpec
+    faults: Any = None
+    faults_options: dict = dataclasses.field(default_factory=dict)
 
     # -- protocol resolution -------------------------------------------------
 
+    def resolve_faults(self):
+        """Compiled `repro.faults.FaultSchedule`, or None without faults."""
+        if self.faults is None:
+            return None
+        from repro.faults import FAULTS
+        fault_spec = FAULTS.build(self.faults, self.faults_options)
+        return fault_spec.compile(m=self.nodes, horizon=self.horizon)
+
     def resolve_mixer(self) -> Mixer:
         if self.delay_dist is not None:
+            if self.faults is not None:
+                raise ValueError(
+                    "faults do not compose with delay_dist (per-edge "
+                    "heterogeneous delays) — model slow links as FaultSpec "
+                    "stragglers instead")
             if not isinstance(self.mixer, str):
                 raise ValueError(
                     "delay_dist needs a topology NAME for the dense per-edge "
@@ -140,6 +163,10 @@ class RunSpec:
                 f"mixer already carries delay={mixer_delay}")
         if self.delay and not mixer_delay:
             mixer = DelayedMixer(inner=mixer, delay=self.delay)
+        faults = self.resolve_faults()
+        if faults is not None:
+            from repro.faults import wrap_mixer
+            mixer = wrap_mixer(mixer, faults)
         return mixer
 
     def resolve_mechanism(self) -> Mechanism:

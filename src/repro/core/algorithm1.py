@@ -181,6 +181,14 @@ class Algorithm1:
                                    self.mechanism.noise_self, state.t)
         theta_next = self.local_rule.dual_step(mixed, grad, ctx)
 
+        # Fault injection (repro.faults): a crashed node freezes its local
+        # update and rejoins from this very state once its window ends. The
+        # branch is python-static — specs without crash windows pay nothing.
+        fault_sched = getattr(self.mixer, "schedule", None)
+        if fault_sched is not None and fault_sched.has_crashes:
+            alive = fault_sched.alive_mask(state.t)
+            theta_next = jnp.where(alive[:, None], theta_next, state.theta)
+
         # Definition 3 regret is w.r.t. the average parameter w_bar. The
         # margin is an explicit multiply+reduce (not a matvec einsum) so the
         # op lowers identically with or without a leading vmapped seed axis —

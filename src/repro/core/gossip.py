@@ -198,6 +198,15 @@ class GossipDP:
                                     t=state.t, mechanism=self.mechanism)
         theta_next = jax.tree_util.tree_map(
             lambda th, g: self.local_rule.dual_step(th, g, ctx), mixed, grads)
+        # Fault injection (repro.faults): crashed nodes freeze every leaf of
+        # their local state until the crash window ends (python-static check).
+        fault_sched = getattr(self.mixer, "schedule", None)
+        if fault_sched is not None and fault_sched.has_crashes:
+            alive = fault_sched.alive_mask(state.t)
+            theta_next = jax.tree_util.tree_map(
+                lambda nxt, cur: jnp.where(
+                    alive.reshape((-1,) + (1,) * (nxt.ndim - 1)), nxt, cur),
+                theta_next, state.theta)
         new_state = GossipState(theta=theta_next, t=state.t + 1, key=key,
                                 history=new_history)
         metrics = {

@@ -124,6 +124,7 @@ class PrivacyAccountant:
     eps_per_round: float
     rounds: int = 0
     disjoint_streams: bool = True
+    node_rounds: Any = None   # optional (m,) per-node participated rounds
 
     def __post_init__(self):
         if self.eps_per_round < 0:
@@ -131,10 +132,33 @@ class PrivacyAccountant:
         if self.rounds < 0:
             raise ValueError("rounds must be >= 0")
 
-    def step(self, k: int = 1) -> None:
+    def step(self, k: int = 1, participation: Any = None) -> None:
+        """Advance ``k`` rounds; ``participation`` (optional, (m,) ints)
+        says how many of them each node actually spent eps in.
+
+        A node only releases a noised broadcast in rounds it participates
+        in (repro.faults: crashed rounds draw no attention from the
+        adversary), so charging it for the full chunk overstates its spend.
+        The first masked call starts per-node tracking, back-filling rounds
+        stepped before it as full participation.
+        """
         if k < 0:
             raise ValueError("cannot step a negative number of rounds")
+        prior = self.rounds
         self.rounds += k
+        if participation is not None:
+            import numpy as np
+            part = np.asarray(participation, np.int64).ravel()
+            if part.size and ((part < 0).any() or (part > k).any()):
+                raise ValueError(
+                    f"participation counts must be in [0, {k}] for a "
+                    f"{k}-round step; got range "
+                    f"[{part.min()}, {part.max()}]")
+            if self.node_rounds is None:
+                self.node_rounds = np.full(part.shape, prior, np.int64)
+            self.node_rounds = self.node_rounds + part
+        elif self.node_rounds is not None:
+            self.node_rounds = self.node_rounds + k
 
     def guarantee_at(self, rounds: int) -> float:
         """Cumulative eps after ``rounds`` rounds.
@@ -160,10 +184,29 @@ class PrivacyAccountant:
         T = self.rounds if rounds is None else rounds
         return [self.guarantee_at(t) for t in range(1, T + 1)]
 
+    def per_node_guarantee(self):
+        """(m,) cumulative eps per node, or None without participation
+        tracking. Parallel composition: a node that ever participated is at
+        eps_per_round, one that never did is at 0; sequential composes its
+        own participated rounds linearly."""
+        if self.node_rounds is None:
+            return None
+        import numpy as np
+        counts = np.asarray(self.node_rounds, np.int64)
+        if self.disjoint_streams:
+            return np.where(counts > 0, self.eps_per_round, 0.0)
+        return self.eps_per_round * counts.astype(np.float64)
+
     def summary(self) -> dict:
-        return {
+        out = {
             "eps_per_round": self.eps_per_round,
             "rounds": self.rounds,
             "eps_total": self.guarantee,
             "composition": "parallel (disjoint)" if self.disjoint_streams else "sequential",
         }
+        if self.node_rounds is not None:
+            per_node = self.per_node_guarantee()
+            out["participated_rounds"] = [int(v) for v in self.node_rounds]
+            out["eps_per_node_max"] = float(per_node.max())
+            out["eps_per_node_min"] = float(per_node.min())
+        return out

@@ -1,0 +1,44 @@
+"""repro.faults — fault injection and graceful degradation for gossip over
+unreliable data-center networks.
+
+The paper assumes a perfect fabric; this package makes "does the algorithm
+survive a real DCN?" a measured property. A declarative
+:class:`FaultSpec` (registry-backed, carried on ``RunSpec.faults``)
+compiles into a seeded, jit/scan-safe :class:`FaultSchedule` of per-round
+link drops, transient partitions, node crash windows and stragglers;
+:func:`wrap_mixer` lifts any registered mixer (sparse, dense, delayed,
+node-sharded) onto that schedule with per-round self-healing
+renormalization, so both engines, the seed-vmap sweep and the
+("seed","node") grid all run under faults. Crashed nodes freeze their
+local update, spend no eps (`PrivacyAccountant` participation masks), drop
+out of mixing and rejoin from their last state. A FaultSpec with every
+rate at zero is bit-identical to a fault-free run — gated in CI as
+``zero_fault_identical`` (benchmarks/bench_faults.py). See docs/faults.md.
+
+>>> from repro.faults import FAULTS, FaultSpec
+>>> sorted(FAULTS.names())
+['crash', 'dcn', 'links', 'none', 'partition']
+>>> FAULTS.build("links", {"link_rate": 0.0}).is_zero
+True
+>>> FaultSpec(partitions=((4, 8, 2),)).compile(m=4).partitions
+((4, 8, 2),)
+"""
+from repro.faults.metrics import degradation, rounds_to_recover
+from repro.faults.mixers import (FaultyDenseMixer, FaultyShardedSparseMixer,
+                                 FaultySparseMixer, wrap_mixer)
+from repro.faults.schedule import FaultSchedule, edge_link_idx, link_table
+from repro.faults.spec import FAULTS, FaultSpec
+
+__all__ = [
+    "FAULTS",
+    "FaultSpec",
+    "FaultSchedule",
+    "FaultySparseMixer",
+    "FaultyDenseMixer",
+    "FaultyShardedSparseMixer",
+    "wrap_mixer",
+    "degradation",
+    "rounds_to_recover",
+    "link_table",
+    "edge_link_idx",
+]

@@ -1,0 +1,431 @@
+"""Faulty mixers — lift any registered mixer onto an unreliable fabric.
+
+`wrap_mixer(mixer, schedule)` returns a mixer that applies the schedule's
+per-round link drops, partitions, crash masks and straggler lags while
+keeping the mixing matrix ROW-stochastic every round (the time-varying-
+graph condition the gossip regret analysis needs). Renormalization is
+*self-healing*: each off-diagonal edge keeps ``w * keep(t)`` and the
+dropped mass ``w * (1 - keep(t))`` folds onto the destination row's
+self-loop — a node that hears from fewer neighbors leans on its own state,
+no division anywhere.
+
+That formulation is also what makes the ``zero_fault_identical`` gate
+non-vacuous: at all-zero rates the keep mask is exactly 1.0 (the uniform
+draw still happens — see `FaultSchedule.link_keep`), so every effective
+weight is ``w * 1.0`` and every healed term is ``+ 0.0`` — bit-identical
+to the clean mixer's arithmetic, while still executing the full fault
+machinery under jit/scan.
+
+Symmetry: link drops are drawn per undirected LINK (`link_table`), so a
+symmetric input graph keeps ``A_eff[i, j] == A_eff[j, i]`` off the
+diagonal at every round. Column stochasticity is intentionally given up
+under faults (only row sums are required for consensus-style mixing).
+
+>>> import jax.numpy as jnp
+>>> from repro.api.mixers import MIXERS
+>>> from repro.faults import FaultSpec, wrap_mixer
+>>> clean = MIXERS.build("sparse", m=4, topology="ring")
+>>> fm = wrap_mixer(MIXERS.build("sparse", m=4, topology="ring"),
+...                 FaultSpec().compile(m=4))
+>>> x = jnp.arange(8.0).reshape(4, 2)
+>>> bool((fm.apply(x, 0) == clean.apply(x, 0)).all())   # zero-rate contract
+True
+>>> sched = FaultSpec(link_rate=0.9, seed=3).compile(m=4)
+>>> A = wrap_mixer(MIXERS.build("sparse", m=4, topology="ring"),
+...                sched).apply(jnp.eye(4), 5)
+>>> bool(jnp.allclose(A.sum(axis=1), 1.0))              # row-stochastic
+True
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.mixers import (AlternatingRingMixer, CompleteMixer,
+                              DelayedMixer, DenseMatrixMixer,
+                              DisconnectedMixer, HeterogeneousDelayMixer,
+                              MixerBase, RingRollMixer, SparseMixer, _bcast,
+                              ring_read)
+from repro.api.shard_node import NodePartition, ShardedSparseMixer
+from repro.faults.schedule import FaultSchedule, edge_link_idx, link_table
+
+__all__ = ["FaultySparseMixer", "FaultyDenseMixer",
+           "FaultyShardedSparseMixer", "wrap_mixer"]
+
+
+class FaultySparseMixer(MixerBase):
+    """SparseMixer under a FaultSchedule: per-round edge keeps + healing.
+
+    Requires a stored self-loop on every node — that is where the dropped
+    off-diagonal mass heals to (all standard topologies store one).
+    """
+
+    def __init__(self, inner: SparseMixer, schedule: FaultSchedule,
+                 delay: int = 0):
+        g = inner.graph
+        if int(g.m) != int(schedule.m):
+            raise ValueError(f"mixer has m={g.m} nodes but the fault "
+                             f"schedule was compiled for m={schedule.m}")
+        self.inner = inner
+        self.schedule = schedule
+        self.m = int(g.m)
+        self.base_delay = int(delay)
+        self.delay = int(delay) + schedule.max_extra
+        self.name = f"faulty[{inner.name}]"
+
+        dst = np.asarray(g.dst, np.int64)
+        src = np.asarray(g.src, np.int64)
+        loops = dst == src
+        if np.unique(dst[loops]).size != self.m:
+            raise ValueError(
+                f"fault injection needs a self-loop on every node (dropped "
+                f"edge mass heals onto the diagonal) but topology "
+                f"{inner.name!r} stores only {np.unique(dst[loops]).size} "
+                f"of {self.m}")
+        uniq, self.num_links = link_table(dst, src, self.m)
+        self._uniq_pairs = uniq
+        idx, _ = edge_link_idx(uniq, dst, src, self.m)
+        self._link_idx = jnp.asarray(idx)
+        self._is_loop = jnp.asarray(loops)
+        self._loop_f = jnp.asarray(loops.astype(np.float32))
+        self._dst = inner._dst
+        self._src = inner._src
+        self._w = inner._w
+        self._crossings = tuple(
+            (jnp.asarray((((dst < cut) != (src < cut)) & ~loops)
+                         .astype(np.float32)), int(start), int(end))
+            for start, end, cut in schedule.partitions)
+        # straggler delay classes: edges grouped by their SOURCE node's lag
+        extra = schedule.extra
+        classes = sorted({int(v) for v in extra[src[~loops]]}) \
+            if schedule.max_extra else []
+        self._classes = tuple(
+            (lag, jnp.asarray(((extra[src] == lag) & ~loops)
+                              .astype(np.float32)))
+            for lag in classes)
+
+    def _edge_keep(self, t) -> jax.Array:
+        """(E,) keep in [0, 1] per stored edge; self-loops are always 1."""
+        sched = self.schedule
+        keep = sched.link_keep(t, self.num_links)[self._link_idx]
+        if sched.has_crashes:
+            # a crashed SOURCE sends nothing; the destination row heals
+            keep = keep * sched.alive_f32(t)[self._src]
+        for cross, start, end in self._crossings:
+            # t may be a traced scalar (scan) or a concrete python int
+            in_w = jnp.asarray((t >= start) & (t < end), jnp.float32)
+            keep = keep * (1.0 - cross * in_w)
+        return jnp.where(self._is_loop, 1.0, keep)
+
+    def _weights(self, t) -> tuple[jax.Array, jax.Array]:
+        """(effective edge weights, healed diagonal mass) for round t."""
+        keep = self._edge_keep(t)
+        dropped = self._w * (1.0 - keep)
+        healed = jax.ops.segment_sum(dropped, self._dst,
+                                     num_segments=self.m,
+                                     indices_are_sorted=True)
+        w_eff = self._w * keep + self._loop_f * healed[self._dst]
+        return w_eff, healed
+
+    def apply(self, x, t):
+        w_eff, _ = self._weights(t)
+        w = w_eff.reshape((-1,) + (1,) * (x.ndim - 1))
+        vals = w * x[self._src].astype(jnp.float32)
+        out = jax.ops.segment_sum(vals, self._dst, num_segments=self.m,
+                                  indices_are_sorted=True)
+        return out.astype(x.dtype)
+
+    def diag(self, t):
+        _, healed = self._weights(t)
+        return self.inner._diag + healed
+
+    def mix_history(self, clean, tilde, hist, noise_self, t):
+        # without stragglers every neighbor shares one lag — MixerBase's
+        # ring-read algebra applies verbatim (and bit-identically)
+        if not self._classes:
+            return super().mix_history(clean, tilde, hist, noise_self, t)
+        if hist is None:
+            raise ValueError(
+                f"{type(self).__name__} declares delay={self.delay} but no "
+                "history ring was provided (engine state missing .history)")
+        w_eff, healed = self._weights(t)
+        self_term = tilde if noise_self else clean
+        out = _bcast(self.inner._diag + healed, tilde) * self_term
+        for lag, cls in self._classes:
+            recv = ring_read(hist, t, self.base_delay + lag, tilde)
+            w = (w_eff * cls).reshape((-1,) + (1,) * (tilde.ndim - 1))
+            vals = w * recv[self._src].astype(jnp.float32)
+            out = out + jax.ops.segment_sum(
+                vals, self._dst, num_segments=self.m,
+                indices_are_sorted=True).astype(tilde.dtype)
+        return out
+
+    def connectivity(self, rounds: int) -> np.ndarray:
+        """(rounds,) fraction of off-diagonal weight delivered per round
+        (1.0 = the clean graph; a partition window shows as a dip)."""
+        offdiag = self._w * (1.0 - self._loop_f)
+        denom = jnp.sum(offdiag)
+
+        def frac(t):
+            surv = jnp.sum(self._w * self._edge_keep(t)
+                           * (1.0 - self._loop_f))
+            return jnp.where(denom > 0, surv / denom, 1.0)
+
+        return np.asarray(jax.jit(jax.vmap(frac))(jnp.arange(rounds)))
+
+
+class FaultyDenseMixer(MixerBase):
+    """DenseMatrixMixer under a FaultSchedule (time-varying stacks too).
+
+    Same healing algebra as the sparse form, in dense coordinates:
+    ``A_eff = A * K(t) + diag(rowsum(A * (1 - K(t))))`` with K == 1 on the
+    diagonal, so rows stay stochastic and zero rates are bit-identical.
+    """
+
+    def __init__(self, inner: DenseMatrixMixer, schedule: FaultSchedule,
+                 delay: int = 0):
+        if int(inner.m) != int(schedule.m):
+            raise ValueError(f"mixer has m={inner.m} nodes but the fault "
+                             f"schedule was compiled for m={schedule.m}")
+        self.inner = inner
+        self.schedule = schedule
+        self.m = int(inner.m)
+        self.base_delay = int(delay)
+        self.delay = int(delay) + schedule.max_extra
+        self.name = f"faulty[{inner.name}]"
+
+        support = (np.asarray(inner.stack) > 0).any(axis=0)
+        np.fill_diagonal(support, False)
+        dst, src = np.nonzero(support)
+        uniq, self.num_links = link_table(dst, src, self.m)
+        self._uniq_pairs = uniq
+        idx, _ = edge_link_idx(uniq, dst, src, self.m)
+        L = np.zeros((self.m, self.m), np.int32)
+        L[dst, src] = idx
+        self._link_idx = jnp.asarray(L)
+        self._has_link = jnp.asarray(support)
+        self._eye = jnp.eye(self.m, dtype=jnp.float32)
+        offdiag = ~np.eye(self.m, dtype=bool)
+        self._offdiag = jnp.asarray(offdiag)
+        self._crossings = tuple(
+            (jnp.asarray((((np.arange(self.m)[:, None] < cut)
+                           != (np.arange(self.m)[None, :] < cut)) & offdiag)
+                         .astype(np.float32)), int(start), int(end))
+            for start, end, cut in schedule.partitions)
+        extra = schedule.extra
+        classes = sorted({int(v) for v in extra}) if schedule.max_extra \
+            else []
+        self._classes = tuple(
+            (lag, jnp.asarray(((extra[None, :] == lag) & offdiag)
+                              .astype(np.float32)))
+            for lag in classes)
+
+    def _keep_mat(self, t) -> jax.Array:
+        """(m, m) keep matrix; diagonal and non-edges are exactly 1."""
+        sched = self.schedule
+        keep = jnp.where(self._has_link,
+                         sched.link_keep(t, self.num_links)[self._link_idx],
+                         1.0)
+        if sched.has_crashes:
+            alive = sched.alive_f32(t)
+            keep = keep * jnp.where(self._offdiag, alive[None, :], 1.0)
+        for cross, start, end in self._crossings:
+            # t may be a traced scalar (scan) or a concrete python int
+            in_w = jnp.asarray((t >= start) & (t < end), jnp.float32)
+            keep = keep * (1.0 - cross * in_w)
+        return keep
+
+    def _effective(self, t) -> tuple[jax.Array, jax.Array]:
+        A = self.inner.stack[t % self.inner.stack.shape[0]]
+        keep = self._keep_mat(t)
+        healed = jnp.sum(A * (1.0 - keep), axis=1)
+        return A * keep + healed[:, None] * self._eye, healed
+
+    def apply(self, x, t):
+        A_eff, _ = self._effective(t)
+        return jnp.tensordot(A_eff, x.astype(A_eff.dtype),
+                             axes=1).astype(x.dtype)
+
+    def diag(self, t):
+        _, healed = self._effective(t)
+        return self.inner.diag(t) + healed
+
+    def mix_history(self, clean, tilde, hist, noise_self, t):
+        if not self._classes:
+            return super().mix_history(clean, tilde, hist, noise_self, t)
+        if hist is None:
+            raise ValueError(
+                f"{type(self).__name__} declares delay={self.delay} but no "
+                "history ring was provided (engine state missing .history)")
+        A_eff, healed = self._effective(t)
+        self_term = tilde if noise_self else clean
+        out = _bcast(self.inner.diag(t) + healed, tilde) * self_term
+        for lag, cls in self._classes:
+            recv = ring_read(hist, t, self.base_delay + lag, tilde)
+            Ad = A_eff * cls
+            out = out + jnp.tensordot(Ad, recv.astype(Ad.dtype),
+                                      axes=1).astype(tilde.dtype)
+        return out
+
+    def connectivity(self, rounds: int) -> np.ndarray:
+        off = self._offdiag.astype(jnp.float32)
+
+        def frac(t):
+            A = self.inner.stack[t % self.inner.stack.shape[0]]
+            denom = jnp.sum(A * off)
+            surv = jnp.sum(A * self._keep_mat(t) * off)
+            return jnp.where(denom > 0, surv / denom, 1.0)
+
+        return np.asarray(jax.jit(jax.vmap(frac))(jnp.arange(rounds)))
+
+
+class FaultyShardedSparseMixer(ShardedSparseMixer):
+    """ShardedSparseMixer under a FaultSchedule — the ("node",) mesh path.
+
+    Every shard replays the SAME per-round link draw (the link table is
+    built from the global graph, so a partition edge maps to the identical
+    link id its unsharded copy uses), computes its local healed diagonal
+    mass, and runs the base class's ppermute-halo exchange with the
+    effective weights. Zero-weight padding edges are forced to keep = 1 so
+    they never contribute healed mass. Stragglers need the per-class ring
+    schedule and are not supported on this path.
+    """
+
+    def __init__(self, part: NodePartition, graph,
+                 schedule: FaultSchedule, delay: int = 0,
+                 axis: str = "node"):
+        super().__init__(part, delay=delay, axis=axis)
+        if schedule.max_extra:
+            raise ValueError(
+                "stragglers are not supported on the node-sharded path — "
+                "drop straggler_* from the FaultSpec or run unsharded")
+        self.schedule = schedule
+        m = int(graph.m)
+        uniq, self.num_links = link_table(graph.dst, graph.src, m)
+        D, block = part.devices, part.block
+        dev = np.arange(D)[:, None]
+        per_off = []
+        for o, dl, sl, ww in part.offsets:
+            dst_g = dev * block + np.asarray(dl, np.int64)
+            src_g = ((dev + o) % D) * block + np.asarray(sl, np.int64)
+            idx, valid = edge_link_idx(uniq, dst_g.ravel(), src_g.ravel(), m)
+            loops = dst_g == src_g
+            # self-loops and padding edges (absent from the table) pass
+            # through untouched
+            forced = loops | ~valid.reshape(dst_g.shape)
+            # healed mass folds onto REAL self-loops only: zero-filled
+            # padding slots at offset 0 alias to (dst_g == src_g) but carry
+            # no weight and must not receive the row's healed diagonal
+            loop_f = loops & (np.asarray(ww, np.float32) > 0.0)
+            crossings = tuple(
+                (jnp.asarray((((dst_g < cut) != (src_g < cut)) & ~loops)
+                             .astype(np.float32)), int(start), int(end))
+                for start, end, cut in schedule.partitions)
+            per_off.append((jnp.asarray(idx.reshape(dst_g.shape)),
+                            jnp.asarray(forced),
+                            jnp.asarray(loop_f.astype(np.float32)),
+                            jnp.asarray(np.minimum(src_g, m - 1)
+                                        .astype(np.int32)),
+                            crossings))
+        self._fault_offsets = tuple(per_off)
+
+    def _edge_keeps(self, t) -> list:
+        """Per-offset (E_o,) keep vectors for THIS shard's edges."""
+        sched = self.schedule
+        keep_links = sched.link_keep(t, self.num_links)
+        alive = sched.alive_f32(t) if sched.has_crashes else None
+        d = jax.lax.axis_index(self.axis)
+        keeps = []
+        for idx, forced, _, src_g, crossings in self._fault_offsets:
+            k = keep_links[idx[d]]
+            if alive is not None:
+                k = k * alive[src_g[d]]
+            for cross, start, end in crossings:
+                # t may be a traced scalar (scan) or a concrete python int
+                in_w = jnp.asarray((t >= start) & (t < end), jnp.float32)
+                k = k * (1.0 - cross[d] * in_w)
+            keeps.append(jnp.where(forced[d], 1.0, k))
+        return keeps
+
+    def _healed(self, keeps) -> jax.Array:
+        """(block,) dropped off-diagonal mass per local row."""
+        d = jax.lax.axis_index(self.axis)
+        healed = jnp.zeros((self.part.block,), jnp.float32)
+        for (o, dl, sl, ww), keep in zip(self._offsets, keeps):
+            dropped = ww[d] * (1.0 - keep)
+            healed = healed + jax.ops.segment_sum(
+                dropped, dl[d], num_segments=self.part.block)
+        return healed
+
+    def apply(self, x, t):
+        D = self.part.devices
+        d = jax.lax.axis_index(self.axis)
+        keeps = self._edge_keeps(t)
+        healed = self._healed(keeps)
+        out = jnp.zeros(x.shape, jnp.float32)
+        for (o, dl, sl, ww), keep, fo in zip(self._offsets, keeps,
+                                             self._fault_offsets):
+            halo = x if o == 0 else jax.lax.ppermute(
+                x, self.axis, perm=[(j, (j - o) % D) for j in range(D)])
+            loop_f = fo[2]
+            w_eff = ww[d] * keep + loop_f[d] * healed[dl[d]]
+            w = w_eff.reshape((-1,) + (1,) * (x.ndim - 1))
+            vals = w * halo[sl[d]].astype(jnp.float32)
+            out = out + jax.ops.segment_sum(vals, dl[d],
+                                            num_segments=self.part.block)
+        return out.astype(x.dtype)
+
+    def diag(self, t):
+        base = self._diag_blocks[jax.lax.axis_index(self.axis)]
+        return base + self._healed(self._edge_keeps(t))
+
+
+def wrap_mixer(mixer, schedule: FaultSchedule):
+    """Lift a resolved mixer onto the faulty fabric described by
+    ``schedule``.
+
+    Sparse-form mixers (SparseMixer, RingRollMixer via its exact
+    `ring_edges` form) become `FaultySparseMixer`; dense-form mixers
+    (DenseMatrixMixer stacks, CompleteMixer, AlternatingRingMixer) become
+    `FaultyDenseMixer`. A `DelayedMixer` wrapper contributes its uniform
+    delay as the base staleness. The zero-rate bit-identity contract holds
+    within each family (a lowered ring is compared against the same
+    lowered ring, which is what `RunSpec.resolve_mixer` produces on both
+    sides).
+    """
+    from repro.core.graph import complete_matrix, ring_edges
+
+    base_delay = int(getattr(mixer, "delay", 0))
+    inner = mixer.inner if isinstance(mixer, DelayedMixer) else mixer
+    if isinstance(inner, HeterogeneousDelayMixer):
+        raise ValueError(
+            "faults do not compose with per-edge heterogeneous delays — "
+            "model slow links as FaultSpec stragglers instead")
+    if isinstance(inner, DisconnectedMixer):
+        raise ValueError(
+            "the disconnected topology has no links to fault — nothing "
+            "to inject")
+    if isinstance(inner, RingRollMixer):
+        inner = SparseMixer(graph=ring_edges(inner.m,
+                                             self_weight=inner.self_weight),
+                            name="ring")
+    if isinstance(inner, SparseMixer):
+        return FaultySparseMixer(inner=inner, schedule=schedule,
+                                 delay=base_delay)
+    if isinstance(inner, CompleteMixer):
+        inner = DenseMatrixMixer(stack=complete_matrix(inner.m)[None],
+                                 name="complete")
+    if isinstance(inner, AlternatingRingMixer):
+        eye = np.eye(inner.m, dtype=np.float32)
+        inner = DenseMatrixMixer(
+            stack=np.stack([0.5 * eye + 0.5 * np.roll(eye, 1, axis=0),
+                            0.5 * eye + 0.5 * np.roll(eye, -1, axis=0)]),
+            name="ring_alternating")
+    if isinstance(inner, DenseMatrixMixer):
+        return FaultyDenseMixer(inner=inner, schedule=schedule,
+                                delay=base_delay)
+    raise ValueError(
+        f"cannot inject faults into {type(inner).__name__}: no sparse or "
+        "dense fixed form (use mixer='sparse'/'dense' or ring/complete/"
+        "ring_alternating)")

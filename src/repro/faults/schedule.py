@@ -1,0 +1,228 @@
+"""Compiled fault schedules — seeded, jit/scan-safe per-round fault masks.
+
+A `repro.faults.FaultSpec` is declarative ("drop each link with p=0.05,
+crash node 3 for rounds 10..20"); compiling it against a node count (and,
+for seeded crash draws, a horizon) yields a :class:`FaultSchedule` whose
+per-round queries are pure functions of the traced round counter ``t``:
+
+* ``link_keep(t, num_links)`` — one Bernoulli keep per undirected LINK,
+  drawn from ``fold_in(key, t)`` so every round has its own i.i.d. mask and
+  any consumer (dense mixer, sparse mixer, every shard of a node-sharded
+  mesh) replays the identical draw from the same ``t``. A symmetric input
+  graph therefore stays symmetric under link drops: both directions of a
+  link share one coin.
+* ``alive_mask(t)`` — (m,) node liveness from the compiled crash windows
+  (explicit windows plus windows drawn at compile time from
+  ``crash_rate``); branch-free in ``t`` so it runs inside ``lax.scan``.
+* ``partitions`` — static (start, end, cut) windows; the mixers drop edges
+  crossing the cut while ``start <= t < end``.
+
+The schedule also replays itself on the HOST (`alive_table` /
+`participation`) so the privacy accountant can skip charging eps for
+crashed rounds without touching the jitted round.
+
+Zero-rate contract: a schedule whose spec has every rate at zero still
+draws its uniforms — ``u >= 0.0`` is always True, so the keep vector is
+exactly 1.0 and every downstream multiply/add is bit-exact against the
+fault-free path (the ``zero_fault_identical`` gate).
+
+>>> import numpy as np
+>>> from repro.faults.schedule import link_table, edge_link_idx
+>>> uniq, n = link_table(np.array([0, 0, 1, 1]), np.array([0, 1, 0, 1]), 2)
+>>> n                          # one undirected link {0, 1}; loops excluded
+1
+>>> idx, valid = edge_link_idx(uniq, np.array([0, 1]), np.array([1, 0]), 2)
+>>> idx.tolist(), valid.tolist()       # both directions share the link id
+([0, 0], [True, True])
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultSchedule", "link_table", "edge_link_idx"]
+
+
+def link_table(dst, src, m: int) -> tuple[np.ndarray, int]:
+    """Canonical undirected link numbering for an edge list.
+
+    Returns ``(uniq_pairs, num_links)``: the sorted unordered-pair ids
+    ``min(i,j) * m + max(i,j)`` of every off-diagonal edge, and their count
+    (at least 1 so the per-round uniform draw never has shape (0,)). Both
+    directions of an edge — and every shard's copy of it — map to the same
+    link id, which is what makes the per-round Bernoulli masks symmetric
+    and shard-invariant.
+    """
+    dst = np.asarray(dst, np.int64).ravel()
+    src = np.asarray(src, np.int64).ravel()
+    lo = np.minimum(dst, src)
+    hi = np.maximum(dst, src)
+    pair = lo * int(m) + hi
+    uniq = np.unique(pair[dst != src])
+    return uniq, max(int(uniq.size), 1)
+
+
+def edge_link_idx(uniq_pairs: np.ndarray, dst, src,
+                  m: int) -> tuple[np.ndarray, np.ndarray]:
+    """(link index, found) per edge under a `link_table` numbering.
+
+    ``found`` is False for self-loops and for pairs absent from the table
+    (e.g. the zero-weight padding edges of a node partition); their index
+    is clipped in range so a runtime gather stays safe — consumers force
+    ``keep = 1`` wherever ``found`` is False.
+    """
+    dst = np.asarray(dst, np.int64).ravel()
+    src = np.asarray(src, np.int64).ravel()
+    lo = np.minimum(dst, src)
+    hi = np.maximum(dst, src)
+    pair = lo * int(m) + hi
+    if uniq_pairs.size == 0:
+        return (np.zeros(pair.shape, np.int32),
+                np.zeros(pair.shape, bool))
+    pos = np.clip(np.searchsorted(uniq_pairs, pair), 0,
+                  uniq_pairs.size - 1)
+    found = (uniq_pairs[pos] == pair) & (dst != src)
+    return pos.astype(np.int32), found
+
+
+def _as_windows(rows, width: int, what: str) -> tuple:
+    out = []
+    for row in rows:
+        row = tuple(int(v) for v in row)
+        if len(row) != width:
+            raise ValueError(f"each {what} entry needs {width} ints, "
+                             f"got {row}")
+        out.append(row)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    """A FaultSpec compiled against a node count (and optional horizon).
+
+    Construction resolves everything data-dependent — seeded crash windows,
+    straggler assignments, window validation — so the per-round queries are
+    pure, branch-free functions of the traced round counter.
+    """
+
+    spec: Any                     # repro.faults.FaultSpec
+    m: int
+    horizon: int | None = None
+
+    def __post_init__(self):
+        spec = self.spec
+        m = int(self.m)
+        if m < 1:
+            raise ValueError(f"FaultSchedule needs m >= 1, got {m}")
+        set_ = lambda k, v: object.__setattr__(self, k, v)
+        set_("_key", jax.random.PRNGKey(int(spec.seed)))
+
+        # -- partitions: static (start, end, cut) windows ---------------------
+        parts = _as_windows(spec.partitions, 3, "partition")
+        for start, end, cut in parts:
+            if not 0 <= start < end:
+                raise ValueError(f"partition window [{start}, {end}) is "
+                                 "empty or negative")
+            if not 0 < cut < m:
+                raise ValueError(f"partition cut {cut} must split the node "
+                                 f"range (0, {m})")
+        set_("partitions", parts)
+
+        # -- crash windows: explicit + compile-time seeded draws --------------
+        windows = list(_as_windows(spec.crashes, 3, "crash"))
+        for node, start, end in windows:
+            if not 0 <= node < m:
+                raise ValueError(f"crash node {node} out of range for m={m}")
+            if not 0 <= start < end:
+                raise ValueError(f"crash window [{start}, {end}) is empty "
+                                 "or negative")
+        if spec.crash_rate > 0.0:
+            if self.horizon is None:
+                raise ValueError(
+                    "seeded crashes (crash_rate > 0) need a horizon to draw "
+                    "start rounds from — set RunSpec.horizon or use explicit "
+                    "FaultSpec.crashes windows")
+            length = int(spec.crash_rounds) or max(int(self.horizon) // 8, 1)
+            rng = np.random.default_rng([int(spec.seed), 1])
+            hit = rng.random(m) < float(spec.crash_rate)
+            starts = rng.integers(0, max(int(self.horizon) - length, 1),
+                                  size=m)
+            for node in np.flatnonzero(hit):
+                windows.append((int(node), int(starts[node]),
+                                int(starts[node]) + length))
+        nodes = np.asarray([w[0] for w in windows], np.int32)
+        set_("crash_windows", tuple(windows))
+        set_("_cw_nodes", jnp.asarray(nodes))
+        set_("_cw_start", jnp.asarray([w[1] for w in windows], jnp.int32))
+        set_("_cw_end", jnp.asarray([w[2] for w in windows], jnp.int32))
+
+        # -- stragglers: per-node extra staleness (explicit + seeded) ---------
+        extra = np.zeros(m, np.int32)
+        if spec.straggler_rate > 0.0 and spec.straggler_delay > 0:
+            rng = np.random.default_rng([int(spec.seed), 2])
+            extra[rng.random(m) < float(spec.straggler_rate)] = \
+                int(spec.straggler_delay)
+        for node, lag in _as_windows(spec.stragglers, 2, "straggler"):
+            if not 0 <= node < m:
+                raise ValueError(f"straggler node {node} out of range for "
+                                 f"m={m}")
+            if lag < 0:
+                raise ValueError(f"straggler delay must be >= 0, got {lag}")
+            extra[node] = lag
+        set_("extra", extra)
+
+    # -- static shape of the schedule ----------------------------------------
+
+    @property
+    def has_crashes(self) -> bool:
+        return len(self.crash_windows) > 0
+
+    @property
+    def max_extra(self) -> int:
+        """Deepest straggler lag — widens the history ring by this much."""
+        return int(self.extra.max()) if self.extra.size else 0
+
+    # -- jit/scan-safe per-round queries -------------------------------------
+
+    def link_keep(self, t, num_links: int) -> jax.Array:
+        """(num_links,) float32 keep mask for round ``t`` (1 = delivered).
+
+        Always draws — at ``link_rate == 0`` the comparison ``u >= 0.0`` is
+        identically True, so the mask is exactly 1.0 and the faulty mixers'
+        arithmetic collapses bit-for-bit onto the clean path.
+        """
+        u = jax.random.uniform(jax.random.fold_in(self._key, t),
+                               (int(num_links),))
+        return (u >= jnp.float32(self.spec.link_rate)).astype(jnp.float32)
+
+    def alive_mask(self, t) -> jax.Array:
+        """(m,) bool — False while a node sits inside a crash window."""
+        if not self.has_crashes:
+            return jnp.ones((self.m,), bool)
+        in_w = ((t >= self._cw_start) & (t < self._cw_end)).astype(jnp.int32)
+        crashed = jnp.zeros((self.m,), jnp.int32).at[self._cw_nodes].max(in_w)
+        return crashed == 0
+
+    def alive_f32(self, t) -> jax.Array:
+        return self.alive_mask(t).astype(jnp.float32)
+
+    # -- host-side replay (privacy accounting, analysis) ---------------------
+
+    def alive_table(self, start: int, end: int) -> np.ndarray:
+        """(end - start, m) bool liveness table, replayed with numpy."""
+        T = int(end) - int(start)
+        alive = np.ones((max(T, 0), self.m), bool)
+        for node, s, e in self.crash_windows:
+            lo, hi = max(s - start, 0), min(e - start, T)
+            if lo < hi:
+                alive[lo:hi, node] = False
+        return alive
+
+    def participation(self, start: int, end: int) -> np.ndarray:
+        """(m,) rounds each node actually participated in over
+        ``[start, end)`` — what `PrivacyAccountant.step` charges."""
+        return self.alive_table(start, end).sum(axis=0).astype(np.int64)

@@ -35,7 +35,7 @@ from repro.serve.replay import BurstyReplay
 from repro.serve.service import ServeConfig, ServeService
 from repro.serve.state import (ServeState, Snapshot, make_predict_fn,
                                snapshot_from_state, verify_snapshot)
-from repro.serve.trainer import BackgroundTrainer
+from repro.serve.trainer import BackgroundTrainer, TrainerCrash
 
 __all__ = [
     "AdmissionQueue", "Batcher", "Request", "ServeStats",
@@ -43,5 +43,5 @@ __all__ = [
     "ServeConfig", "ServeService",
     "ServeState", "Snapshot", "make_predict_fn", "snapshot_from_state",
     "verify_snapshot",
-    "BackgroundTrainer",
+    "BackgroundTrainer", "TrainerCrash",
 ]

@@ -42,7 +42,11 @@ __all__ = ["Request", "ServeStats", "AdmissionQueue", "Batcher"]
 class Request:
     """One prediction request and, once fulfilled, its response.
 
-    status: 'pending' -> 'ok' | 'shed' (queue full) | 'refused' (eps spent).
+    status: 'pending' -> 'ok' | 'shed' (queue full, or deadline expired) |
+    'refused' (eps spent). A shed request says WHY in ``shed_reason``:
+    'full' (no queue room at submit) vs 'timeout' (sat in the queue past its
+    ``max_age_s`` deadline — the degraded-fabric signature, where a crashed
+    trainer or a compute stall ages the queue instead of overflowing it).
     Timing: ``submitted_at``/``completed_at`` are perf_counter stamps taken
     after the batch's arrays are host-ready (`jax.block_until_ready`), so
     ``latency_s`` measures admission wait + batching wait + compute — not
@@ -51,6 +55,8 @@ class Request:
 
     features: Any
     node: int
+    max_age_s: float | None = None       # per-request deadline override
+    shed_reason: str | None = None       # 'full' | 'timeout' once shed
     status: str = "pending"
     margin: float | None = None
     label: float | None = None
@@ -84,8 +90,10 @@ class Request:
             return None
         return self.train_round - self.snapshot_round
 
-    def _finish(self, status: str) -> None:
+    def _finish(self, status: str, reason: str | None = None) -> None:
         self.status = status
+        if reason is not None:
+            self.shed_reason = reason
         self.completed_at = time.perf_counter()
         self._event.set()
 
@@ -98,6 +106,7 @@ class ServeStats:
         self.max_samples = max_samples
         self.served_total = 0
         self.shed_total = 0
+        self.shed_reasons: dict[str, int] = {}
         self.refused_total = 0
         self.batches_total = 0
         self.latencies_s: list[float] = []
@@ -114,9 +123,11 @@ class ServeStats:
                 if r.staleness_rounds is not None:
                     self.staleness.append(r.staleness_rounds)
 
-    def record_shed(self, n: int = 1) -> None:
+    def record_shed(self, n: int = 1, reason: str | None = None) -> None:
         with self._lock:
             self.shed_total += n
+            if reason is not None:
+                self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + n
 
     def record_refused(self, n: int = 1) -> None:
         with self._lock:
@@ -129,6 +140,7 @@ class ServeStats:
             out = {
                 "served": self.served_total,
                 "shed": self.shed_total,
+                "shed_reasons": dict(self.shed_reasons),
                 "refused": self.refused_total,
                 "batches": self.batches_total,
                 "mean_batch": (self.served_total / self.batches_total
@@ -164,8 +176,8 @@ class AdmissionQueue:
         try:
             self._q.put_nowait(request)
         except queue.Full:
-            self.stats.record_shed()
-            request._finish("shed")
+            self.stats.record_shed(reason="full")
+            request._finish("shed", reason="full")
         return request
 
     def get(self, timeout: float) -> Request | None:
@@ -189,20 +201,29 @@ class Batcher(threading.Thread):
     fresh (max_batch, n) buffer — rows beyond the real batch are zero — so
     the jitted predict step sees ONE static shape for the whole lifetime of
     the service, and the feature buffer can be donated on accelerators.
+
+    ``max_age_s`` is the request DEADLINE: a request dequeued more than
+    ``max_age_s`` (or its own ``Request.max_age_s``) after submission is
+    shed with reason 'timeout' instead of served — a stale prediction to a
+    client that already gave up wastes a predict-batch slot. None (default)
+    never expires.
     """
 
     def __init__(self, state: ServeState, admission: AdmissionQueue,
                  stats: ServeStats, *, max_batch: int = 32,
-                 max_wait_s: float = 0.002, exhausted=None,
-                 train_round=None, poll_s: float = 0.05):
+                 max_wait_s: float = 0.002, max_age_s: float | None = None,
+                 exhausted=None, train_round=None, poll_s: float = 0.05):
         super().__init__(daemon=True, name="repro-serve-batcher")
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if max_age_s is not None and max_age_s < 0:
+            raise ValueError("max_age_s must be >= 0 (None disables)")
         self.state = state
         self.admission = admission
         self.stats = stats
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.max_age_s = max_age_s
         self.poll_s = poll_s
         self._exhausted = exhausted or (lambda: False)
         self._train_round = train_round or (lambda: None)
@@ -212,12 +233,26 @@ class Batcher(threading.Thread):
     def stop(self) -> None:
         self._stopping.set()
 
+    def _admit(self, request: Request) -> bool:
+        """False (and shed with reason 'timeout') iff the request's deadline
+        passed while it waited in the queue."""
+        limit = (request.max_age_s if request.max_age_s is not None
+                 else self.max_age_s)
+        if (limit is not None and request.submitted_at is not None
+                and time.perf_counter() - request.submitted_at > limit):
+            self.stats.record_shed(reason="timeout")
+            request._finish("shed", reason="timeout")
+            return False
+        return True
+
     def run(self) -> None:
         while True:
             first = self.admission.get(timeout=self.poll_s)
             if first is None:
                 if self._stopping.is_set() and self.admission.empty():
                     return
+                continue
+            if not self._admit(first):
                 continue
             batch = [first]
             deadline = time.perf_counter() + self.max_wait_s
@@ -228,7 +263,8 @@ class Batcher(threading.Thread):
                 nxt = self.admission.get(timeout=remaining)
                 if nxt is None:
                     break
-                batch.append(nxt)
+                if self._admit(nxt):
+                    batch.append(nxt)
             self._serve(batch)
 
     def _serve(self, batch: list[Request]) -> None:

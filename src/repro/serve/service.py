@@ -27,6 +27,7 @@ Wires the four serving pieces together behind one object:
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -49,6 +50,11 @@ class ServeConfig:
     mode:           'node' (per-data-center model) | 'average' (w_bar).
     chunk_rounds:   trainer publication cadence in rounds.
     max_batch / max_wait_ms / queue_capacity: the admission layer.
+    max_age_s:      request deadline — a request older than this at dequeue
+                    is shed with reason 'timeout' (None never expires).
+    crash_at_round: fault injection (repro.faults): kill the trainer at the
+                    first chunk boundary >= this round; it auto-restarts
+                    from its last async checkpoint (needs checkpoint_dir).
     eps_budget / composition: serving-side privacy ledger (see
                     `repro.serve.trainer`); budget None never refuses.
     checkpoint_dir / checkpoint_every: async-checkpoint every N
@@ -64,7 +70,9 @@ class ServeConfig:
     chunk_rounds: int = 64
     max_batch: int = 32
     max_wait_ms: float = 2.0
+    max_age_s: float | None = None
     queue_capacity: int = 1024
+    crash_at_round: int | None = None
     eps_budget: float | None = None
     composition: str = "parallel"
     checkpoint_dir: str | None = None
@@ -78,6 +86,9 @@ class ServeService:
     """start() -> submit()/predict() under load -> stop() -> stats()."""
 
     def __init__(self, config: ServeConfig):
+        if config.crash_at_round is not None and not config.checkpoint_dir:
+            raise ValueError("crash_at_round needs checkpoint_dir= (the "
+                             "trainer restarts from its last checkpoint)")
         self.config = config
         self.stats_ = ServeStats()
         self.state = ServeState(config.spec, engine=config.engine,
@@ -86,15 +97,22 @@ class ServeService:
         self.checkpointer = (
             AsyncCheckpointer(config.checkpoint_dir)
             if config.checkpoint_dir else None)
+        # the trainer's engine-state checkpoints live in a subdirectory so
+        # they never collide with the service's theta-only snapshot files
+        trainer_ckpt = (os.path.join(config.checkpoint_dir, "trainer")
+                        if config.checkpoint_dir else None)
         self.trainer = BackgroundTrainer(
             config.spec, self.state, engine=config.engine,
             chunk_rounds=config.chunk_rounds, composition=config.composition,
             eps_budget=config.eps_budget, warmup=config.warmup,
-            on_publish=self._on_publish) if config.train else None
+            on_publish=self._on_publish,
+            checkpoint_dir=trainer_ckpt,
+            crash_at_round=config.crash_at_round) if config.train else None
         self.batcher = Batcher(
             self.state, self.admission, self.stats_,
             max_batch=config.max_batch,
             max_wait_s=config.max_wait_ms / 1e3,
+            max_age_s=config.max_age_s,
             exhausted=self.exhausted,
             train_round=lambda: (self.trainer.round if self.trainer else None))
         self._started = False
@@ -143,10 +161,12 @@ class ServeService:
 
     # -- request path --------------------------------------------------------
 
-    def submit(self, features, node: int) -> Request:
+    def submit(self, features, node: int,
+               max_age_s: float | None = None) -> Request:
         """Non-blocking admission; the returned Request resolves to
-        'ok' | 'shed' | 'refused' (wait()/done())."""
-        req = Request(features=features, node=int(node))
+        'ok' | 'shed' | 'refused' (wait()/done()). ``max_age_s`` overrides
+        the service-wide deadline for this request."""
+        req = Request(features=features, node=int(node), max_age_s=max_age_s)
         return self.admission.submit(req, refuse=self.exhausted())
 
     def predict(self, features, node: int,
@@ -200,5 +220,6 @@ class ServeService:
                 "running": self.trainer.running,
                 "composition": self.trainer.composition,
                 "eps_budget": self.config.eps_budget,
+                "restarts": self.trainer.restarts,
             }
         return out

@@ -48,10 +48,22 @@ from typing import Callable
 
 from repro.api.runner import RunResult, run
 from repro.api.spec import RunSpec
+from repro.checkpoint import AsyncCheckpointer
 from repro.core.privacy import PrivacyAccountant
 from repro.serve.state import ServeState, Snapshot, snapshot_from_state
 
-__all__ = ["BackgroundTrainer"]
+__all__ = ["BackgroundTrainer", "TrainerCrash"]
+
+
+class TrainerCrash(RuntimeError):
+    """Injected trainer failure (repro.faults): raised inside the chunk hook
+    at ``crash_at_round`` to sever the training run mid-horizon. The trainer
+    catches it, replays from its last async checkpoint and finishes the
+    horizon bit-identically (streams are keyed per absolute round)."""
+
+    def __init__(self, round_end: int):
+        super().__init__(f"injected trainer crash at round {round_end}")
+        self.round_end = round_end
 
 
 class BackgroundTrainer:
@@ -65,6 +77,14 @@ class BackgroundTrainer:
         docstring). ``eps_budget=None`` never refuses.
     on_publish: optional callback fired with each published Snapshot —
         the service uses it for async checkpointing.
+    checkpoint_dir: directory for the trainer's OWN engine-state
+        checkpoints (async, one per chunk) — the recovery substrate for
+        crash restarts, separate from the service's snapshot checkpoints.
+    crash_at_round: fault injection (repro.faults): raise
+        :class:`TrainerCrash` at the first chunk boundary >= this round,
+        then auto-restart from the last checkpoint and resume
+        bit-identically. Requires ``checkpoint_dir``; ``restarts`` counts
+        recoveries.
     """
 
     def __init__(self, spec: RunSpec, state: ServeState, *,
@@ -72,9 +92,15 @@ class BackgroundTrainer:
                  composition: str = "parallel",
                  eps_budget: float | None = None,
                  warmup: bool = True,
-                 on_publish: Callable[[Snapshot], None] | None = None):
+                 on_publish: Callable[[Snapshot], None] | None = None,
+                 checkpoint_dir: str | None = None,
+                 crash_at_round: int | None = None):
         if composition not in ("parallel", "sequential"):
             raise ValueError(f"unknown composition {composition!r}")
+        if crash_at_round is not None and checkpoint_dir is None:
+            raise ValueError(
+                "crash_at_round needs checkpoint_dir= — without a "
+                "checkpoint there is nothing to restart from")
         self.spec = spec
         self.state = state
         self.engine = engine
@@ -96,6 +122,12 @@ class BackgroundTrainer:
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
         self.result: RunResult | None = None
+        self.checkpoint_dir = checkpoint_dir
+        self.crash_at_round = crash_at_round
+        self.restarts = 0
+        self._crashed_once = False
+        self._checkpointer = (AsyncCheckpointer(checkpoint_dir)
+                              if checkpoint_dir else None)
 
     # -- ledger --------------------------------------------------------------
 
@@ -128,6 +160,14 @@ class BackgroundTrainer:
             with self._lock:
                 self._exhausted = True
             return True
+        if (self.crash_at_round is not None and not self._crashed_once
+                and round_end >= self.crash_at_round):
+            # crash BEFORE checkpointing or publishing this chunk: recovery
+            # must come from the previous boundary, like a real process death
+            self._crashed_once = True
+            raise TrainerCrash(round_end)
+        if self._checkpointer is not None:
+            self._checkpointer.save(round_end, eng_state)
         snap = snapshot_from_state(
             self.spec, self.engine, eng_state,
             version=self.state.published, eps_spent=eps)
@@ -140,10 +180,25 @@ class BackgroundTrainer:
 
     def _drive(self) -> None:
         try:
-            self.result = run(self.spec, engine=self.engine,
-                              chunk_rounds=self.chunk_rounds,
-                              compute_regret=False, warmup=self.warmup,
-                              on_chunk=self._on_chunk)
+            while True:
+                try:
+                    # resume= replays from the last trainer checkpoint —
+                    # a no-op on the first pass of an empty directory
+                    self.result = run(self.spec, engine=self.engine,
+                                      chunk_rounds=self.chunk_rounds,
+                                      compute_regret=False, warmup=self.warmup,
+                                      on_chunk=self._on_chunk,
+                                      resume=self._checkpointer is not None,
+                                      checkpoint_dir=self.checkpoint_dir)
+                    return
+                except TrainerCrash:
+                    # the injected death: flush pending writes, then restart
+                    # from the latest checkpoint. Streams are keyed per
+                    # absolute round, so the replayed rounds are bit-identical
+                    # to the uncrashed run.
+                    self._checkpointer.wait()
+                    with self._lock:
+                        self.restarts += 1
         except BaseException as err:        # surfaced by join()
             self._error = err
 
@@ -153,6 +208,8 @@ class BackgroundTrainer:
         """Drive the whole horizon inline (tests, doctests, benchmarks that
         want training isolated from serving)."""
         self._drive()
+        if self._checkpointer is not None:
+            self._checkpointer.close()
         if self._error is not None:
             raise self._error
 
@@ -173,6 +230,8 @@ class BackgroundTrainer:
             self._thread.join(timeout)
             if self._thread.is_alive():
                 raise TimeoutError("trainer did not stop within timeout")
+        if self._checkpointer is not None:
+            self._checkpointer.close()
         if self._error is not None:
             raise self._error
 

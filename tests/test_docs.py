@@ -11,7 +11,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
         "docs/streams.md", "docs/sweeps.md", "docs/serving.md",
-        "docs/node_sharding.md")
+        "docs/node_sharding.md", "docs/faults.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -28,6 +28,11 @@ API_MODULES = (
     "repro.sweep.store",
     "repro.sweep.engine",
     "repro.sweep.plot",
+    "repro.faults",
+    "repro.faults.spec",
+    "repro.faults.schedule",
+    "repro.faults.mixers",
+    "repro.faults.metrics",
     "repro.serve",
     "repro.serve.state",
     "repro.serve.admission",

@@ -1,0 +1,282 @@
+"""repro.faults — fault injection over the gossip fabric (tier-1).
+
+The contracts held here:
+
+  * a zero-rate FaultSpec is BIT-identical to a fault-free run — both
+    engines, delay in {0, 2}, sparse and dense mixer forms, noise on (the
+    same property benchmarks/bench_faults.py gates in CI as
+    ``zero_fault_identical``);
+  * fault-masked + self-healed mixing matrices stay row-stochastic and
+    non-negative at every round, for any seed and rate — and symmetric
+    inputs stay symmetric under link faults (one Bernoulli per undirected
+    link);
+  * crashed nodes freeze their theta, spend no eps (participation-masked
+    accounting) and rejoin from their last state;
+  * connectivity dips while a transient partition is up and returns to
+    1.0 once it heals; degradation()/rounds_to_recover summarize it;
+  * the seed-vmapped `run_batch` path matches sequential runs under
+    faults (the fault pattern is scenario-seeded, not run-seeded);
+  * serving: requests past their deadline shed with reason 'timeout'
+    (vs 'full'), and an injected trainer crash auto-restarts from the
+    last checkpoint bit-identically.
+
+Multi-device fault x shard coverage lives in tests/test_faults_shard.py.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import RunSpec, run
+from repro.api.mixers import MIXERS
+from repro.api.runner import run_batch
+from repro.core.privacy import PrivacyAccountant
+from repro.faults import (FAULTS, FaultSpec, FaultySparseMixer, degradation,
+                          rounds_to_recover, wrap_mixer)
+
+FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity")
+
+
+def spec(**kw):
+    base = dict(nodes=6, dim=8, horizon=10, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 3},
+                mixer="sparse", mixer_options={"topology": "ring"})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def _run(s, **kw):
+    base = dict(chunk_rounds=4, compute_regret=False, warmup=False)
+    base.update(kw)
+    return run(s, **base)
+
+
+def assert_identical(a, b, what):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: field {f} diverged")
+
+
+# -- zero-rate bit-identity ---------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sim", "dist"])
+@pytest.mark.parametrize("delay", [0, 2])
+def test_zero_fault_bit_identical_sparse(engine, delay):
+    clean = _run(spec(delay=delay), engine=engine)
+    zero = _run(spec(delay=delay, faults="links",
+                     faults_options={"link_rate": 0.0}), engine=engine)
+    assert_identical(clean, zero, f"{engine}/delay={delay}")
+    assert zero.connectivity is not None
+    np.testing.assert_array_equal(zero.connectivity,
+                                  np.ones(clean.rounds, np.float32))
+
+
+def test_zero_fault_bit_identical_dense():
+    for engine in ("sim", "dist"):
+        clean = _run(spec(mixer="dense"), engine=engine)
+        zero = _run(spec(mixer="dense", faults="none"), engine=engine)
+        assert_identical(clean, zero, f"dense/{engine}")
+
+
+# -- effective-matrix properties ----------------------------------------------
+
+def _effective_matrix(mixer, t):
+    """A_eff(t) via apply on the identity: column j is A @ e_j stacked."""
+    return np.asarray(mixer.apply(jnp.eye(mixer.m, dtype=jnp.float32), t))
+
+
+@pytest.mark.parametrize("mixer_name", ["sparse", "dense"])
+@pytest.mark.parametrize("rate", [0.3, 0.9])
+@pytest.mark.parametrize("fseed", [0, 3])
+def test_link_faulted_matrix_row_stochastic_and_symmetric(
+        mixer_name, rate, fseed):
+    s = spec(mixer=mixer_name, faults="links",
+             faults_options={"link_rate": rate, "seed": fseed})
+    mixer = s.resolve_mixer()
+    for t in (0, 1, 7):
+        A = _effective_matrix(mixer, t)
+        assert (A >= 0.0).all(), f"t={t}: negative weight"
+        np.testing.assert_allclose(A.sum(axis=1), 1.0, atol=1e-6,
+                                   err_msg=f"t={t}: rows not stochastic")
+        # ring weights are symmetric and both directions of a link share
+        # one Bernoulli coin, so the healed matrix stays symmetric
+        np.testing.assert_allclose(A, A.T, atol=1e-6,
+                                   err_msg=f"t={t}: symmetry broken")
+
+
+def test_crash_and_partition_matrix_stays_row_stochastic():
+    s = spec(faults=FaultSpec(link_rate=0.2, crashes=((1, 2, 6),),
+                              partitions=((3, 6, 3),), seed=5))
+    mixer = s.resolve_mixer()
+    for t in range(8):
+        A = _effective_matrix(mixer, t)
+        assert (A >= 0.0).all()
+        np.testing.assert_allclose(A.sum(axis=1), 1.0, atol=1e-6)
+    # while node 1 is crashed its outgoing weight heals onto neighbors'
+    # self-loops: column 1 carries only its own self-weight
+    A = _effective_matrix(mixer, 3)
+    off = A[:, 1].copy()
+    off[1] = 0.0
+    assert off.max() == 0.0
+
+
+# -- crash semantics ----------------------------------------------------------
+
+def test_crashed_node_freezes_and_rejoins():
+    crash = FaultSpec(crashes=((2, 3, 7),))
+    thetas = {}
+
+    def grab(round_end, eng_state, accountant):
+        thetas[round_end] = np.asarray(eng_state.theta)
+        return False
+
+    _run(spec(faults=crash), chunk_rounds=1, on_chunk=grab)
+    for t in range(3, 7):       # frozen through the window...
+        np.testing.assert_array_equal(thetas[t + 1][2], thetas[3][2])
+    assert not np.array_equal(thetas[8][2], thetas[3][2])  # ...then rejoins
+
+
+def test_crashed_rounds_spend_no_eps():
+    crash = FaultSpec(crashes=((2, 3, 7),))
+    res = _run(spec(faults=crash))
+    part = res.privacy["participated_rounds"]
+    assert part == [10, 10, 6, 10, 10, 10]
+    assert res.privacy["eps_per_node_max"] == res.privacy["eps_per_round"]
+
+
+def test_accountant_participation_sequential_composition():
+    acc = PrivacyAccountant(eps_per_round=0.5, disjoint_streams=False)
+    acc.step(4)
+    acc.step(4, participation=np.array([4, 1, 0]))
+    acc.step(2)
+    assert acc.node_rounds.tolist() == [10, 7, 6]
+    np.testing.assert_allclose(acc.per_node_guarantee(), [5.0, 3.5, 3.0])
+    with pytest.raises(ValueError, match="participation"):
+        acc.step(2, participation=np.array([3, 0, 0]))
+
+
+# -- degradation metrics ------------------------------------------------------
+
+def test_partition_connectivity_dips_then_recovers():
+    part = FaultSpec(partitions=((3, 6, 3),))
+    clean = _run(spec())
+    faulty = _run(spec(faults=part))
+    conn = faulty.connectivity
+    assert conn[:3].min() == 1.0 and conn[6:].min() == 1.0
+    assert conn[3:6].max() < 1.0
+    deg = degradation(clean, faulty)
+    assert deg["min_connectivity"] < 1.0
+    assert deg["min_connectivity"] <= deg["mean_connectivity"] < 1.0
+    assert np.isfinite(deg["loss_gap"])
+    r = rounds_to_recover(clean.correct.mean(axis=1),
+                          faulty.correct.mean(axis=1),
+                          heal_round=6, tol=0.5, window=2)
+    assert r >= 0
+
+
+def test_rounds_to_recover_never_and_validation():
+    clean = np.zeros(8)
+    assert rounds_to_recover(clean, np.ones(8), heal_round=2, tol=0.1) == -1
+    with pytest.raises(ValueError):
+        rounds_to_recover(clean, np.ones(5), heal_round=2)
+
+
+# -- spec / registry surfaces -------------------------------------------------
+
+def test_faults_registry_and_validation():
+    assert sorted(FAULTS.names()) == ["crash", "dcn", "links", "none",
+                                      "partition"]
+    assert FAULTS.build("none", {}).is_zero
+    with pytest.raises(ValueError, match="link_rate"):
+        FaultSpec(link_rate=1.5)
+    with pytest.raises(ValueError, match="horizon"):
+        FaultSpec(crash_rate=0.5).compile(m=4)          # seeded crashes
+    with pytest.raises(ValueError, match="delay_dist"):
+        spec(faults="links", delay=2, delay_dist="uniform").resolve_mixer()
+
+
+def test_wrap_mixer_surfaces():
+    sched = FaultSpec(link_rate=0.1).compile(m=6)
+    ring = MIXERS.build("ring", {}, m=6, seed=0)        # RingRollMixer
+    assert isinstance(wrap_mixer(ring, sched), FaultySparseMixer)
+    disconnected = MIXERS.build("disconnected", {}, m=6, seed=0)
+    with pytest.raises(ValueError, match="[Dd]isconnected"):
+        wrap_mixer(disconnected, sched)
+    het = spec(mixer="ring", mixer_options={}, delay=2,
+               delay_dist="uniform").resolve_mixer()
+    with pytest.raises(ValueError, match="straggler"):
+        wrap_mixer(het, sched)
+
+
+def test_straggler_outgoing_broadcasts_arrive_late():
+    # node 0's egress is 1 round late; the faulty mixer widens the ring
+    lag = FaultSpec(stragglers=((0, 1),))
+    s = spec(faults=lag, delay=1)
+    mixer = s.resolve_mixer()
+    assert mixer.delay == 2 and mixer.base_delay == 1
+    res = _run(s)
+    base = _run(spec(delay=1))
+    assert not np.array_equal(res.final_w, base.final_w)
+
+
+# -- seed-vmapped batch under faults ------------------------------------------
+
+def test_run_batch_matches_sequential_under_faults():
+    s = spec(faults=FaultSpec(link_rate=0.2, crashes=((1, 2, 6),), seed=9))
+    batch = run_batch(s, [0, 1, 2], chunk_rounds=4, compute_regret=False,
+                      warmup=False)
+    for i, sd in enumerate((0, 1, 2)):
+        seq = _run(s.replace(seed=sd))
+        assert_identical(batch[i], seq, f"seed={sd} batch vs sequential")
+        np.testing.assert_array_equal(batch[i].connectivity, seq.connectivity)
+        assert (batch[i].privacy["participated_rounds"]
+                == seq.privacy["participated_rounds"])
+
+
+# -- serving under faults -----------------------------------------------------
+
+def test_request_deadline_sheds_with_timeout_reason():
+    from repro.serve import ServeConfig, ServeService
+    svc = ServeService(ServeConfig(spec=spec(stream="bursty",
+                                             stream_options={}),
+                                   train=False, warmup=False, max_age_s=0.0,
+                                   max_wait_ms=0.5)).start()
+    r = svc.submit([1.0] * 8, node=0)
+    r.wait(10.0)
+    svc.stop()
+    assert (r.status, r.shed_reason) == ("shed", "timeout")
+    summary = svc.stats()["admission"]
+    assert summary["shed_reasons"] == {"timeout": 1}
+    assert summary["shed"] == 1
+
+
+def test_queue_full_sheds_with_full_reason():
+    from repro.serve import ServeConfig, ServeService
+    svc = ServeService(ServeConfig(spec=spec(stream="bursty",
+                                             stream_options={}),
+                                   train=False, warmup=False,
+                                   queue_capacity=1, max_wait_ms=0.5))
+    # not started: the batcher never drains, so the 2nd submit finds no room
+    svc.state.publish_initial()
+    svc.submit([1.0] * 8, node=0)
+    shed = svc.submit([1.0] * 8, node=0)
+    assert (shed.status, shed.shed_reason) == ("shed", "full")
+    assert svc.stats_.summary()["shed_reasons"] == {"full": 1}
+
+
+def test_trainer_crash_restarts_bit_identically(tmp_path):
+    from repro.serve import BackgroundTrainer, ServeState, TrainerCrash
+    s = spec(stream="bursty", stream_options={}, horizon=12)
+    st = ServeState(s)
+    st.publish_initial()
+    tr = BackgroundTrainer(s, st, chunk_rounds=4, warmup=False,
+                           checkpoint_dir=str(tmp_path), crash_at_round=8)
+    tr.run_blocking()
+    assert tr.restarts == 1 and tr.round == 12
+    clean = _run(s)
+    np.testing.assert_array_equal(tr.result.final_w, clean.final_w)
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        BackgroundTrainer(s, st, crash_at_round=4)
+    assert issubclass(TrainerCrash, RuntimeError)

@@ -1,0 +1,161 @@
+"""Fault injection x node-axis sharding (tests/test_shard_node.py harness).
+
+Multi-device equivalence runs in subprocesses with 8 fake CPU devices
+(XLA_FLAGS). The contract:
+
+  * a zero-rate FaultSpec under node_devices=4 is BIT-identical to the
+    clean sharded run — both engines, delay in {0, 2} (the node-sharded
+    leg of the ``zero_fault_identical`` gate in benchmarks/bench_faults.py);
+  * a FAULTY sharded run (link drops + crash + transient partition)
+    matches the faulty unsharded run within the same asserted float32
+    reduction-order bound as the clean path, and stays deterministic
+    under re-execution;
+  * crash participation accounting is layout-independent.
+
+In-process tests cover the error surfaces: stragglers (per-class delay
+rings do not shard) and dense faulty mixers are rejected up front.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.api import run
+from repro.api.spec import RunSpec
+from repro.faults import FaultSpec
+from repro.launch.mesh import make_mesh
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_PRELUDE = r"""
+import numpy as np
+from repro.api import RunSpec, run
+from repro.faults import FaultSpec
+
+ATOL = 5e-6      # float32 reduction-order bound, asserted on every field
+FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity")
+
+
+def spec(**kw):
+    base = dict(nodes=10, dim=8, horizon=14, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7},
+                mixer="sparse", mixer_options={"topology": "ring"})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def assert_close(a, b, what, atol=ATOL):
+    for f in FIELDS:
+        x, y = np.asarray(getattr(a, f)), np.asarray(getattr(b, f))
+        d = np.abs(x - y).max()
+        assert d <= atol, f"{what}: field {f} off by {d} (> {atol})"
+
+
+def assert_identical(a, b, what):
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{what}: field {f} diverged")
+"""
+
+
+def _run(code: str, timeout=520) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", _PRELUDE + code],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# -- multi-device equivalence (subprocesses, 8 fake devices) -----------------
+
+@pytest.mark.slow
+def test_zero_fault_bit_identical_under_node_sharding():
+    """node_devices=4, m=10 (pads to 12): a link_rate=0.0 FaultSpec must be
+    bit-identical to the clean sharded run — the fault machinery (uniform
+    draws, keep masks, healed-mass fold) runs but masks nothing."""
+    out = _run(r"""
+import jax
+assert jax.local_device_count() == 8
+kw = dict(chunk_rounds=7, warmup=False, compute_regret=False)
+for engine in ("sim", "dist"):
+    for delay in (0, 2):
+        clean = run(spec(delay=delay), engine=engine, node_devices=4, **kw)
+        zero = run(spec(delay=delay, faults="links",
+                        faults_options={"link_rate": 0.0}),
+                   engine=engine, node_devices=4, **kw)
+        assert_identical(clean, zero, f"{engine}/delay={delay} zero-rate")
+        print(engine, delay, "OK")
+""")
+    assert out.count("OK") == 4
+
+
+@pytest.mark.slow
+def test_faulty_sharded_matches_faulty_unsharded():
+    """Link drops + a crash window + a transient partition, sharded over 4
+    devices: within the float32 bound of the faulty unsharded run for both
+    engines, deterministic under re-execution, and the crash's masked
+    eps accounting is layout-independent."""
+    out = _run(r"""
+faults = FaultSpec(link_rate=0.15, crashes=((3, 4, 9),),
+                   partitions=((5, 8, 5),), seed=7)
+kw = dict(chunk_rounds=7, warmup=False, compute_regret=False)
+for engine in ("sim", "dist"):
+    flat = run(spec(faults=faults), engine=engine, **kw)
+    sh = run(spec(faults=faults), engine=engine, node_devices=4, **kw)
+    assert_close(sh, flat, f"{engine} faulty sharded vs unsharded")
+    np.testing.assert_array_equal(flat.connectivity, sh.connectivity)
+    assert (sh.privacy["participated_rounds"]
+            == flat.privacy["participated_rounds"])
+    assert sh.privacy["participated_rounds"][3] == 14 - 5
+    again = run(spec(faults=faults), engine=engine, node_devices=4, **kw)
+    assert_identical(sh, again, f"{engine} faulty sharded determinism")
+    print(engine, "OK")
+""")
+    assert out.count("OK") == 2
+
+
+# -- error surfaces (in-process, any device count) ---------------------------
+
+def _spec(**kw):
+    base = dict(nodes=8, dim=8, horizon=8, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 7},
+                mixer="sparse", mixer_options={"topology": "ring"})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def test_stragglers_rejected_under_node_sharding():
+    s = _spec(faults=FaultSpec(stragglers=((0, 2),)))
+    with pytest.raises(ValueError, match="straggler"):
+        run(s, chunk_rounds=4, warmup=False, compute_regret=False,
+            node_mesh=make_mesh((1,), ("node",)))
+
+
+def test_dense_faulty_mixer_rejected_under_node_sharding():
+    s = _spec(mixer="dense", faults="links",
+              faults_options={"link_rate": 0.1})
+    with pytest.raises(ValueError, match="sparse edge-list"):
+        run(s, chunk_rounds=4, warmup=False, compute_regret=False,
+            node_mesh=make_mesh((1,), ("node",)))
+
+
+def test_one_device_node_mesh_runs_faults_in_process():
+    """An explicit 1-device ("node",) mesh exercises the FaultySharded
+    mixer's shard_map path without fake devices; zero-rate stays
+    bit-identical to the unsharded clean run's sharded twin."""
+    import numpy as np
+    kw = dict(chunk_rounds=4, warmup=False, compute_regret=False)
+    mesh = make_mesh((1,), ("node",))
+    clean = run(_spec(), node_mesh=mesh, **kw)
+    zero = run(_spec(faults="links", faults_options={"link_rate": 0.0}),
+               node_mesh=make_mesh((1,), ("node",)), **kw)
+    np.testing.assert_array_equal(clean.final_w, zero.final_w)
+    faulty = run(_spec(faults="links", faults_options={"link_rate": 0.5}),
+                 node_mesh=make_mesh((1,), ("node",)), **kw)
+    flat = run(_spec(faults="links", faults_options={"link_rate": 0.5}), **kw)
+    assert np.abs(faulty.final_w - flat.final_w).max() <= 5e-6
