@@ -1,0 +1,181 @@
+"""Telemetry bench: the ``obs_off_identical`` bit-identity gate, the
+telemetry overhead ceiling, and the predicted-vs-measured chunk cost.
+
+Three properties of `repro.obs` are measured and gated here:
+
+  * **Bit-identity**: a run with full telemetry (spans + metrics + event
+    stream + cost loop) must be bit-identical to a run with telemetry off —
+    for ``run()`` under both engines and for the vmapped ``run_batch()``.
+    Telemetry is host-side observation only; any drift means it leaked into
+    the device math (``obs_off_identical``, also pinned in
+    tests/test_obs.py).
+  * **Overhead**: wall-clock of a fully-instrumented run over the
+    uninstrumented one (min over repeats, compile excluded via warmup) —
+    ``overhead_ratio``, gated as a ceiling in check_bench so spans on the
+    chunk path cannot quietly eat the throughput the runner benches report.
+  * **Cost loop**: `repro.obs.cost.analyze_chunk`'s roofline prediction for
+    the jitted chunk program vs the measured chunk wall-clock
+    (``cost.error_ratio``) — recorded per run as the drift signal the
+    ROADMAP's predict-then-measure loop asks for (informational: the ratio
+    is machine-dependent, so it is written, not gated).
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+
+Writes BENCH_obs.json plus a sample Chrome ``trace.json`` and the run-event
+stream; benchmarks/check_bench.py gates ``obs_off_identical`` (bool) and
+``overhead_ratio`` (ceiling) against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import repro.obs as obs
+from repro.api import RunSpec, run, run_batch
+
+FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity")
+
+
+def _spec(m: int, *, dim: int, horizon: int) -> RunSpec:
+    return RunSpec(nodes=m, dim=dim, horizon=horizon, eps=1.0, alpha0=0.5,
+                   lam=0.01, stream="drift", stream_options={"period": 7},
+                   mixer="sparse", mixer_options={"topology": "ring"})
+
+
+def _bit_identical(a, b) -> bool:
+    return all(np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f)))
+               for f in FIELDS)
+
+
+def _identity_checks(spec: RunSpec, *, chunk_rounds: int,
+                     events_path: str) -> tuple[list[dict], dict]:
+    """Telemetry-on vs telemetry-off runs over every driving path; the ON
+    runs carry the full stack (spans + metrics + events + cost loop)."""
+    kw = dict(chunk_rounds=chunk_rounds, compute_regret=True, warmup=True)
+    checks = []
+    on_metrics = {}
+    for engine in ("sim", "dist"):
+        off = run(spec, engine=engine, **kw)
+        tel = obs.Telemetry(events=events_path, cost=True)
+        on = run(spec, engine=engine, obs=tel, **kw)
+        tel.close()
+        checks.append({"path": "run", "engine": engine,
+                       "identical": _bit_identical(off, on)})
+        on_metrics[engine] = on.metrics.get("obs", {})
+    seeds = [0, 1]
+    off_b = run_batch(spec, seeds, engine="sim", **kw)
+    tel = obs.Telemetry(events=events_path, cost=True)
+    on_b = run_batch(spec, seeds, engine="sim", obs=tel, **kw)
+    tel.close()
+    checks.append({"path": "run_batch", "engine": "sim",
+                   "identical": all(_bit_identical(o, n)
+                                    for o, n in zip(off_b, on_b))})
+    on_metrics["run_batch"] = on_b[0].metrics.get("obs", {})
+    return checks, on_metrics
+
+
+def _overhead(spec: RunSpec, *, chunk_rounds: int, repeats: int) -> dict:
+    """min-over-repeats wall of a fully-instrumented run vs an
+    uninstrumented one (warmup excludes compile from both)."""
+    kw = dict(chunk_rounds=chunk_rounds, compute_regret=False, warmup=True)
+    wall_off = min(float(run(spec, **kw).wall_clock)
+                   for _ in range(repeats))
+    walls_on = []
+    for _ in range(repeats):
+        tel = obs.Telemetry(cost=True)    # spans + metrics + cost, no I/O —
+        walls_on.append(float(run(spec, obs=tel, **kw).wall_clock))
+    wall_on = min(walls_on)               # the steady-state per-chunk tax
+    return {
+        "wall_off_s": round(wall_off, 6),
+        "wall_on_s": round(wall_on, 6),
+        "overhead_ratio": (round(wall_on / wall_off, 4)
+                           if wall_off > 0 else None),
+    }
+
+
+def run_bench(*, nodes: int, dim: int, horizon: int, chunk_rounds: int,
+              repeats: int,
+              bench_path: str = "BENCH_obs.json",
+              trace_path: str = "trace.json",
+              events_path: str = "obs_events.jsonl") -> dict:
+    spec = _spec(nodes, dim=dim, horizon=horizon)
+    if os.path.exists(events_path):
+        os.remove(events_path)
+
+    checks, on_metrics = _identity_checks(spec, chunk_rounds=chunk_rounds,
+                                          events_path=events_path)
+    obs_off_identical = all(c["identical"] for c in checks)
+    print(f"  obs_off_identical={obs_off_identical} "
+          f"({len(checks)} paths)", flush=True)
+
+    overhead = _overhead(spec, chunk_rounds=chunk_rounds, repeats=repeats)
+    print(f"  overhead_ratio={overhead['overhead_ratio']} "
+          f"(off={overhead['wall_off_s']}s on={overhead['wall_on_s']}s)",
+          flush=True)
+
+    # sample trace: one fully-instrumented run, exported for the CI artifact
+    tel = obs.Telemetry(events=events_path, cost=True)
+    res = run(spec, engine="sim", obs=tel, chunk_rounds=chunk_rounds,
+              compute_regret=True, warmup=True)
+    tel.export_chrome(trace_path)
+    span_summary = tel.tracer.summary()
+    tel.close()
+    cost = res.metrics.get("obs", {}).get("cost")
+    events = obs.read_events(events_path)
+    print(f"  cost.error_ratio="
+          f"{None if cost is None else cost.get('error_ratio')} "
+          f"trace_spans={len(tel.tracer.spans)} events={len(events)}",
+          flush=True)
+
+    bench = {
+        "bench": "obs_telemetry",
+        "nodes": nodes,
+        "dim": dim,
+        "rounds": horizon,
+        "chunk_rounds": chunk_rounds,
+        "obs_off_identical": obs_off_identical,
+        "identity_checks": checks,
+        **overhead,
+        "cost": cost,
+        "cost_by_path": {k: v.get("cost") for k, v in on_metrics.items()},
+        "span_summary": span_summary,
+        "events_emitted": len(events),
+        "event_kinds": sorted({e["event"] for e in events}),
+        "trace_path": trace_path,
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    if not obs_off_identical:
+        bad = [c for c in checks if not c["identical"]]
+        raise AssertionError(
+            f"telemetry-on runs are not bit-identical to telemetry-off for "
+            f"{bad} — repro.obs leaked into the device math")
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds) for the CI jobs")
+    ap.add_argument("--bench-path", default="BENCH_obs.json")
+    ap.add_argument("--trace-path", default="trace.json")
+    ap.add_argument("--events-path", default="obs_events.jsonl")
+    args = ap.parse_args()
+    if args.smoke:
+        kw = dict(nodes=8, dim=8, horizon=48, chunk_rounds=8, repeats=3)
+    else:
+        kw = dict(nodes=16, dim=16, horizon=512, chunk_rounds=32, repeats=5)
+    bench = run_bench(bench_path=args.bench_path, trace_path=args.trace_path,
+                      events_path=args.events_path, **kw)
+    print(f"obs_off_identical={bench['obs_off_identical']} "
+          f"overhead_ratio={bench['overhead_ratio']} "
+          f"cost_error_ratio="
+          f"{None if bench['cost'] is None else bench['cost']['error_ratio']}")
+
+
+if __name__ == "__main__":
+    main()

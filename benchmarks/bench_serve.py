@@ -89,6 +89,7 @@ def run(*, smoke: bool = False,
             "submitted": rep["submitted"],
             "served": rep["served"],
             "shed": rep["shed"],
+            "shed_reasons": adm.get("shed_reasons", {}),
             "refused": rep["refused"],
             "p50_latency_ms": adm["p50_latency_ms"],
             "p99_latency_ms": adm["p99_latency_ms"],
@@ -115,7 +116,8 @@ def main() -> None:
           f"p99={rep['p99_latency_ms']}ms, staleness "
           f"mean={rep['staleness_mean_rounds']} "
           f"max={rep['staleness_max_rounds']} rounds, "
-          f"{rep['shed']} shed / {rep['refused']} refused")
+          f"{rep['shed']} shed {rep['shed_reasons']} / "
+          f"{rep['refused']} refused")
     print(f"snapshot_identical: {bench['snapshot_identical']}")
 
 

@@ -18,7 +18,10 @@ freshly written BENCH_*.json against its committed baseline under
     default tolerance leaves further headroom on top);
   * any ``*_floor`` retention ratio (e.g. BENCH_faults' accuracy /
     throughput retention under injected faults) drops below ``tolerance``
-    x baseline — graceful degradation is a gated property, not a hope.
+    x baseline — graceful degradation is a gated property, not a hope;
+  * any ``overhead_ratio`` ceiling (BENCH_obs' telemetry-on / telemetry-off
+    wall) climbs above baseline / ``tolerance`` — instrumentation on the
+    chunk path must stay observation, not a tax.
 
 Baseline fields that are null are skipped (e.g. the sharded timings on a
 1-device host, or a speedup too noise-bound to gate); fields present in
@@ -68,6 +71,12 @@ def _is_floor_key(key: str) -> bool:
 def _is_latency_key(key: str) -> bool:
     """Latency ceilings (milliseconds): lower is better."""
     return key.endswith("_ms")
+
+
+def _is_overhead_key(key: str) -> bool:
+    """Overhead ceilings (ratios, e.g. telemetry-on / telemetry-off wall
+    from BENCH_obs): lower is better, gated like latency."""
+    return key == "overhead_ratio" or key.endswith("_overhead_ratio")
 
 
 def _walk(tree, path=()):
@@ -134,11 +143,14 @@ def check_file(current_path: str, baseline_path: str,
                     f"{current_path}: {where} = {cur} < {floor:.2f} "
                     f"({tolerance} x baseline {base_val}) — {what} "
                     f"regressed")
-        elif _is_latency_key(key) and isinstance(base_val, (int, float)) \
+        elif (_is_latency_key(key) or _is_overhead_key(key)) \
+                and isinstance(base_val, (int, float)) \
                 and not isinstance(base_val, bool):
             cur = _get(current, path, key)
             checked += 1
             ceiling = base_val / tolerance
+            what = ("telemetry overhead" if _is_overhead_key(key)
+                    else "serving latency")
             if not isinstance(cur, (int, float)) or isinstance(cur, bool):
                 failures.append(
                     f"{current_path}: {where} missing/non-numeric "
@@ -147,7 +159,7 @@ def check_file(current_path: str, baseline_path: str,
                 failures.append(
                     f"{current_path}: {where} = {cur} > {ceiling:.2f} "
                     f"(baseline {base_val} / tolerance {tolerance}) — "
-                    f"serving latency regressed")
+                    f"{what} regressed")
     if checked == 0:
         failures.append(f"{baseline_path}: no identical/speedup fields to "
                         f"check — baseline is vacuous")

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obslib
 from repro.api.spec import RunSpec
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core.privacy import PrivacyAccountant
@@ -322,7 +323,8 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         batches: Iterator | None = None,
         print_every: int | None = None,
         node_devices: int | str | None = None,
-        node_mesh: Any = None) -> RunResult:
+        node_mesh: Any = None,
+        obs: Any = None) -> RunResult:
     """Drive one run end-to-end and return a RunResult.
 
     Stream mode (default): resolves ``spec.stream`` and scans the chosen
@@ -357,6 +359,17 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     next(batches))`` for ``horizon`` steps with the same tracking /
     logging / accounting / checkpointing — the loop `launch.train` uses, so
     the train CLI and the benchmarks cannot diverge.
+
+    ``obs=`` takes a `repro.obs.Telemetry` (default: the ambient
+    ``repro.obs.active()``, disabled unless ``repro.obs.enable()`` ran).
+    When enabled, the runner wraps compile / chunk / checkpoint / regret
+    phases in spans, publishes ``run.rounds`` / ``run.chunk_seconds`` /
+    ``run.eps_total`` (and fault connectivity) into the metrics registry,
+    streams ``run_start`` / ``chunk`` / ``checkpoint`` / ``run_end`` events,
+    and — with ``Telemetry(cost=True)`` — records the predicted-vs-measured
+    chunk cost under ``result.metrics['obs']['cost']``. Telemetry is strictly
+    host-side: a telemetry-on run is bit-identical to a telemetry-off run
+    (gated as ``obs_off_identical`` in BENCH_obs.json).
     """
     if step_fn is not None:
         return _run_custom(spec, engine, step_fn=step_fn, state=state,
@@ -384,6 +397,9 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     fault_mixer = (spec.resolve_mixer()
                    if getattr(spec, "faults", None) is not None else None)
     fault_sched = getattr(fault_mixer, "schedule", None)
+
+    tel = obs if obs is not None else obslib.active()
+    run_id = tel.new_run_id() if tel.enabled else None
 
     nmesh = None
     if node_devices is not None or node_mesh is not None:
@@ -415,49 +431,85 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     first_chunk = None
     if warmup and len(bounds) > 1:
         first_chunk = stream.chunk(bounds[0], bounds[1])
-        jax.block_until_ready(chunk_jit(eng_state, *first_chunk)[0].theta)
+        with tel.span("run.compile", engine=engine, run_id=run_id):
+            jax.block_until_ready(chunk_jit(eng_state, *first_chunk)[0].theta)
+
+    chunk_cost = None
+    if tel.cost_enabled and len(bounds) > 1:
+        # one extra lower/compile of the exact chunk program, BEFORE the
+        # timed loop (a cache hit when warmup already compiled it), so the
+        # cost loop never leaks into steady-state timing
+        cxs, cys = (first_chunk if first_chunk is not None
+                    else stream.chunk(bounds[0], bounds[1]))
+        chunk_cost = obslib.analyze_chunk(chunk_jit, eng_state, cxs, cys,
+                                          model=tel.cost_model)
+
+    if tel.enabled:
+        tel.emit("run_start", run_id=run_id, kind="run", engine=engine,
+                 stream=(spec.stream if isinstance(spec.stream, str)
+                         else type(stream).__name__),
+                 nodes=m, dim=spec.dim, horizon=T, start_round=start)
 
     losses, wb_losses, sparsities, corrects = [], [], [], []
     xs_all, ys_all = [], []
     done_to = start
     t0 = time.time()
-    for a, b in zip(bounds[:-1], bounds[1:]):
-        if a == bounds[0] and first_chunk is not None:
-            xs, ys = first_chunk       # don't regenerate the warmup chunk
-        else:
-            xs, ys = stream.chunk(a, b)
-        eng_state, outs = chunk_jit(eng_state, xs, ys)
-        # block on the STATE too, not just the metric outputs — the timed
-        # region must cover the whole round computation, and on_chunk
-        # consumers (snapshot publication) need a finished state
-        jax.block_until_ready((eng_state, outs))
-        if fault_sched is not None and fault_sched.has_crashes:
-            # crashed rounds release no noised broadcast — don't charge them
-            accountant.step(b - a, participation=fault_sched.participation(a, b))
-        else:
-            accountant.step(b - a)
-        done_to = b
-        losses.append(np.asarray(outs.loss))
-        wb_losses.append(np.asarray(outs.w_bar_loss))
-        sparsities.append(np.asarray(outs.sparsity))
-        corrects.append(np.asarray(outs.correct))
-        if compute_regret:
-            xs_all.append(np.asarray(xs))
-            ys_all.append(np.asarray(ys))
-        if logger:
-            for i, t in enumerate(range(a, b)):
-                logger.log(t, {
-                    "loss": float(losses[-1][i].mean()),
-                    "w_bar_loss": float(wb_losses[-1][i]),
-                    "sparsity": float(sparsities[-1][i]),
-                    "accuracy": float(corrects[-1][i].mean()),
-                    "eps": accountant.guarantee_at(t + 1),
-                })
-        if (checkpoint_every and checkpoint_dir
-                and b % checkpoint_every == 0):
-            save_checkpoint(checkpoint_dir, b, eng_state)
-        if on_chunk is not None and on_chunk(b, eng_state, accountant):
-            break
+    with tel.profile():
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            if a == bounds[0] and first_chunk is not None:
+                xs, ys = first_chunk   # don't regenerate the warmup chunk
+            else:
+                xs, ys = stream.chunk(a, b)
+            with tel.span("run.chunk", round_start=a, round_end=b) as sp:
+                eng_state, outs = chunk_jit(eng_state, xs, ys)
+                # block on the STATE too, not just the metric outputs — the
+                # timed region must cover the whole round computation, and
+                # on_chunk consumers (snapshot publication) need a finished
+                # state
+                jax.block_until_ready((eng_state, outs))
+            if fault_sched is not None and fault_sched.has_crashes:
+                # crashed rounds release no noised broadcast — don't charge
+                # them
+                accountant.step(b - a,
+                                participation=fault_sched.participation(a, b))
+            else:
+                accountant.step(b - a)
+            done_to = b
+            if tel.enabled:
+                secs = sp.duration_s
+                eps_now = accountant.guarantee_at(b)
+                tel.metrics.counter("run.rounds").inc(b - a)
+                tel.metrics.histogram("run.chunk_seconds").observe(secs)
+                tel.metrics.gauge("run.eps_total").set(eps_now)
+                if chunk_cost is not None:
+                    chunk_cost.record(secs)
+                tel.emit("chunk", run_id=run_id, round_start=a, round_end=b,
+                         seconds=secs,
+                         rounds_per_sec=((b - a) / secs if secs > 0 else None),
+                         eps=eps_now)
+            losses.append(np.asarray(outs.loss))
+            wb_losses.append(np.asarray(outs.w_bar_loss))
+            sparsities.append(np.asarray(outs.sparsity))
+            corrects.append(np.asarray(outs.correct))
+            if compute_regret:
+                xs_all.append(np.asarray(xs))
+                ys_all.append(np.asarray(ys))
+            if logger:
+                for i, t in enumerate(range(a, b)):
+                    logger.log(t, {
+                        "loss": float(losses[-1][i].mean()),
+                        "w_bar_loss": float(wb_losses[-1][i]),
+                        "sparsity": float(sparsities[-1][i]),
+                        "accuracy": float(corrects[-1][i].mean()),
+                        "eps": accountant.guarantee_at(t + 1),
+                    })
+            if (checkpoint_every and checkpoint_dir
+                    and b % checkpoint_every == 0):
+                with tel.span("run.checkpoint", step=b):
+                    save_checkpoint(checkpoint_dir, b, eng_state)
+                tel.emit("checkpoint", run_id=run_id, step=b)
+            if on_chunk is not None and on_chunk(b, eng_state, accountant):
+                break
     wall = time.time() - t0
     T = done_to                 # < requested horizon iff on_chunk stopped early
     if logger:
@@ -468,8 +520,9 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     tail = max(1, int(correct.shape[0] * 0.2)) if correct.size else 1
     regret = None
     if compute_regret and start == 0 and xs_all:
-        regret = _regret(stream, w_bar_loss, np.concatenate(xs_all),
-                         np.concatenate(ys_all), m)
+        with tel.span("run.regret", rounds=int(w_bar_loss.shape[0])):
+            regret = _regret(stream, w_bar_loss, np.concatenate(xs_all),
+                             np.concatenate(ys_all), m)
 
     done = T - start
     result = RunResult(
@@ -496,6 +549,23 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
         conn = np.asarray(fault_mixer.connectivity(T))[start:]
         result.connectivity = conn
         result.metrics["faults"] = _fault_metrics(spec, fault_sched, conn)
+        if tel.enabled:
+            tel.metrics.gauge("faults.mean_connectivity").set(
+                result.metrics["faults"]["mean_connectivity"])
+    if tel.enabled:
+        obs_info: dict[str, Any] = {"run_id": run_id}
+        if chunk_cost is not None:
+            cs = chunk_cost.summary()
+            obs_info["cost"] = cs
+            tel.emit("chunk_cost", run_id=run_id,
+                     **{k: cs[k] for k in ("predicted_s", "measured_mean_s",
+                                           "error_ratio", "flops",
+                                           "hbm_bytes")})
+        result.metrics["obs"] = obs_info
+        tel.emit("run_end", run_id=run_id, rounds=T, wall_clock_s=wall,
+                 rounds_per_sec=result.rounds_per_sec,
+                 accuracy=result.accuracy,
+                 eps_total=result.privacy.get("eps_total"))
     return result
 
 
@@ -606,7 +676,8 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
               check_vectorizable: bool = True,
               devices: int | str | None = None,
               mesh: Any = None,
-              node_devices: int | str | None = None) -> list[RunResult]:
+              node_devices: int | str | None = None,
+              obs: Any = None) -> list[RunResult]:
     """Run one config under S seeds as ONE vmapped program; S RunResults.
 
     The innermost (seed) axis is vectorized: per-seed engine states are
@@ -643,6 +714,13 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     the STACKED state gathered to host and stripped of pad seeds, so a run
     saved under one device count resumes bit-identically under any other
     (4 devices -> 1, 1 -> 8, ...).
+
+    ``obs=`` instruments the batch exactly like `run` (default: the ambient
+    `repro.obs.active`): ``run_batch.compile`` / ``run_batch.chunk``
+    spans, ``run_batch.*`` metrics, one shared ``run_id`` across the batch's
+    events and RunResults, and — with ``Telemetry(cost=True)`` — the
+    predicted-vs-measured cost of the whole S-seed chunk program. Host-side
+    only; telemetry-on results stay bit-identical to telemetry-off.
     Raises ValueError when the spec's resolved stages depend on the seed
     (see `seed_vectorizable`) — callers like `repro.sweep` fall back to
     sequential per-seed runs in that case.
@@ -676,6 +754,9 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     fault_mixer = (base.resolve_mixer()
                    if getattr(base, "faults", None) is not None else None)
     fault_sched = getattr(fault_mixer, "schedule", None)
+
+    tel = obs if obs is not None else obslib.active()
+    run_id = tel.new_run_id() if tel.enabled else None
 
     chunk_fn, init_fn = make_chunk_program(base, engine)
     init_states = [init_fn(jax.random.PRNGKey(s)) for s in seeds]
@@ -756,37 +837,75 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     first_chunk = None
     if warmup and len(bounds) > 1:
         first_chunk = stacked_chunk(bounds[0], bounds[1])
-        jax.block_until_ready(
-            jax.tree_util.tree_leaves(chunk_jit(eng_state, *first_chunk)[0])[0])
+        with tel.span("run_batch.compile", engine=engine, seeds=S,
+                      run_id=run_id):
+            jax.block_until_ready(jax.tree_util.tree_leaves(
+                chunk_jit(eng_state, *first_chunk)[0])[0])
+
+    chunk_cost = None
+    if tel.cost_enabled and len(bounds) > 1:
+        # the WHOLE S-seed chunk program's cost (all seeds in one pass),
+        # analyzed outside the timed loop — cache hit after warmup
+        cxs, cys = (first_chunk if first_chunk is not None
+                    else stacked_chunk(bounds[0], bounds[1]))
+        chunk_cost = obslib.analyze_chunk(chunk_jit, eng_state, cxs, cys,
+                                          model=tel.cost_model)
+
+    if tel.enabled:
+        tel.emit("run_start", run_id=run_id, kind="run_batch", engine=engine,
+                 stream=(spec.stream if isinstance(spec.stream, str)
+                         else type(streams[0]).__name__),
+                 nodes=m, dim=spec.dim, horizon=T, start_round=start,
+                 seeds=seeds, devices=D)
 
     losses, wb_losses, sparsities, corrects = [], [], [], []
     xs_all, ys_all = [], []
     t0 = time.time()
-    for a, b in zip(bounds[:-1], bounds[1:]):
-        if a == bounds[0] and first_chunk is not None:
-            xs, ys = first_chunk
-        else:
-            xs, ys = stacked_chunk(a, b)
-        eng_state, outs = chunk_jit(eng_state, xs, ys)
-        # block on state + outputs so the timed region measures the whole
-        # round computation, not just the dispatch of the metric arrays
-        jax.block_until_ready((eng_state, outs))
-        if fault_sched is not None and fault_sched.has_crashes:
-            accountant.step(b - a, participation=fault_sched.participation(a, b))
-        else:
-            accountant.step(b - a)
-        # [:S] masks the pad seeds (duplicates of the last real seed) out of
-        # every recorded trajectory; a no-op on the unsharded path
-        losses.append(np.asarray(outs.loss)[:S])           # (S, C, m)
-        wb_losses.append(np.asarray(outs.w_bar_loss)[:S])  # (S, C)
-        sparsities.append(np.asarray(outs.sparsity)[:S])
-        corrects.append(np.asarray(outs.correct)[:S])
-        if compute_regret:
-            xs_all.append(np.asarray(xs)[:S])
-            ys_all.append(np.asarray(ys)[:S])
-        if (checkpoint_every and checkpoint_dir
-                and b % checkpoint_every == 0):
-            save_checkpoint(checkpoint_dir, b, _unpad_tree(eng_state, S))
+    with tel.profile():
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            if a == bounds[0] and first_chunk is not None:
+                xs, ys = first_chunk
+            else:
+                xs, ys = stacked_chunk(a, b)
+            with tel.span("run_batch.chunk", round_start=a, round_end=b,
+                          seeds=S) as sp:
+                eng_state, outs = chunk_jit(eng_state, xs, ys)
+                # block on state + outputs so the timed region measures the
+                # whole round computation, not just the dispatch of the
+                # metric arrays
+                jax.block_until_ready((eng_state, outs))
+            if fault_sched is not None and fault_sched.has_crashes:
+                accountant.step(b - a,
+                                participation=fault_sched.participation(a, b))
+            else:
+                accountant.step(b - a)
+            if tel.enabled:
+                secs = sp.duration_s
+                eps_now = accountant.guarantee_at(b)
+                tel.metrics.counter("run_batch.rounds").inc(b - a)
+                tel.metrics.histogram("run_batch.chunk_seconds").observe(secs)
+                tel.metrics.gauge("run_batch.eps_total").set(eps_now)
+                if chunk_cost is not None:
+                    chunk_cost.record(secs)
+                tel.emit("chunk", run_id=run_id, round_start=a, round_end=b,
+                         seconds=secs,
+                         rounds_per_sec=((b - a) / secs if secs > 0 else None),
+                         eps=eps_now)
+            # [:S] masks the pad seeds (duplicates of the last real seed) out
+            # of every recorded trajectory; a no-op on the unsharded path
+            losses.append(np.asarray(outs.loss)[:S])           # (S, C, m)
+            wb_losses.append(np.asarray(outs.w_bar_loss)[:S])  # (S, C)
+            sparsities.append(np.asarray(outs.sparsity)[:S])
+            corrects.append(np.asarray(outs.correct)[:S])
+            if compute_regret:
+                xs_all.append(np.asarray(xs)[:S])
+                ys_all.append(np.asarray(ys)[:S])
+            if (checkpoint_every and checkpoint_dir
+                    and b % checkpoint_every == 0):
+                with tel.span("run_batch.checkpoint", step=b):
+                    save_checkpoint(checkpoint_dir, b,
+                                    _unpad_tree(eng_state, S))
+                tel.emit("checkpoint", run_id=run_id, step=b)
     wall = time.time() - t0
     eng_state = _unpad_tree(eng_state, S)
 
@@ -812,13 +931,32 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         conn = np.asarray(fault_mixer.connectivity(T))[start:]
         faults_info = _fault_metrics(base, fault_sched, conn)
 
+    obs_info = None
+    if tel.enabled:
+        if fault_mixer is not None and conn is not None:
+            tel.metrics.gauge("faults.mean_connectivity").set(
+                faults_info["mean_connectivity"])
+        obs_info = {"run_id": run_id}
+        if chunk_cost is not None:
+            cs = chunk_cost.summary()
+            obs_info["cost"] = cs
+            tel.emit("chunk_cost", run_id=run_id,
+                     **{k: cs[k] for k in ("predicted_s", "measured_mean_s",
+                                           "error_ratio", "flops",
+                                           "hbm_bytes")})
+        tel.emit("run_end", run_id=run_id, rounds=T, wall_clock_s=wall,
+                 rounds_per_sec=(S * done / wall if wall > 0 else None),
+                 eps_total=accountant.summary().get("eps_total"),
+                 seeds=seeds)
+
     results = []
     for i, (s, st) in enumerate(zip(seeds, streams)):
         regret = None
         if compute_regret and start == 0 and xs_all:
-            regret = _regret(st, w_bar_loss[i],
-                             np.concatenate([x[i] for x in xs_all]),
-                             np.concatenate([y[i] for y in ys_all]), m)
+            with tel.span("run_batch.regret", seed=s):
+                regret = _regret(st, w_bar_loss[i],
+                                 np.concatenate([x[i] for x in xs_all]),
+                                 np.concatenate([y[i] for y in ys_all]), m)
         res = RunResult(
             engine=engine,
             rounds=T,
@@ -843,6 +981,8 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         res.metrics["batch"] = dict(batch_info)
         if faults_info is not None:
             res.metrics["faults"] = dict(faults_info)
+        if obs_info is not None:
+            res.metrics["obs"] = dict(obs_info)
         results.append(res)
     return results
 

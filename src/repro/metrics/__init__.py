@@ -1,3 +1,5 @@
 from repro.metrics.logging import CSVLogger, MetricTracker
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
 
-__all__ = ["CSVLogger", "MetricTracker"]
+__all__ = ["CSVLogger", "MetricTracker",
+           "Counter", "Gauge", "Histogram", "MetricsRegistry"]

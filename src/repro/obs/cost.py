@@ -1,0 +1,145 @@
+"""Predicted-vs-measured chunk cost: the ROADMAP's predict-then-measure loop.
+
+`repro.launch.hlo_cost.analyze` rolls FLOPs / HBM bytes / collective bytes
+out of a compiled chunk program's HLO (trip-count-aware, so the per-round
+`lax.scan` body is counted ``chunk_rounds`` times). This module closes the
+loop: a roofline :class:`CostModel` turns that static cost into a PREDICTED
+chunk wall-clock, the runner's chunk spans supply the MEASURED one, and the
+ratio between them becomes a first-class, regression-recorded artifact
+(``BENCH_obs.json``) instead of a number someone once eyeballed.
+
+The model is ``max(flops / peak_flops, bytes / peak_bandwidth)`` — the
+two-term roofline. Peaks are CALIBRATED once per process with two tiny
+probes (a matmul for the FLOP ceiling, a saxpy for the bandwidth ceiling)
+so predictions track the machine the run is on, not a spec sheet; pass an
+explicit :class:`CostModel` to pin them. A prediction-error ratio near 1
+means the static model explains the wall-clock; a drifting ratio is the
+signal that the compiled program changed character (new fusion, new
+collective) — which is exactly what a regression gate wants to see.
+
+>>> import jax, jax.numpy as jnp
+>>> fn = jax.jit(lambda x: x @ x + 1.0)
+>>> x = jnp.ones((64, 64), jnp.float32)
+>>> model = CostModel(peak_flops=1e12, peak_bandwidth=1e11)
+>>> cc = analyze_chunk(fn, x, model=model)
+>>> cc.cost.flops >= 2 * 64 * 64 * 64
+True
+>>> cc.predicted_s > 0
+True
+>>> cc.record(cc.predicted_s * 2)      # "measured" twice the prediction
+>>> round(cc.summary()["error_ratio"], 3)
+0.5
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+__all__ = ["CostModel", "ChunkCost", "analyze_chunk", "calibrate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Two-term roofline: seconds = max(flops/peak, bytes/bandwidth)."""
+
+    peak_flops: float          # FLOP/s the device sustains on a hot matmul
+    peak_bandwidth: float      # bytes/s on a streaming elementwise op
+
+    def predict_seconds(self, cost) -> float:
+        """Predicted wall-clock of one execution of an analyzed program
+        (``cost`` is a `repro.launch.hlo_cost.HloCost`)."""
+        return max(cost.flops / self.peak_flops,
+                   cost.hbm_bytes / self.peak_bandwidth)
+
+    def summary(self) -> dict:
+        return {"peak_flops": self.peak_flops,
+                "peak_bandwidth": self.peak_bandwidth}
+
+
+_CALIBRATED: CostModel | None = None
+
+
+def calibrate(size: int = 512, repeats: int = 5) -> CostModel:
+    """Measure this process's achievable peaks with two probes (cached).
+
+    The probes are self-contained jitted programs on throwaway data — they
+    never touch a run's PRNG keys or state, so calibrating inside a seeded
+    run cannot perturb it (the ``obs_off_identical`` gate would catch it).
+    """
+    global _CALIBRATED
+    if _CALIBRATED is not None:
+        return _CALIBRATED
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.ones((size, size), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    jax.block_until_ready(mm(a))                       # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(mm(a))
+        best = min(best, time.perf_counter() - t0)
+    peak_flops = 2.0 * size ** 3 / max(best, 1e-9)
+
+    n = size * size * 16
+    v = jnp.ones((n,), jnp.float32)
+    saxpy = jax.jit(lambda x: 2.0 * x + 1.0)
+    jax.block_until_ready(saxpy(v))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(saxpy(v))
+        best = min(best, time.perf_counter() - t0)
+    peak_bw = 2.0 * 4 * n / max(best, 1e-9)            # read + write, f32
+
+    _CALIBRATED = CostModel(peak_flops=peak_flops, peak_bandwidth=peak_bw)
+    return _CALIBRATED
+
+
+@dataclasses.dataclass
+class ChunkCost:
+    """One compiled chunk program's predicted cost + its measured executions.
+
+    The runner calls :meth:`record` with every chunk span's duration;
+    :meth:`summary` is what lands in ``RunResult.metrics['obs']['cost']``,
+    the ``chunk_cost`` run event, and BENCH_obs.json.
+    """
+
+    cost: object                     # repro.launch.hlo_cost.HloCost
+    model: CostModel
+    predicted_s: float
+    measured: list = dataclasses.field(default_factory=list)
+
+    def record(self, seconds: float) -> None:
+        self.measured.append(float(seconds))
+
+    def summary(self) -> dict:
+        mean = (sum(self.measured) / len(self.measured)
+                if self.measured else None)
+        return {
+            "flops": self.cost.flops,
+            "hbm_bytes": self.cost.hbm_bytes,
+            "collective_bytes": self.cost.collective_bytes,
+            "predicted_s": self.predicted_s,
+            "measured_mean_s": mean,
+            "measured_chunks": len(self.measured),
+            # >1: the program ran FASTER than the static model says it
+            # could; <1: overheads (dispatch, host sync) the model omits
+            "error_ratio": (self.predicted_s / mean
+                            if mean and mean > 0 else None),
+            "model": self.model.summary(),
+        }
+
+
+def analyze_chunk(jitted, *args, model: CostModel | None = None) -> ChunkCost:
+    """Lower + compile ``jitted(*args)``, roll up its HLO cost, and predict
+    one execution's wall-clock. ``args`` may be real arrays or
+    ``jax.ShapeDtypeStruct``s — only shapes matter."""
+    from repro.launch import hlo_cost
+
+    hlo = jitted.lower(*args).compile().as_text()
+    cost = hlo_cost.analyze(hlo)
+    model = model or calibrate()
+    return ChunkCost(cost=cost, model=model,
+                     predicted_s=model.predict_seconds(cost))

@@ -33,6 +33,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro import obs as obslib
 from repro.serve.state import ServeState
 
 __all__ = ["Request", "ServeStats", "AdmissionQueue", "Batcher"]
@@ -122,16 +123,33 @@ class ServeStats:
                     self.latencies_s.append(r.latency_s)
                 if r.staleness_rounds is not None:
                     self.staleness.append(r.staleness_rounds)
+        # mirror into the ambient obs registry (repro.obs) — a no-op unless
+        # telemetry is enabled, so the serving hot path stays one check
+        tel = obslib.active()
+        if tel.enabled:
+            tel.metrics.counter("serve.served").inc(len(requests))
+            tel.metrics.counter("serve.batches").inc()
+            hist = tel.metrics.histogram("serve.latency_s")
+            for r in requests:
+                if r.latency_s is not None:
+                    hist.observe(r.latency_s)
 
     def record_shed(self, n: int = 1, reason: str | None = None) -> None:
         with self._lock:
             self.shed_total += n
             if reason is not None:
                 self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + n
+        tel = obslib.active()
+        if tel.enabled:
+            name = f"serve.shed.{reason}" if reason else "serve.shed"
+            tel.metrics.counter(name).inc(n)
 
     def record_refused(self, n: int = 1) -> None:
         with self._lock:
             self.refused_total += n
+        tel = obslib.active()
+        if tel.enabled:
+            tel.metrics.counter("serve.refused").inc(n)
 
     def summary(self) -> dict:
         with self._lock:
@@ -275,15 +293,16 @@ class Batcher(threading.Thread):
             for r in batch:
                 r._finish("refused")
             return
-        feats = np.zeros((self.max_batch, self._dim), np.float32)
-        nodes = np.zeros((self.max_batch,), np.int32)
-        for i, r in enumerate(batch):
-            feats[i] = np.asarray(r.features, np.float32)
-            nodes[i] = r.node
-        margins, labels, snap = self.state.predict(feats, nodes)
-        # latency must measure COMPUTE, not async dispatch: block before
-        # stamping completion times
-        jax.block_until_ready((margins, labels))
+        with obslib.active().span("serve.batch", size=len(batch)):
+            feats = np.zeros((self.max_batch, self._dim), np.float32)
+            nodes = np.zeros((self.max_batch,), np.int32)
+            for i, r in enumerate(batch):
+                feats[i] = np.asarray(r.features, np.float32)
+                nodes[i] = r.node
+            margins, labels, snap = self.state.predict(feats, nodes)
+            # latency must measure COMPUTE, not async dispatch: block before
+            # stamping completion times
+            jax.block_until_ready((margins, labels))
         margins = np.asarray(margins)
         labels = np.asarray(labels)
         train_round = self._train_round()

@@ -31,6 +31,7 @@ import os
 
 import numpy as np
 
+from repro import obs as obslib
 from repro.api.spec import RunSpec
 from repro.checkpoint import AsyncCheckpointer
 from repro.serve.admission import AdmissionQueue, Batcher, Request, ServeStats
@@ -158,6 +159,12 @@ class ServeService:
             raise TimeoutError("batcher did not drain within timeout")
         if self.checkpointer is not None:
             self.checkpointer.close()
+        tel = obslib.active()
+        if tel.enabled:
+            # durable exit record: the full serving summary (served / shed
+            # with reasons / refused / latencies) lands in the event stream
+            # so `obs report` can render it after the service is gone
+            tel.emit("serve_summary", **self.stats())
 
     # -- request path --------------------------------------------------------
 

@@ -46,6 +46,7 @@ import math
 import threading
 from typing import Callable
 
+from repro import obs as obslib
 from repro.api.runner import RunResult, run
 from repro.api.spec import RunSpec
 from repro.checkpoint import AsyncCheckpointer
@@ -168,12 +169,19 @@ class BackgroundTrainer:
             raise TrainerCrash(round_end)
         if self._checkpointer is not None:
             self._checkpointer.save(round_end, eng_state)
-        snap = snapshot_from_state(
-            self.spec, self.engine, eng_state,
-            version=self.state.published, eps_spent=eps)
-        self.state.publish(snap)
+        tel = obslib.active()
+        with tel.span("serve.publish", round=round_end):
+            snap = snapshot_from_state(
+                self.spec, self.engine, eng_state,
+                version=self.state.published, eps_spent=eps)
+            self.state.publish(snap)
         with self._lock:
             self._round = round_end
+        if tel.enabled:
+            tel.metrics.gauge("serve.train_round").set(round_end)
+            tel.metrics.counter("serve.published").inc()
+            tel.emit("publish", round=round_end, version=snap.version,
+                     eps=eps)
         if self.on_publish is not None:
             self.on_publish(snap)
         return self._stop.is_set()

@@ -36,6 +36,7 @@ import dataclasses
 import time
 from typing import Any, Callable
 
+from repro import obs as obslib
 from repro.api.runner import RunResult, run, run_batch, seed_vectorizable
 from repro.sweep.spec import SweepPoint, SweepSpec
 from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
@@ -204,6 +205,11 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
                 f"populate it (records also go stale when the base spec "
                 f"changes)")
 
+    # ambient telemetry (repro.obs): a no-op unless the caller enabled it —
+    # each point gets a sweep.point span and a sweep_point event, and the
+    # runs inside _run_point pick up the same ambient Telemetry themselves
+    tel = obslib.active()
+
     results: list[list[RunResult]] = []
     records: list[dict] = []
     needs_compaction = False
@@ -212,12 +218,16 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
     for point, cached in zip(points, cached_points):
         if cached is not None:
             loaded += 1
-            point_results = [RunResult.from_record(r["result"])
-                             for r in cached]
+            with tel.span("sweep.point", sweep=name, label=point.label(),
+                          source="loaded"):
+                point_results = [RunResult.from_record(r["result"])
+                                 for r in cached]
             point_records = cached
         else:
             ran += 1
-            point_results = _run_point(point, spec, warmup=warmup)
+            with tel.span("sweep.point", sweep=name, label=point.label(),
+                          source="ran"):
+                point_results = _run_point(point, spec, warmup=warmup)
             point_records = [
                 store_obj.make_record(
                     name, coords=point.coords, seed=s, engine=spec.engine,
@@ -234,6 +244,11 @@ def sweep(spec: SweepSpec, *, store: str | SweepStore | None = DEFAULT_STORE,
                 if any(k in existing_keys for k in fresh_keys):
                     needs_compaction = True
                 existing_keys.update(fresh_keys)
+        if tel.enabled:
+            source = "loaded" if cached is not None else "ran"
+            tel.metrics.counter(f"sweep.points_{source}").inc()
+            tel.emit("sweep_point", sweep=name, label=point.label(),
+                     seeds=list(spec.seeds), source=source)
         if verbose:
             accs = [r.accuracy for r in point_results]
             print(f"[sweep {name}] {point.label()}: "

@@ -11,7 +11,7 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
         "docs/streams.md", "docs/sweeps.md", "docs/serving.md",
-        "docs/node_sharding.md", "docs/faults.md")
+        "docs/node_sharding.md", "docs/faults.md", "docs/observability.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -40,6 +40,13 @@ API_MODULES = (
     "repro.serve.replay",
     "repro.serve.service",
     "repro.checkpoint.async_writer",
+    "repro.obs",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.events",
+    "repro.obs.cost",
+    "repro.launch.obs",
+    "repro.metrics.logging",
 )
 FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
 

@@ -1,0 +1,94 @@
+"""repro.metrics: CSVLogger resume/append semantics and MetricTracker
+windows (plus the obs-registry mirror the logger grew in the telemetry PR).
+"""
+import pytest
+
+import repro.obs as obs
+from repro.metrics import CSVLogger, MetricTracker, MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def _ambient_off():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _lines(path):
+    return open(path).read().strip().splitlines()
+
+
+def test_csv_logger_writes_header_once(tmp_path):
+    path = str(tmp_path / "m.csv")
+    lg = CSVLogger(path)
+    lg.log(0, {"loss": 1.0, "acc": 0.5})
+    lg.log(1, {"loss": 0.9, "acc": 0.6})
+    lg.close()
+    assert _lines(path) == ["step,acc,loss", "0,0.5,1.0", "1,0.6,0.9"]
+
+
+def test_csv_logger_resume_appends_instead_of_clobbering(tmp_path):
+    path = str(tmp_path / "m.csv")
+    first = CSVLogger(path)
+    first.log(0, {"loss": 1.0})
+    first.close()
+    resumed = CSVLogger(path)           # the resume path used to open "w"
+    resumed.log(1, {"loss": 0.5})
+    resumed.close()
+    assert _lines(path) == ["step,loss", "0,1.0", "1,0.5"]
+
+
+def test_csv_logger_rejects_unknown_keys(tmp_path):
+    path = str(tmp_path / "m.csv")
+    lg = CSVLogger(path)
+    lg.log(0, {"loss": 1.0})
+    with pytest.raises(ValueError, match=r"row keys \['extra'\]"):
+        lg.log(1, {"loss": 0.5, "extra": 2.0})   # used to drop it silently
+    lg.close()
+
+
+def test_csv_logger_rejects_mismatched_fieldnames_on_resume(tmp_path):
+    path = str(tmp_path / "m.csv")
+    first = CSVLogger(path)
+    first.log(0, {"loss": 1.0})
+    first.close()
+    other = CSVLogger(path, fieldnames=["step", "other"])
+    with pytest.raises(ValueError, match="do not match the existing header"):
+        other.log(1, {"other": 2.0})
+
+
+def test_csv_logger_missing_fields_stay_empty(tmp_path):
+    path = str(tmp_path / "m.csv")
+    lg = CSVLogger(path, fieldnames=["step", "loss", "acc"])
+    lg.log(0, {"loss": 1.0})            # acc absent: empty cell, no error
+    lg.close()
+    assert _lines(path) == ["step,loss,acc", "0,1.0,"]
+
+
+def test_csv_logger_mirrors_into_ambient_registry(tmp_path):
+    tel = obs.enable()
+    lg = CSVLogger(str(tmp_path / "m.csv"))
+    lg.log(0, {"loss": 1.0})
+    lg.log(1, {"loss": 0.25})
+    lg.close()
+    assert tel.metrics.snapshot()["log.loss"] == 0.25
+
+
+def test_metrics_reexports_registry_types():
+    assert MetricsRegistry is obs.MetricsRegistry
+
+
+def test_metric_tracker_empty_window():
+    tr = MetricTracker(window=3)
+    assert tr.means() == {}
+    tr.update({})
+    assert tr.means() == {}
+
+
+def test_metric_tracker_window_eviction():
+    tr = MetricTracker(window=2)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        tr.update({"loss": v})
+    assert tr.means() == {"loss": 3.5}   # only the last two survive
+    tr.update({"other": 7.0})
+    assert tr.means()["other"] == 7.0    # keys window independently
