@@ -33,7 +33,7 @@ import json
 
 import numpy as np
 
-from repro.api import RunSpec, run
+from repro.api import ExecConfig, RunSpec, run
 from repro.faults import FaultSpec, rounds_to_recover
 
 # float32 reduction-order bound for sharded-vs-unsharded trajectories
@@ -62,7 +62,7 @@ def _timed(spec: RunSpec, **kw):
     """(result, wall) with compile excluded: warmup=True compiles the first
     chunk outside the runner's timed region (needs >= 2 chunks)."""
     chunk = max(1, spec.horizon // 2)
-    res = run(spec, chunk_rounds=chunk, warmup=True, **kw)
+    res = run(spec, exec=ExecConfig(chunk_rounds=chunk, warmup=True, **kw))
     return res, float(res.wall_clock)
 
 
@@ -74,8 +74,8 @@ def _zero_fault_checks(*, nodes: int, dim: int, horizon: int,
     draws, keep masks, healed-mass fold) — keep == 1.0 everywhere makes
     every op bitwise equal to the clean mixer, which is the property gated.
     """
-    kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
-              warmup=False)
+    cfg = ExecConfig(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+                     warmup=False)
     zero = {"link_rate": 0.0}
     configs = [("sparse", engine, delay, None)
                for engine in ("sim", "dist") for delay in (0, 2)]
@@ -87,10 +87,10 @@ def _zero_fault_checks(*, nodes: int, dim: int, horizon: int,
     for mixer, engine, delay, nd in configs:
         clean = run(_spec(nodes, dim=dim, horizon=horizon, mixer=mixer,
                           delay=delay),
-                    engine=engine, node_devices=nd, **kw)
+                    engine=engine, exec=cfg.replace(node_devices=nd))
         faulted = run(_spec(nodes, dim=dim, horizon=horizon, mixer=mixer,
                             delay=delay, faults="links", faults_options=zero),
-                      engine=engine, node_devices=nd, **kw)
+                      engine=engine, exec=cfg.replace(node_devices=nd))
         checks.append({"mixer": mixer, "engine": engine, "delay": delay,
                        "node_devices": nd,
                        "identical": _bit_identical(clean, faulted)})
@@ -144,12 +144,13 @@ def run_bench(*, nodes: int, dim: int, horizon: int,
                         if base["rounds_per_sec"] > 0 else None)
 
     # informational: rounds to reconverge after a transient partition heals
-    kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
-              warmup=False)
+    cfg = ExecConfig(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+                     warmup=False)
     heal = horizon // 2
     part = FaultSpec(partitions=((horizon // 4, heal, nodes // 2),))
-    clean = run(_spec(nodes, dim=dim, horizon=horizon), **kw)
-    parted = run(_spec(nodes, dim=dim, horizon=horizon, faults=part), **kw)
+    clean = run(_spec(nodes, dim=dim, horizon=horizon), exec=cfg)
+    parted = run(_spec(nodes, dim=dim, horizon=horizon, faults=part),
+                 exec=cfg)
     recovery = rounds_to_recover(clean.correct.mean(axis=1),
                                  parted.correct.mean(axis=1),
                                  heal_round=heal, tol=0.05, window=3)

@@ -1,0 +1,212 @@
+"""Round-fusion bench: the Pallas backend vs the reference XLA engines.
+
+Writes BENCH_kernels.json — the CI gate behind `RunSpec(backend="pallas")`:
+
+  * **reference_match_identical** — for every STREAMS scenario x engine
+    (plus delay rings), a pallas run must match the reference run within
+    the per-field tolerance contract of `docs/kernels.md` (correct /
+    sparsity / eps_ledger bit-exact, float trajectories within the f32
+    reduction-order bound). A kernel that drifts from the oracle fails CI.
+  * **traffic_cut_speedup** — the analytic HBM-traffic advantage of the
+    fused round body (array passes unfused / fused). On this CPU
+    container the kernels execute in interpret mode (a correctness rig,
+    orders of magnitude slower than compiled XLA), so the *measured*
+    rounds/sec curve below is informational and the gated speedup is the
+    machine-independent number that transfers to TPU.
+  * **cost_error_ratio** — `repro.obs.cost`'s predicted-vs-measured
+    roofline ratio for the pallas chunk program (informational; PR 9's
+    predict-then-measure loop holding the fusion accountable).
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels            # CI scale
+    PYTHONPATH=src python -m benchmarks.bench_kernels --smoke    # seconds
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+import repro.obs as obs
+from repro.api import ExecConfig, RunSpec, run
+
+# f32 reduction-order bound for float trajectories (same contract as
+# tests/test_backends.py and docs/kernels.md); counts stay bit-exact.
+FLOAT_BOUND = 5e-6
+EXACT_FIELDS = ("correct", "sparsity", "eps_ledger")
+FLOAT_FIELDS = ("final_w", "loss", "w_bar_loss")
+
+# Analytic (m, n)-array passes over HBM per round.  Unfused XLA: prox
+# (theta->w), margin (w, x), grad+clip write, tilde = theta + delta
+# (theta, delta, tilde), mix (tilde gather, mixed), update (mixed, grad,
+# theta_next) — ~15 passes.  Fused: stats pass reads (theta, x); update
+# pass reads (theta, x, delta, recv) and writes (theta_next, tilde) — 8
+# passes.  The ratio is the memory-bound headroom the kernel banks on TPU
+# (see src/repro/kernels/pdomd_update.py for the per-op walk-through).
+UNFUSED_PASSES = 15
+FUSED_PASSES = 8
+
+
+def _spec(m: int, n: int, horizon: int, *, stream: str = "drift",
+          delay: int = 0, backend: str = "reference") -> RunSpec:
+    options = {"period": 7} if stream == "drift" else {}
+    return RunSpec(nodes=m, dim=n, horizon=horizon, eps=1.0, alpha0=0.5,
+                   lam=0.01, stream=stream, stream_options=options,
+                   mixer="sparse", mixer_options={"topology": "ring"},
+                   delay=delay, backend=backend)
+
+
+def _field_diffs(ref, pal) -> dict:
+    diffs = {}
+    for f in FLOAT_FIELDS + EXACT_FIELDS:
+        a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(pal, f))
+        diffs[f] = float(np.abs(a - b).max()) if a.size else 0.0
+    return diffs
+
+
+def _match_checks(*, nodes: int, dim: int, horizon: int) -> list[dict]:
+    """Pallas-vs-reference per-field equivalence over every STREAMS
+    scenario x engine, plus the delay-ring and hybrid-mode paths."""
+    cfg = ExecConfig(chunk_rounds=max(1, horizon // 2), compute_regret=False,
+                     warmup=False)
+    configs = [(stream, engine, 0, "auto")
+               for stream in ("social_sparse", "drift", "heterogeneous",
+                              "bursty")
+               for engine in ("sim", "dist")]
+    configs += [("drift", "sim", 2, "auto"), ("drift", "dist", 2, "auto"),
+                ("drift", "sim", 0, "hybrid")]
+    checks = []
+    for stream, engine, delay, mode in configs:
+        ref = run(_spec(nodes, dim, horizon, stream=stream, delay=delay),
+                  engine=engine, exec=cfg)
+        pspec = _spec(nodes, dim, horizon, stream=stream, delay=delay,
+                      backend="pallas")
+        if mode != "auto":
+            pspec = pspec.replace(backend_options={"mode": mode})
+        pal = run(pspec, engine=engine, exec=cfg)
+        diffs = _field_diffs(ref, pal)
+        ok = (all(diffs[f] <= FLOAT_BOUND for f in FLOAT_FIELDS)
+              and all(diffs[f] == 0.0 for f in EXACT_FIELDS))
+        checks.append({"stream": stream, "engine": engine, "delay": delay,
+                       "mode": mode, "match": bool(ok),
+                       "max_float_diff": max(diffs[f] for f in FLOAT_FIELDS)})
+    return checks
+
+
+def _timed(spec: RunSpec, horizon: int) -> float:
+    """Steady-state rounds/sec (warmup compiles the first chunk outside the
+    timed region; needs >= 2 chunks)."""
+    res = run(spec, exec=ExecConfig(chunk_rounds=max(1, horizon // 2),
+                                    compute_regret=False, warmup=True))
+    return float(res.rounds_per_sec)
+
+
+def _micro() -> list[dict]:
+    """Seed-kernel micro rows (folded in from the pre-api kernels_bench):
+    oracle us/call for the fused sub-kernels, plus each kernel's analytic
+    traffic advantage — the TPU-transferable number on this CPU rig."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    def clock(fn, *args, iters=10):
+        out = fn(*args)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) / iters * 1e6
+
+    rows = []
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    args = [jax.random.normal(k, (1024, 128)) for k in keys]
+    jref = jax.jit(lambda *a: ref.pdomd_update_ref(
+        *a, jnp.float32(0.05), jnp.float32(0.01), jnp.float32(0.5),
+        jnp.float32(0.25)))
+    rows.append({"name": "pdomd_update_oracle", "us": round(clock(jref, *args), 1),
+                 "traffic_cut": round(7 / 6, 2)})
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, n = 512, 4096
+    x = jax.random.normal(k1, (B, n)) / jnp.sqrt(n * 1.0)
+    y = jnp.sign(jax.random.normal(k2, (B,)))
+    w = jax.random.normal(k3, (n,))
+    rows.append({"name": "hinge_grad_oracle",
+                 "us": round(clock(jax.jit(ref.hinge_grad_ref), x, y, w), 1),
+                 "traffic_cut": 2.0})
+    return rows
+
+
+def run_bench(*, nodes: int, dims: list[int], horizon: int,
+              bench_path: str = "BENCH_kernels.json") -> dict:
+    checks = _match_checks(nodes=nodes, dim=dims[0], horizon=horizon)
+    reference_match = all(c["match"] for c in checks)
+    print(f"  reference_match_identical={reference_match} "
+          f"({len(checks)} configs)", flush=True)
+
+    curve = []
+    for n in dims:
+        ref_rps = _timed(_spec(nodes, n, horizon), horizon)
+        pal_rps = _timed(_spec(nodes, n, horizon, backend="pallas"), horizon)
+        curve.append({
+            "dim": n,
+            "reference_rounds_per_sec": round(ref_rps, 1),
+            "pallas_rounds_per_sec": round(pal_rps, 1),
+            "measured_ratio": (round(pal_rps / ref_rps, 4)
+                               if ref_rps > 0 else None),
+        })
+        print(f"  n={n}: reference {ref_rps:.1f} r/s  "
+              f"pallas {pal_rps:.1f} r/s", flush=True)
+
+    # the cost loop on the pallas chunk program (PR 9's accountability hook)
+    tel = obs.Telemetry(cost=True)
+    res = run(_spec(nodes, dims[0], horizon, backend="pallas"),
+              exec=ExecConfig(chunk_rounds=max(1, horizon // 2),
+                              compute_regret=False, warmup=True, obs=tel))
+    cost = res.metrics.get("obs", {}).get("cost") or {}
+    cost_error_ratio = cost.get("error_ratio")
+    print(f"  cost.error_ratio={cost_error_ratio}", flush=True)
+
+    bench = {
+        "bench": "kernels_round_fusion",
+        "nodes": nodes,
+        "rounds": horizon,
+        "interpret_mode": True,
+        "reference_match_identical": bool(reference_match),
+        "match_checks": checks,
+        "curve": curve,
+        "traffic_model": {
+            "unfused_passes": UNFUSED_PASSES,
+            "fused_passes": FUSED_PASSES,
+            # the gated floor: the fused round body must keep its analytic
+            # HBM-traffic advantage (machine-independent, unlike the
+            # interpret-mode wall clocks above)
+            "traffic_cut_speedup": round(UNFUSED_PASSES / FUSED_PASSES, 4),
+        },
+        "cost_error_ratio": cost_error_ratio,
+        "micro": _micro(),
+    }
+    with open(bench_path, "w") as f:
+        json.dump(bench, f, indent=2)
+    print(f"  wrote {bench_path}")
+    return bench
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (seconds) — the CI bench-smoke entry")
+    ap.add_argument("--bench-path", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    if args.smoke:
+        kw = dict(nodes=6, dims=[40, 160], horizon=8)
+    else:
+        kw = dict(nodes=8, dims=[64, 256, 1024], horizon=16)
+    run_bench(**kw, bench_path=args.bench_path)
+
+
+if __name__ == "__main__":
+    main()

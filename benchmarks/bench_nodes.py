@@ -32,7 +32,7 @@ import time
 
 import numpy as np
 
-from repro.api import RunSpec, run
+from repro.api import ExecConfig, RunSpec, run
 
 # float32 reduction-order bound for whole-run trajectories at the gate
 # scale (tests/test_sparse_graph.py holds 2e-6 at m=10; the bench's gate
@@ -57,8 +57,8 @@ def _timed(spec: RunSpec, **kw):
     reported wall is ``RunResult.wall_clock`` — steady-state execution, so
     the curve compares the per-round math, not XLA compile times."""
     chunk = max(1, spec.horizon // 2)
-    res = run(spec, chunk_rounds=chunk, compute_regret=False, warmup=True,
-              **kw)
+    res = run(spec, exec=ExecConfig(chunk_rounds=chunk, compute_regret=False,
+                                    warmup=True, **kw))
     return res, float(res.wall_clock)
 
 
@@ -124,19 +124,18 @@ def run_bench(*, curve: list[int], dim: int, horizon: int, gate_nodes: int,
     # correctness gate point: dense-vs-sparse within the asserted bound,
     # sharded bit-deterministic and within the bound of unsharded sparse
     gspec = _spec(gate_nodes, dim=dim, horizon=horizon, mixer="sparse")
-    gate_sparse = run(gspec, chunk_rounds=max(1, horizon // 2),
-                      compute_regret=False, warmup=False)
+    gate_cfg = ExecConfig(chunk_rounds=max(1, horizon // 2),
+                          compute_regret=False, warmup=False)
+    gate_sparse = run(gspec, exec=gate_cfg)
     gate_dense = run(_spec(gate_nodes, dim=dim, horizon=horizon,
                            mixer="dense"),
-                     chunk_rounds=max(1, horizon // 2),
-                     compute_regret=False, warmup=False)
+                     exec=gate_cfg)
     dense_match = _within(gate_sparse, gate_dense, BOUND)
     sharded_identical = None
     if n_devices is not None:
-        kw = dict(chunk_rounds=max(1, horizon // 2), compute_regret=False,
-                  warmup=False, node_devices=n_devices)
-        shard_a = run(gspec, **kw)
-        shard_b = run(gspec, **kw)
+        shard_cfg = gate_cfg.replace(node_devices=n_devices)
+        shard_a = run(gspec, exec=shard_cfg)
+        shard_b = run(gspec, exec=shard_cfg)
         sharded_identical = (_bit_identical(shard_a, shard_b)
                              and _within(shard_a, gate_sparse, BOUND))
 

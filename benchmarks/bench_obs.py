@@ -34,7 +34,7 @@ import os
 import numpy as np
 
 import repro.obs as obs
-from repro.api import RunSpec, run, run_batch
+from repro.api import ExecConfig, RunSpec, run, run_batch
 
 FIELDS = ("final_w", "loss", "correct", "w_bar_loss", "sparsity")
 
@@ -55,21 +55,22 @@ def _identity_checks(spec: RunSpec, *, chunk_rounds: int,
                      events_path: str) -> tuple[list[dict], dict]:
     """Telemetry-on vs telemetry-off runs over every driving path; the ON
     runs carry the full stack (spans + metrics + events + cost loop)."""
-    kw = dict(chunk_rounds=chunk_rounds, compute_regret=True, warmup=True)
+    cfg = ExecConfig(chunk_rounds=chunk_rounds, compute_regret=True,
+                     warmup=True)
     checks = []
     on_metrics = {}
     for engine in ("sim", "dist"):
-        off = run(spec, engine=engine, **kw)
+        off = run(spec, engine=engine, exec=cfg)
         tel = obs.Telemetry(events=events_path, cost=True)
-        on = run(spec, engine=engine, obs=tel, **kw)
+        on = run(spec, engine=engine, exec=cfg.replace(obs=tel))
         tel.close()
         checks.append({"path": "run", "engine": engine,
                        "identical": _bit_identical(off, on)})
         on_metrics[engine] = on.metrics.get("obs", {})
     seeds = [0, 1]
-    off_b = run_batch(spec, seeds, engine="sim", **kw)
+    off_b = run_batch(spec, seeds, engine="sim", exec=cfg)
     tel = obs.Telemetry(events=events_path, cost=True)
-    on_b = run_batch(spec, seeds, engine="sim", obs=tel, **kw)
+    on_b = run_batch(spec, seeds, engine="sim", exec=cfg.replace(obs=tel))
     tel.close()
     checks.append({"path": "run_batch", "engine": "sim",
                    "identical": all(_bit_identical(o, n)
@@ -81,13 +82,15 @@ def _identity_checks(spec: RunSpec, *, chunk_rounds: int,
 def _overhead(spec: RunSpec, *, chunk_rounds: int, repeats: int) -> dict:
     """min-over-repeats wall of a fully-instrumented run vs an
     uninstrumented one (warmup excludes compile from both)."""
-    kw = dict(chunk_rounds=chunk_rounds, compute_regret=False, warmup=True)
-    wall_off = min(float(run(spec, **kw).wall_clock)
+    cfg = ExecConfig(chunk_rounds=chunk_rounds, compute_regret=False,
+                     warmup=True)
+    wall_off = min(float(run(spec, exec=cfg).wall_clock)
                    for _ in range(repeats))
     walls_on = []
     for _ in range(repeats):
         tel = obs.Telemetry(cost=True)    # spans + metrics + cost, no I/O —
-        walls_on.append(float(run(spec, obs=tel, **kw).wall_clock))
+        walls_on.append(float(run(spec, exec=cfg.replace(obs=tel))
+                              .wall_clock))
     wall_on = min(walls_on)               # the steady-state per-chunk tax
     return {
         "wall_off_s": round(wall_off, 6),
@@ -119,8 +122,9 @@ def run_bench(*, nodes: int, dim: int, horizon: int, chunk_rounds: int,
 
     # sample trace: one fully-instrumented run, exported for the CI artifact
     tel = obs.Telemetry(events=events_path, cost=True)
-    res = run(spec, engine="sim", obs=tel, chunk_rounds=chunk_rounds,
-              compute_regret=True, warmup=True)
+    res = run(spec, engine="sim",
+              exec=ExecConfig(obs=tel, chunk_rounds=chunk_rounds,
+                              compute_regret=True, warmup=True))
     tel.export_chrome(trace_path)
     span_summary = tel.tracer.summary()
     tel.close()

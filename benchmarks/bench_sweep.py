@@ -27,7 +27,7 @@ import time
 import numpy as np
 
 from benchmarks.common import Scale, make_spec
-from repro.api import run, run_batch
+from repro.api import ExecConfig, run, run_batch
 
 
 def _identical(a, b) -> bool:
@@ -49,13 +49,13 @@ def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
     # the loop every benchmark used to hand-roll: one run() per seed,
     # each paying its own compile + per-chunk dispatch
     t0 = time.time()
-    sequential = [run(spec.replace(seed=s), engine=engine, chunk_rounds=chunk,
-                      compute_regret=False, warmup=False) for s in seeds]
+    cfg = ExecConfig(chunk_rounds=chunk, compute_regret=False, warmup=False)
+    sequential = [run(spec.replace(seed=s), engine=engine, exec=cfg)
+                  for s in seeds]
     seq_wall = time.time() - t0
 
     t0 = time.time()
-    vmapped = run_batch(spec, seeds, engine=engine, chunk_rounds=chunk,
-                        compute_regret=False, warmup=False)
+    vmapped = run_batch(spec, seeds, engine=engine, exec=cfg)
     vec_wall = time.time() - t0
 
     sharded = None
@@ -68,8 +68,7 @@ def run_bench(scale: Scale | None = None, *, n_seeds: int = 8,
             n_devices = int(mesh.shape["seed"])
             t0 = time.time()
             sharded = run_batch(spec, seeds, engine=engine,
-                                chunk_rounds=chunk, compute_regret=False,
-                                warmup=False, mesh=mesh)
+                                exec=cfg.replace(mesh=mesh))
             shard_wall = time.time() - t0
 
     identical = all(_identical(a, b) for a, b in zip(sequential, vmapped))

@@ -1,5 +1,5 @@
-"""Benchmark entrypoint: one function per paper figure + kernel micro-bench +
-roofline aggregation. Prints ``name,us_per_call,derived`` CSV lines.
+"""Benchmark entrypoint: one function per paper figure + the round-fusion
+kernel bench. Prints ``name,us_per_call,derived`` CSV lines.
 
 Every figure routes through the `repro.sweep` store: multi-seed sweeps with
 the seed axis vmapped per point, one JSONL record per (point, seed) under
@@ -30,7 +30,6 @@ def main() -> None:
 
     from benchmarks import (bench_sweep, fig2_privacy, fig3_topology,
                             fig4_sparsity, fig5_nodes)
-    from benchmarks import kernels_bench, roofline
     from benchmarks.common import Scale
 
     if args.full and args.smoke:
@@ -85,14 +84,21 @@ def main() -> None:
         rows.append(("bench_sweep_seed_vmap", (time.time() - t0) * 1e6,
                      f"speedup={rs['speedup']};identical={rs['identical']}"))
 
-    rows += kernels_bench.run_all()
+    # the round-fusion bench (BENCH_kernels.json: pallas backend vs
+    # reference + the seed-kernel micro rows)
+    from benchmarks import bench_kernels
+    t0 = time.time()
+    rk = bench_kernels.run_bench(
+        nodes=6 if args.smoke else 8,
+        dims=[40, 160] if args.smoke else [64, 256, 1024],
+        horizon=8 if args.smoke else 16)
+    rows.append(("bench_kernels_round_fusion", (time.time() - t0) * 1e6,
+                 f"reference_match={rk['reference_match_identical']};"
+                 f"traffic_cut={rk['traffic_model']['traffic_cut_speedup']}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-
-    # roofline table from whatever dry-run records exist
-    roofline.main()
 
 
 if __name__ == "__main__":

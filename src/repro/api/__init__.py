@@ -38,9 +38,18 @@ STREAMS registry and `run()` drives either engine over them end-to-end
 True
 >>> spec.replace(horizon=4).resolve_stream().__class__.__name__
 'SocialStream'
+
+HOW the round body executes is a sixth axis: the BACKENDS registry maps
+`RunSpec.backend` to an execution backend — "reference" (plain XLA) or
+"pallas" (the fused kernels of `repro.kernels.round_fused`); execution
+knobs travel as one `ExecConfig` (see `repro.api.exec_config`):
+
+>>> from repro.api import BACKENDS
+>>> BACKENDS.names()
+('pallas', 'reference')
 """
-from repro.api.registry import (CLIPPERS, LOCAL_RULES, MECHANISMS, MIXERS,
-                                STREAMS, Registry)
+from repro.api.registry import (BACKENDS, CLIPPERS, LOCAL_RULES, MECHANISMS,
+                                MIXERS, STREAMS, Registry)
 from repro.api.mixers import (AlternatingRingMixer, CompleteMixer,
                               DelayedMixer, DenseMatrixMixer,
                               DisconnectedMixer, HeterogeneousDelayMixer,
@@ -55,10 +64,14 @@ from repro.api.clippers import (Clipper, NoClipper, PerNodeL2Clipper,
 from repro.api.streams import (BurstyStream, DriftStream,
                                HeterogeneousStream, SocialStream, Stream)
 from repro.api.spec import RunSpec
+from repro.api.exec_config import ExecConfig
 from repro.api.runner import RunResult, run, run_batch, seed_vectorizable
+# importing repro.api.backends registers the BACKENDS entries
+from repro.api.backends import PallasBackend, ReferenceBackend
 
 __all__ = [
     "Registry", "MIXERS", "MECHANISMS", "LOCAL_RULES", "CLIPPERS", "STREAMS",
+    "BACKENDS", "ReferenceBackend", "PallasBackend", "ExecConfig",
     "Mixer", "MixerBase", "DenseMatrixMixer", "RingRollMixer",
     "CompleteMixer", "DisconnectedMixer", "AlternatingRingMixer",
     "DelayedMixer", "HeterogeneousDelayMixer",

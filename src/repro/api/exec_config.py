@@ -1,0 +1,144 @@
+"""ExecConfig — the execution knobs of `run`/`run_batch`, as one object.
+
+`run()` historically grew a sprawl of execution kwargs (chunking,
+checkpointing, logging, meshes, telemetry). They are now one frozen
+dataclass passed as ``run(spec, exec=ExecConfig(...))`` — a config you can
+build once, stash on a trainer, log, or `replace()` per call. WHAT to run
+stays on `RunSpec` (and `run`'s own horizon/on_chunk/step_fn params); HOW
+to execute it lives here.
+
+The old keyword arguments keep working through a deprecation shim: legacy
+kwargs are forwarded into an ExecConfig and a DeprecationWarning fires
+once per process. Passing both ``exec=`` and legacy kwargs is an error.
+
+>>> from repro.api import ExecConfig
+>>> cfg = ExecConfig(chunk_rounds=64, warmup=False)
+>>> cfg.chunk_rounds, cfg.resume
+(64, False)
+>>> cfg.replace(resume=True).resume
+True
+>>> ExecConfig(chunk=3)
+Traceback (most recent call last):
+    ...
+TypeError: ...chunk...
+
+Migration table (old kwarg -> ExecConfig field):
+
+    run(spec, chunk_rounds=64)      -> run(spec, exec=ExecConfig(chunk_rounds=64))
+    run(spec, checkpoint_every=256,
+             checkpoint_dir=d)      -> ExecConfig(checkpoint_every=256, checkpoint_dir=d)
+    run(spec, resume=True)          -> ExecConfig(resume=True)
+    run(spec, log_path=p)           -> ExecConfig(log_path=p)
+    run(spec, compute_regret=False) -> ExecConfig(compute_regret=False)
+    run(spec, warmup=False)         -> ExecConfig(warmup=False)
+    run(spec, print_every=10)       -> ExecConfig(print_every=10)
+    run(spec, node_devices=4)       -> ExecConfig(node_devices=4)
+    run(spec, node_mesh=mesh)       -> ExecConfig(node_mesh=mesh)
+    run(spec, obs=tel)              -> ExecConfig(obs=tel)
+    run_batch(spec, seeds,
+              devices="auto")       -> ExecConfig(devices="auto")
+    run_batch(spec, seeds, mesh=mesh) -> ExecConfig(mesh=mesh)
+    run_batch(..., check_vectorizable=False)
+                                    -> ExecConfig(check_vectorizable=False)
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+__all__ = ["ExecConfig", "resolve_exec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """How a run executes (see module docstring for the migration table).
+
+    chunk_rounds:       rounds per jitted `lax.scan` chunk.
+    checkpoint_every / checkpoint_dir / resume:
+                        periodic engine-state checkpoints and bit-identical
+                        resume (repro.checkpoint).
+    log_path:           CSVLogger per-round metrics mirror (run() only).
+    compute_regret:     post-hoc Definition-3 regret vs the best fixed w.
+    warmup:             compile the first chunk outside the timed region.
+    print_every:        custom-mode (step_fn=) progress prints (run() only).
+    node_devices / node_mesh:
+                        shard the NODE axis over a ("node",) mesh
+                        (repro.api.shard_node).
+    devices / mesh:     run_batch() only — shard the SEED axis (or a
+                        ("seed","node") grid when mesh carries both axes).
+    check_vectorizable: run_batch() only — verify the spec's resolved
+                        stages are seed-independent before vmapping.
+    obs:                a repro.obs.Telemetry (default: the ambient
+                        `repro.obs.active()`).
+    """
+
+    chunk_rounds: int = 512
+    checkpoint_every: int | None = None
+    checkpoint_dir: str | None = None
+    resume: bool = False
+    log_path: str | None = None
+    compute_regret: bool = True
+    warmup: bool = True
+    print_every: int | None = None
+    node_devices: int | str | None = None
+    node_mesh: Any = None
+    devices: int | str | None = None
+    mesh: Any = None
+    check_vectorizable: bool = True
+    obs: Any = None
+
+    def replace(self, **kw: Any) -> "ExecConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_FIELDS = tuple(f.name for f in dataclasses.fields(ExecConfig))
+_BATCH_ONLY = ("devices", "mesh")
+_RUN_ONLY = ("log_path", "print_every", "node_mesh")
+
+# one warning per process, not one per call site — a sweep making thousands
+# of legacy calls should nag exactly once
+_warned_legacy = False
+
+
+def resolve_exec(exec_cfg: ExecConfig | None, legacy: dict,
+                 *, caller: str) -> ExecConfig:
+    """The ExecConfig a run/run_batch call resolved to.
+
+    ``legacy`` holds the caller's ``**legacy`` catch-all: deprecated
+    execution kwargs forwarded into an ExecConfig (warning once), with
+    typos rejected by name exactly like a real keyword argument would be.
+    """
+    global _warned_legacy
+    if legacy:
+        unknown = sorted(k for k in legacy if k not in _FIELDS)
+        if unknown:
+            raise TypeError(
+                f"{caller}() got unexpected keyword arguments {unknown}; "
+                f"execution options: {sorted(_FIELDS)}")
+        if exec_cfg is not None:
+            raise TypeError(
+                f"{caller}() got both exec= and legacy execution kwargs "
+                f"{sorted(legacy)}; pass everything via exec=ExecConfig(...)")
+        if not _warned_legacy:
+            warnings.warn(
+                f"passing execution options to {caller}() as keyword "
+                f"arguments ({sorted(legacy)}) is deprecated; use "
+                f"{caller}(spec, ..., exec=ExecConfig(...)) — see "
+                f"repro.api.exec_config for the migration table",
+                DeprecationWarning, stacklevel=3)
+            _warned_legacy = True
+        exec_cfg = ExecConfig(**legacy)
+    cfg = exec_cfg if exec_cfg is not None else ExecConfig()
+    if not isinstance(cfg, ExecConfig):
+        raise TypeError(f"{caller}() exec= expects an ExecConfig, got "
+                        f"{type(cfg).__name__}")
+    only = _BATCH_ONLY if caller == "run" else _RUN_ONLY
+    bad = [f for f in only
+           if getattr(cfg, f) != getattr(ExecConfig, f, None)
+           and getattr(cfg, f) is not None]
+    if bad:
+        other = "run_batch" if caller == "run" else "run"
+        raise ValueError(f"ExecConfig fields {bad} apply to {other}(), "
+                         f"not {caller}()")
+    return cfg

@@ -34,7 +34,7 @@ import inspect
 from typing import Any, Callable, Generic, TypeVar
 
 __all__ = ["Registry", "UnknownEntryError", "MIXERS", "MECHANISMS",
-           "LOCAL_RULES", "CLIPPERS", "STREAMS"]
+           "LOCAL_RULES", "CLIPPERS", "STREAMS", "BACKENDS"]
 
 T = TypeVar("T")
 
@@ -72,6 +72,21 @@ class Registry(Generic[T]):
 
     def names(self) -> tuple[str, ...]:
         return tuple(sorted(self._factories))
+
+    def describe(self) -> dict[str, str]:
+        """name -> first docstring line of the factory, for listings.
+
+        >>> from repro.api import BACKENDS
+        >>> for name, what in BACKENDS.describe().items():
+        ...     print(f"{name}: {what}")
+        pallas: Fused Pallas round body (see docs/kernels.md).
+        reference: Plain-XLA engines (the correctness oracle).
+        """
+        out = {}
+        for name in self.names():
+            doc = inspect.getdoc(self._factories[name]) or ""
+            out[name] = doc.splitlines()[0] if doc else ""
+        return out
 
     def get(self, name: str) -> Callable[..., T]:
         try:
@@ -123,3 +138,8 @@ MECHANISMS: Registry = Registry("mechanism")
 LOCAL_RULES: Registry = Registry("local rule")
 CLIPPERS: Registry = Registry("clipper")
 STREAMS: Registry = Registry("stream")
+#   BACKENDS    — how the round body executes ("reference" XLA engines or
+#                 the fused "pallas" kernels); built by RunSpec.resolve_
+#                 backend() with user backend_options. Entries register in
+#                 repro.api.backends.
+BACKENDS: Registry = Registry("backend")

@@ -14,17 +14,26 @@ PRNG key, so a seeded run produces bit-identical iterates under either
 engine (including the Laplace noise — see the single-leaf key note in
 `core.gossip.gossip_mix_tree`).
 
->>> from repro.api import RunSpec, run
+Execution knobs travel as one frozen `ExecConfig` (`repro.api.exec_config`)
+passed via ``exec=``; the legacy keyword arguments still work through a
+deprecation shim that forwards into ExecConfig and warns once.
+
+>>> from repro.api import ExecConfig, RunSpec, run
 >>> spec = RunSpec(nodes=2, dim=8, horizon=6, eps=1.0, alpha0=0.5,
 ...                lam=0.01, stream="drift", stream_options={"period": 2})
->>> res = run(spec, engine="sim", chunk_rounds=3, compute_regret=False,
-...           warmup=False)
+>>> cfg = ExecConfig(chunk_rounds=3, compute_regret=False, warmup=False)
+>>> res = run(spec, engine="sim", exec=cfg)
 >>> res.rounds, res.correct.shape, float(res.eps_ledger[-1])
 (6, (6, 2), 1.0)
->>> dist = run(spec, engine="dist", chunk_rounds=3, compute_regret=False,
-...            warmup=False)
+>>> dist = run(spec, engine="dist", exec=cfg)
 >>> bool((res.final_w == dist.final_w).all())     # seeded, bit-identical
 True
+
+How the round body executes is the spec's business, not the runner's: the
+chunk builders dispatch through ``spec.resolve_backend()`` (BACKENDS
+registry — "reference" XLA engines or the fused "pallas" kernels, see
+`repro.api.backends`), so every path here — run, run_batch, the
+node-sharded mesh — honours ``RunSpec.backend`` without special cases.
 
 `run` also drives arbitrary step functions (`step_fn=`) so the train CLI's
 LM loops share this exact loop — metrics, logging, accounting, checkpoints
@@ -42,13 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs as obslib
+from repro.api.exec_config import ExecConfig, resolve_exec
 from repro.api.spec import RunSpec
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core.privacy import PrivacyAccountant
 from repro.metrics import CSVLogger, MetricTracker
 
 __all__ = ["run", "run_batch", "RunResult", "make_chunk_fn",
-           "make_chunk_program"]
+           "make_chunk_program", "reference_chunk_program"]
 
 
 # -- JSON round-trip ---------------------------------------------------------
@@ -202,14 +212,26 @@ class RunResult:
 
 
 def make_chunk_program(spec: RunSpec, engine: str) -> tuple[Callable, Callable]:
-    """(chunk_fn, init_fn) for one engine.
+    """(chunk_fn, init_fn) for one engine, via the spec's backend.
 
-    chunk_fn(state, xs, ys) scans the engine over a chunk of rounds and
+    chunk_fn(state, xs, ys) scans the round body over a chunk of rounds and
     returns (state, RoundOutput-stacked trajectories); init_fn(key) builds
     the engine state for one PRNG key. The program is seed-independent —
     only the key (and the stream data fed to chunk_fn) vary per seed, which
     is what lets `run_batch` build ONE program and S init states.
+
+    Dispatches through ``spec.resolve_backend()`` (BACKENDS registry):
+    backend="reference" is `reference_chunk_program` below; "pallas" swaps
+    the round body for the fused kernels of `repro.kernels.round_fused`
+    while keeping the same state pytrees, PRNG stream and scan structure.
     """
+    return spec.resolve_backend().make_chunk_program(spec, engine)
+
+
+def reference_chunk_program(spec: RunSpec,
+                            engine: str) -> tuple[Callable, Callable]:
+    """(chunk_fn, init_fn) of the plain-XLA engines — the reference backend
+    (and the init_fn every other backend shares)."""
     from repro.core.algorithm1 import RoundOutput, hinge_loss_and_grad
     from repro.core import prox
 
@@ -309,23 +331,20 @@ def _regret(stream, w_bar_loss: np.ndarray, xs: np.ndarray, ys: np.ndarray,
 
 
 def run(spec: RunSpec | None, engine: str = "sim", *,
-        chunk_rounds: int = 512,
-        checkpoint_every: int | None = None,
-        checkpoint_dir: str | None = None,
-        resume: bool = False,
-        log_path: str | None = None,
-        compute_regret: bool = True,
-        warmup: bool = True,
+        exec: ExecConfig | None = None,
         horizon: int | None = None,
         on_chunk: Callable | None = None,
         step_fn: Callable | None = None,
         state: Any = None,
         batches: Iterator | None = None,
-        print_every: int | None = None,
-        node_devices: int | str | None = None,
-        node_mesh: Any = None,
-        obs: Any = None) -> RunResult:
+        **legacy: Any) -> RunResult:
     """Drive one run end-to-end and return a RunResult.
+
+    Execution knobs (chunking, checkpointing, logging, meshes, telemetry)
+    travel as ``exec=ExecConfig(...)`` — see `repro.api.exec_config` for
+    every field and the legacy-kwarg migration table. The old keyword
+    arguments (``chunk_rounds=``, ``checkpoint_every=``, ...) still work
+    via ``**legacy`` with a once-per-process DeprecationWarning.
 
     Stream mode (default): resolves ``spec.stream`` and scans the chosen
     engine over the horizon in jitted chunks. ``checkpoint_every`` saves the
@@ -371,12 +390,13 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     host-side: a telemetry-on run is bit-identical to a telemetry-off run
     (gated as ``obs_off_identical`` in BENCH_obs.json).
     """
+    cfg = resolve_exec(exec, legacy, caller="run")
     if step_fn is not None:
         return _run_custom(spec, engine, step_fn=step_fn, state=state,
                            batches=batches, horizon=horizon,
-                           log_path=log_path, print_every=print_every,
-                           checkpoint_every=checkpoint_every,
-                           checkpoint_dir=checkpoint_dir)
+                           log_path=cfg.log_path, print_every=cfg.print_every,
+                           checkpoint_every=cfg.checkpoint_every,
+                           checkpoint_dir=cfg.checkpoint_dir)
     if spec is None:
         raise ValueError("run() needs a RunSpec (or step_fn= for custom mode)")
 
@@ -398,13 +418,13 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
                    if getattr(spec, "faults", None) is not None else None)
     fault_sched = getattr(fault_mixer, "schedule", None)
 
-    tel = obs if obs is not None else obslib.active()
+    tel = cfg.obs if cfg.obs is not None else obslib.active()
     run_id = tel.new_run_id() if tel.enabled else None
 
     nmesh = None
-    if node_devices is not None or node_mesh is not None:
+    if cfg.node_devices is not None or cfg.node_mesh is not None:
         from repro.api.shard_node import resolve_node_mesh
-        nmesh = resolve_node_mesh(node_devices, node_mesh)
+        nmesh = resolve_node_mesh(cfg.node_devices, cfg.node_mesh)
     if nmesh is None:
         chunk_fn, init_state = make_chunk_fn(spec, engine)
     else:
@@ -415,21 +435,21 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
 
     start = 0
     eng_state = init_state
-    if resume:
-        if not checkpoint_dir:
+    if cfg.resume:
+        if not cfg.checkpoint_dir:
             raise ValueError("resume=True needs checkpoint_dir=")
-        found = latest_step(checkpoint_dir)
+        found = latest_step(cfg.checkpoint_dir)
         if found is not None:
-            eng_state = restore_checkpoint(checkpoint_dir, init_state,
+            eng_state = restore_checkpoint(cfg.checkpoint_dir, init_state,
                                            step=found)
             start = found
     accountant.rounds = start
 
-    bounds = _boundaries(start, T, chunk_rounds, checkpoint_every)
-    logger = CSVLogger(log_path) if log_path else None
+    bounds = _boundaries(start, T, cfg.chunk_rounds, cfg.checkpoint_every)
+    logger = CSVLogger(cfg.log_path) if cfg.log_path else None
 
     first_chunk = None
-    if warmup and len(bounds) > 1:
+    if cfg.warmup and len(bounds) > 1:
         first_chunk = stream.chunk(bounds[0], bounds[1])
         with tel.span("run.compile", engine=engine, run_id=run_id):
             jax.block_until_ready(chunk_jit(eng_state, *first_chunk)[0].theta)
@@ -491,7 +511,7 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
             wb_losses.append(np.asarray(outs.w_bar_loss))
             sparsities.append(np.asarray(outs.sparsity))
             corrects.append(np.asarray(outs.correct))
-            if compute_regret:
+            if cfg.compute_regret:
                 xs_all.append(np.asarray(xs))
                 ys_all.append(np.asarray(ys))
             if logger:
@@ -503,10 +523,10 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
                         "accuracy": float(corrects[-1][i].mean()),
                         "eps": accountant.guarantee_at(t + 1),
                     })
-            if (checkpoint_every and checkpoint_dir
-                    and b % checkpoint_every == 0):
+            if (cfg.checkpoint_every and cfg.checkpoint_dir
+                    and b % cfg.checkpoint_every == 0):
                 with tel.span("run.checkpoint", step=b):
-                    save_checkpoint(checkpoint_dir, b, eng_state)
+                    save_checkpoint(cfg.checkpoint_dir, b, eng_state)
                 tel.emit("checkpoint", run_id=run_id, step=b)
             if on_chunk is not None and on_chunk(b, eng_state, accountant):
                 break
@@ -519,7 +539,7 @@ def run(spec: RunSpec | None, engine: str = "sim", *,
     w_bar_loss = np.concatenate(wb_losses) if wb_losses else np.zeros((0,))
     tail = max(1, int(correct.shape[0] * 0.2)) if correct.size else 1
     regret = None
-    if compute_regret and start == 0 and xs_all:
+    if cfg.compute_regret and start == 0 and xs_all:
         with tel.span("run.regret", rounds=int(w_bar_loss.shape[0])):
             regret = _regret(stream, w_bar_loss, np.concatenate(xs_all),
                              np.concatenate(ys_all), m)
@@ -666,19 +686,15 @@ def _resolve_seed_mesh(devices: int | str | None, mesh: Any):
 
 
 def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
-              chunk_rounds: int = 512,
-              checkpoint_every: int | None = None,
-              checkpoint_dir: str | None = None,
-              resume: bool = False,
-              compute_regret: bool = True,
-              warmup: bool = True,
+              exec: ExecConfig | None = None,
               horizon: int | None = None,
-              check_vectorizable: bool = True,
-              devices: int | str | None = None,
-              mesh: Any = None,
-              node_devices: int | str | None = None,
-              obs: Any = None) -> list[RunResult]:
+              **legacy: Any) -> list[RunResult]:
     """Run one config under S seeds as ONE vmapped program; S RunResults.
+
+    Execution knobs travel as ``exec=ExecConfig(...)`` exactly like `run`
+    (legacy kwargs keep working with a once-per-process deprecation
+    warning); ``devices=``/``mesh=``/``check_vectorizable=`` are the
+    batch-only ExecConfig fields.
 
     The innermost (seed) axis is vectorized: per-seed engine states are
     stacked into a leading axis of size S, the per-seed stream chunks are
@@ -725,12 +741,15 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     (see `seed_vectorizable`) — callers like `repro.sweep` fall back to
     sequential per-seed runs in that case.
     """
+    cfg = resolve_exec(exec, legacy, caller="run_batch")
+    devices, mesh = cfg.devices, cfg.mesh
+    node_devices = cfg.node_devices
     seeds = [int(s) for s in seeds]
     if not seeds:
         raise ValueError("run_batch needs at least one seed")
     # check_vectorizable=False skips the per-seed mixer resolutions when the
     # caller (repro.sweep) already ran seed_vectorizable on this spec
-    if check_vectorizable and not seed_vectorizable(spec, seeds):
+    if cfg.check_vectorizable and not seed_vectorizable(spec, seeds):
         raise ValueError(
             "the resolved mixer depends on RunSpec.seed (seeded topology or "
             "delay_dist); a vmapped batch would share one mixing matrix "
@@ -755,7 +774,7 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
                    if getattr(base, "faults", None) is not None else None)
     fault_sched = getattr(fault_mixer, "schedule", None)
 
-    tel = obs if obs is not None else obslib.active()
+    tel = cfg.obs if cfg.obs is not None else obslib.active()
     run_id = tel.new_run_id() if tel.enabled else None
 
     chunk_fn, init_fn = make_chunk_program(base, engine)
@@ -815,14 +834,14 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
 
     start = 0
     eng_state = _place(batched_init)
-    if resume:
-        if not checkpoint_dir:
+    if cfg.resume:
+        if not cfg.checkpoint_dir:
             raise ValueError("resume=True needs checkpoint_dir=")
-        found = latest_step(checkpoint_dir)
+        found = latest_step(cfg.checkpoint_dir)
         if found is not None:
             # checkpoints hold the UNPADDED (S, ...) host state, so a run
             # saved under any device count restores under this one
-            eng_state = _place(restore_checkpoint(checkpoint_dir,
+            eng_state = _place(restore_checkpoint(cfg.checkpoint_dir,
                                                   batched_init, step=found))
             start = found
     accountant.rounds = start
@@ -832,10 +851,10 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
         return _place((jnp.stack([p[0] for p in pairs]),
                        jnp.stack([p[1] for p in pairs])))
 
-    bounds = _boundaries(start, T, chunk_rounds, checkpoint_every)
+    bounds = _boundaries(start, T, cfg.chunk_rounds, cfg.checkpoint_every)
 
     first_chunk = None
-    if warmup and len(bounds) > 1:
+    if cfg.warmup and len(bounds) > 1:
         first_chunk = stacked_chunk(bounds[0], bounds[1])
         with tel.span("run_batch.compile", engine=engine, seeds=S,
                       run_id=run_id):
@@ -897,13 +916,13 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
             wb_losses.append(np.asarray(outs.w_bar_loss)[:S])  # (S, C)
             sparsities.append(np.asarray(outs.sparsity)[:S])
             corrects.append(np.asarray(outs.correct)[:S])
-            if compute_regret:
+            if cfg.compute_regret:
                 xs_all.append(np.asarray(xs)[:S])
                 ys_all.append(np.asarray(ys)[:S])
-            if (checkpoint_every and checkpoint_dir
-                    and b % checkpoint_every == 0):
+            if (cfg.checkpoint_every and cfg.checkpoint_dir
+                    and b % cfg.checkpoint_every == 0):
                 with tel.span("run_batch.checkpoint", step=b):
-                    save_checkpoint(checkpoint_dir, b,
+                    save_checkpoint(cfg.checkpoint_dir, b,
                                     _unpad_tree(eng_state, S))
                 tel.emit("checkpoint", run_id=run_id, step=b)
     wall = time.time() - t0
@@ -952,7 +971,7 @@ def run_batch(spec: RunSpec, seeds, engine: str = "sim", *,
     results = []
     for i, (s, st) in enumerate(zip(seeds, streams)):
         regret = None
-        if compute_regret and start == 0 and xs_all:
+        if cfg.compute_regret and start == 0 and xs_all:
             with tel.span("run_batch.regret", seed=s):
                 regret = _regret(st, w_bar_loss[i],
                                  np.concatenate([x[i] for x in xs_all]),

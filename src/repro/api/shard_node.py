@@ -57,7 +57,8 @@ from repro.api.mixers import (DelayedMixer, DenseMatrixMixer, MixerBase,
 from repro.api.spec import RunSpec
 
 __all__ = ["sparse_graph_and_delay", "NodePartition", "partition_graph",
-           "ShardedSparseMixer", "make_node_chunk_fn", "resolve_node_mesh"]
+           "ShardedSparseMixer", "make_node_chunk_fn", "resolve_node_mesh",
+           "reference_local_round_fn"]
 
 
 def sparse_graph_and_delay(mixer) -> tuple[Any, int]:
@@ -219,9 +220,12 @@ def _state_pspecs(template, lead: tuple):
                              history=hist)
 
 
-def _local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
-                    delay: int, schedule=None, graph=None) -> Callable:
-    """One gossip round over THIS shard's block of nodes.
+def reference_local_round_fn(spec: RunSpec, engine: str, part: NodePartition,
+                             delay: int, schedule=None,
+                             graph=None) -> Callable:
+    """One gossip round over THIS shard's block of nodes (reference backend;
+    `make_node_chunk_fn` dispatches here — or to the backend's fused
+    variant — via ``spec.resolve_backend()``).
 
     Mirrors `Algorithm1.round` / `GossipDP.update` term for term; the only
     cross-shard traffic is the mixer's halo exchange and three metric psums.
@@ -388,18 +392,23 @@ def make_node_chunk_fn(spec: RunSpec, engine: str, mesh,
                          f"{spec.nodes}")
     part = partition_graph(graph, D)
     m, pad = part.m, part.m_pad - part.m
-    round_fn = _local_round_fn(spec, engine, part, delay,
-                               schedule=schedule, graph=graph)
+    # the spec's backend builds the per-shard round body ("reference" is
+    # reference_local_round_fn above; "pallas" swaps in the fused stats +
+    # dual-step kernels — the ppermute halo exchange stays out here either
+    # way, in the sharded mixer the round body calls)
+    round_fn = spec.resolve_backend().make_local_round_fn(
+        spec, engine, part, delay, schedule=schedule, graph=graph)
 
     def local_chunk(state, xs, ys):
         return jax.lax.scan(round_fn, state, (xs, ys))
 
     body = jax.vmap(local_chunk) if batched else local_chunk
 
-    # init states are built by the UNSHARDED program: global, unpadded —
-    # the same pytree a dense run initializes, so checkpoints interchange
-    from repro.api.runner import make_chunk_program
-    init_fn = make_chunk_program(spec, engine)[1]
+    # init states are built by the UNSHARDED reference program: global,
+    # unpadded — the same pytree a dense run initializes, so checkpoints
+    # interchange across backends and device counts
+    from repro.api.runner import reference_chunk_program
+    init_fn = reference_chunk_program(spec, engine)[1]
 
     template = init_fn(jax.random.PRNGKey(0))
     state_spec = _state_pspecs(template, lead)

@@ -78,6 +78,13 @@ class RunSpec:
              form; see docs/faults.md. The fault pattern is seeded by
              FaultSpec.seed, NOT RunSpec.seed — it is part of the
              scenario, so multi-seed sweeps share the same weather.
+    backend / backend_options:
+             how the round body executes (BACKENDS registry name or a
+             backend instance): 'reference' (default) is the plain-XLA
+             engines; 'pallas' fuses the whole round into Pallas kernels
+             (same PRNG stream, float32 tolerance contract — see
+             docs/kernels.md). backend_options forward to the factory,
+             e.g. {"mode": "hybrid", "block_cols": 256}.
     """
 
     nodes: int
@@ -111,6 +118,9 @@ class RunSpec:
     # fault scenario (repro.faults): FAULTS registry name or FaultSpec
     faults: Any = None
     faults_options: dict = dataclasses.field(default_factory=dict)
+    # execution backend (BACKENDS registry name or instance)
+    backend: Any = "reference"
+    backend_options: dict = dataclasses.field(default_factory=dict)
 
     # -- protocol resolution -------------------------------------------------
 
@@ -204,6 +214,17 @@ class RunSpec:
             raise ValueError(
                 f"stream has n={stream.n} features but RunSpec.dim={self.dim}")
         return stream
+
+    def resolve_backend(self):
+        """The execution backend (BACKENDS registry; see repro.api.backends).
+
+        Imported lazily so `repro.api.spec` keeps no kernel dependency —
+        the import also triggers backend registration when a RunSpec is
+        used without going through `repro.api`.
+        """
+        from repro.api import backends  # noqa: F401  (registers entries)
+        from repro.api.registry import BACKENDS
+        return BACKENDS.build(self.backend, self.backend_options)
 
     def omd_config(self) -> OMDConfig:
         return OMDConfig(alpha0=self.alpha0, schedule=self.schedule,

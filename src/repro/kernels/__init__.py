@@ -1,3 +1,19 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's per-round hot loop.
+
+The round pipeline (clip -> Laplace-noise -> gossip-mix -> sparse-OMD
+update -> L1 prox) is memory-bound at the paper's dimensions; these
+kernels fuse it into streamed passes over the (m, n) parameter block (see
+`round_fused` and docs/kernels.md). `ops` wraps the seed kernels
+(`pdomd_update`, `hinge_grad`) with padding + interpret-mode defaults;
+`ref` holds the pure-jnp oracles every kernel is allclose-tested against.
+
+The kernels are reached through `RunSpec(backend="pallas")` — see
+`repro.api.backends`; on CPU they run with ``interpret=True`` so CI
+validates the real kernel bodies.
+"""
+from repro.kernels.round_fused import (DEFAULT_BLOCK_COLS, LANE,
+                                       MAX_FUSED_NODES, SUBLANE, dual_step,
+                                       round_stats, round_update)
+
+__all__ = ["round_stats", "round_update", "dual_step", "LANE", "SUBLANE",
+           "DEFAULT_BLOCK_COLS", "MAX_FUSED_NODES"]

@@ -29,24 +29,3 @@ def hinge_grad_ref(x, y, w):
     coeff = jnp.where(margin < 1.0, -y, 0.0)
     grad = (coeff[:, None] * x).mean(axis=0)
     return loss, grad, margin
-
-
-def wkv6_ref(r, k, v, w, u, state0):
-    """Oracle for kernels/wkv6.py (RWKV6 recurrence, data-dependent decay).
-
-    Shapes (single head): r,k,w (T, K); v (T, V); u (K,); state0 (K, V).
-    Recurrence (Finch, arXiv:2404.05892):
-        y_t   = r_t^T (state + u ⊙ k_t v_t^T)        -> (V,)
-        state = diag(exp(-exp(w_t))) state + k_t v_t^T
-    """
-    def step(state, inp):
-        r_t, k_t, v_t, w_t = inp
-        kv = k_t[:, None] * v_t[None, :]                    # (K, V)
-        y = ((state + u[:, None] * kv) * r_t[:, None]).sum(0)
-        state = jnp.exp(-jnp.exp(w_t))[:, None] * state + kv
-        return state, y
-
-    state, ys = jax.lax.scan(step, state0.astype(jnp.float32),
-                             (r.astype(jnp.float32), k.astype(jnp.float32),
-                              v.astype(jnp.float32), w.astype(jnp.float32)))
-    return ys, state

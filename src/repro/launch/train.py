@@ -27,6 +27,7 @@ import ast
 import jax
 import jax.numpy as jnp
 
+from repro.api.exec_config import ExecConfig
 from repro.api.runner import run as api_run
 from repro.configs import ARCH_IDS, get_config
 from repro.data.lm import lm_batches
@@ -70,9 +71,10 @@ def train(arch: str | None = None, *, strategy: str = "gossip", nodes: int = 4,
         spec = recipe.to_runspec(nodes).replace(
             dim=dim, horizon=steps, seed=seed,
             stream=stream, stream_options=stream_options or {})
-        result = api_run(spec, engine=engine, log_path=log_path,
-                         checkpoint_every=checkpoint_every,
-                         checkpoint_dir=checkpoint_dir)
+        result = api_run(spec, engine=engine,
+                         exec=ExecConfig(log_path=log_path,
+                                         checkpoint_every=checkpoint_every,
+                                         checkpoint_dir=checkpoint_dir))
         print(f"stream={stream} engine={engine} nodes={nodes} dim={dim} "
               f"rounds={result.rounds}: acc={result.accuracy:.3f} "
               f"regret={float(result.regret[-1]) if result.regret is not None else float('nan'):.1f} "
@@ -126,9 +128,10 @@ def train(arch: str | None = None, *, strategy: str = "gossip", nodes: int = 4,
             yield batch
 
     result = api_run(spec, engine=strategy, step_fn=step_fn, state=state,
-                     batches=batches(), horizon=steps, log_path=log_path,
-                     print_every=10, checkpoint_every=checkpoint_every,
-                     checkpoint_dir=checkpoint_dir)
+                     batches=batches(), horizon=steps,
+                     exec=ExecConfig(log_path=log_path, print_every=10,
+                                     checkpoint_every=checkpoint_every,
+                                     checkpoint_dir=checkpoint_dir))
     return {"history": result.history, "final": result.metrics,
             "state": result.final_state, "result": result}
 

@@ -355,10 +355,9 @@ def _blockwise_attention(q, k, v, window, softcap, q_chunk=Q_CHUNK, k_chunk=K_CH
 # RECOMPUTES score tiles chunk-by-chunk (flash attention backward). Without
 # this, jax.lax.scan's autodiff stacks every (qc, kc) probability tile for
 # the backward — measured at ~45% of the whole train-step HBM traffic on
-# minicpm-2b train_4k (§Perf H3 iter 2). The Pallas kernel
-# (kernels/flash_attention.py) is the TPU fast path for the forward; this
-# pure-JAX twin keeps the same memory behaviour in the lowered HLO and runs
-# everywhere.
+# minicpm-2b train_4k (§Perf H3 iter 2). This pure-JAX formulation keeps
+# the flash memory behaviour in the lowered HLO and runs everywhere; a
+# Pallas forward kernel would be a drop-in TPU fast path on top of it.
 # ---------------------------------------------------------------------------
 
 def _blockwise_fwd_stats(q, k, v, window, softcap, q_chunk, k_chunk):

@@ -201,12 +201,13 @@ def verify_snapshot(spec: RunSpec, engine: str, snapshot: Snapshot, *,
     dense replay or vice versa) differs by float32 reduction order only;
     pass ``atol`` to bound it instead of requiring equal bits.
     """
+    from repro.api.exec_config import ExecConfig
     from repro.api.runner import run
     if snapshot.round == 0:
         return bool(np.all(np.asarray(snapshot.w) == 0.0))
     ref = run(spec, engine=engine, horizon=snapshot.round,
-              chunk_rounds=chunk_rounds, compute_regret=False, warmup=False,
-              node_devices=node_devices)
+              exec=ExecConfig(chunk_rounds=chunk_rounds, compute_regret=False,
+                              warmup=False, node_devices=node_devices))
     ref_snap = snapshot_from_state(spec, engine, ref.final_state,
                                    version=-1, eps_spent=0.0)
     w, ref_w = np.asarray(snapshot.w), np.asarray(ref_snap.w)

@@ -47,6 +47,7 @@ import threading
 from typing import Callable
 
 from repro import obs as obslib
+from repro.api.exec_config import ExecConfig
 from repro.api.runner import RunResult, run
 from repro.api.spec import RunSpec
 from repro.checkpoint import AsyncCheckpointer
@@ -193,11 +194,14 @@ class BackgroundTrainer:
                     # resume= replays from the last trainer checkpoint —
                     # a no-op on the first pass of an empty directory
                     self.result = run(self.spec, engine=self.engine,
-                                      chunk_rounds=self.chunk_rounds,
-                                      compute_regret=False, warmup=self.warmup,
                                       on_chunk=self._on_chunk,
-                                      resume=self._checkpointer is not None,
-                                      checkpoint_dir=self.checkpoint_dir)
+                                      exec=ExecConfig(
+                                          chunk_rounds=self.chunk_rounds,
+                                          compute_regret=False,
+                                          warmup=self.warmup,
+                                          resume=self._checkpointer
+                                          is not None,
+                                          checkpoint_dir=self.checkpoint_dir))
                     return
                 except TrainerCrash:
                     # the injected death: flush pending writes, then restart

@@ -37,6 +37,7 @@ import time
 from typing import Any, Callable
 
 from repro import obs as obslib
+from repro.api.exec_config import ExecConfig
 from repro.api.runner import RunResult, run, run_batch, seed_vectorizable
 from repro.sweep.spec import SweepPoint, SweepSpec
 from repro.sweep.store import (DEFAULT_STORE, SweepStore, aggregate_records,
@@ -129,13 +130,16 @@ def _run_point(point: SweepPoint, spec: SweepSpec, *,
         # one — a seed-dependent stage falls back to sequential runs below
         # whatever spec.devices asks for.
         return run_batch(point.spec, seeds, engine=spec.engine,
-                         chunk_rounds=spec.chunk_rounds,
-                         compute_regret=spec.compute_regret, warmup=warmup,
-                         check_vectorizable=spec.vectorize_seeds is not None,
-                         devices=spec.devices)
+                         exec=ExecConfig(
+                             chunk_rounds=spec.chunk_rounds,
+                             compute_regret=spec.compute_regret, warmup=warmup,
+                             check_vectorizable=spec.vectorize_seeds
+                             is not None,
+                             devices=spec.devices))
     return [run(point.spec.replace(seed=s), engine=spec.engine,
-                chunk_rounds=spec.chunk_rounds,
-                compute_regret=spec.compute_regret, warmup=warmup)
+                exec=ExecConfig(chunk_rounds=spec.chunk_rounds,
+                                compute_regret=spec.compute_regret,
+                                warmup=warmup))
             for s in seeds]
 
 

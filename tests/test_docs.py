@@ -11,7 +11,8 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = ("docs/algorithm.md", "docs/privacy.md", "docs/delayed_gossip.md",
         "docs/streams.md", "docs/sweeps.md", "docs/serving.md",
-        "docs/node_sharding.md", "docs/faults.md", "docs/observability.md")
+        "docs/node_sharding.md", "docs/faults.md", "docs/observability.md",
+        "docs/kernels.md")
 API_MODULES = (
     "repro.api",
     "repro.api.registry",
@@ -23,6 +24,8 @@ API_MODULES = (
     "repro.api.streams",
     "repro.api.runner",
     "repro.api.shard_node",
+    "repro.api.exec_config",
+    "repro.api.backends",
     "repro.sweep",
     "repro.sweep.spec",
     "repro.sweep.store",

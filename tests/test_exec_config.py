@@ -1,0 +1,105 @@
+"""ExecConfig: the consolidated execution-options object + the legacy shim.
+
+run()/run_batch() accept `exec=ExecConfig(...)`; the old loose kwargs keep
+working through a deprecation shim that warns ONCE per process and maps
+them onto the same fields — so results are bit-identical across the two
+spellings, typos fail loudly, and caller-specific fields are rejected by
+the caller that cannot honor them.
+"""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import ExecConfig, RunSpec, run
+from repro.api import exec_config as ec
+from repro.api.runner import run_batch
+
+
+def _spec(**kw):
+    base = dict(nodes=4, dim=16, horizon=6, eps=1.0, alpha0=0.5, lam=0.01,
+                stream="drift", stream_options={"period": 3})
+    base.update(kw)
+    return RunSpec(**base)
+
+
+def test_exec_config_is_frozen_with_replace():
+    cfg = ExecConfig(chunk_rounds=7)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.chunk_rounds = 8
+    assert cfg.replace(warmup=False).warmup is False
+    assert cfg.replace(warmup=False).chunk_rounds == 7
+    assert cfg.chunk_rounds == 7            # original untouched
+
+
+def test_legacy_kwargs_round_trip_bit_identical():
+    """The shim maps loose kwargs onto the same execution — results match
+    the exec= spelling to the bit."""
+    spec = _spec()
+    via_exec = run(spec, exec=ExecConfig(chunk_rounds=3, warmup=False,
+                                         compute_regret=False))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        via_legacy = run(spec, chunk_rounds=3, warmup=False,
+                         compute_regret=False)
+    np.testing.assert_array_equal(via_exec.final_w, via_legacy.final_w)
+    np.testing.assert_array_equal(via_exec.loss, via_legacy.loss)
+
+
+def test_legacy_kwargs_warn_once():
+    ec._warned_legacy = False
+    spec = _spec()
+    with pytest.warns(DeprecationWarning, match="ExecConfig"):
+        run(spec, chunk_rounds=3, warmup=False, compute_regret=False)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run(spec, chunk_rounds=3, warmup=False, compute_regret=False)
+
+
+def test_unknown_kwarg_names_fields():
+    with pytest.raises(TypeError, match="chunk_rounds"):
+        run(_spec(), chunk=3)
+
+
+def test_exec_and_legacy_together_raise():
+    with pytest.raises(TypeError, match="both exec="):
+        run(_spec(), exec=ExecConfig(), chunk_rounds=3)
+
+
+def test_exec_must_be_exec_config():
+    with pytest.raises(TypeError, match="ExecConfig"):
+        run(_spec(), exec={"chunk_rounds": 3})
+
+
+def test_run_rejects_batch_only_fields():
+    with pytest.raises(ValueError, match="run_batch"):
+        run(_spec(), exec=ExecConfig(devices=2, warmup=False))
+
+
+def test_run_batch_rejects_run_only_fields():
+    with pytest.raises(ValueError, match="run\\(\\)"):
+        run_batch(_spec(), [0, 1],
+                  exec=ExecConfig(print_every=5, warmup=False))
+
+
+def test_run_batch_legacy_shim():
+    spec = _spec()
+    via_exec = run_batch(spec, [0, 1],
+                         exec=ExecConfig(chunk_rounds=3, warmup=False,
+                                         compute_regret=False))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        via_legacy = run_batch(spec, [0, 1], chunk_rounds=3, warmup=False,
+                               compute_regret=False)
+    for a, b in zip(via_exec, via_legacy):
+        np.testing.assert_array_equal(a.final_w, b.final_w)
+
+
+def test_defaults_match_old_signature_defaults():
+    cfg = ExecConfig()
+    assert cfg.chunk_rounds == 512
+    assert cfg.compute_regret is True
+    assert cfg.warmup is True
+    assert cfg.resume is False
+    assert cfg.checkpoint_every is None and cfg.checkpoint_dir is None
